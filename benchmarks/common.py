@@ -1,0 +1,66 @@
+"""Shared helpers for the paper-experiment benchmarks.
+
+The paper's full scale (#SE=10000, 3600 timesteps, O(N^2) proximity) is
+sized for a 16-core Xeon; this container is one CPU core, so every
+experiment has a `scale` knob: "quick" (CI-sized, minutes) and "paper"
+(the published parameters). Trends — not absolute seconds — are the
+reproduction target either way; see DESIGN.md §Deviations.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+from repro.core.abm import ABMConfig
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "paper")
+
+
+SCALES = {
+    # n_se, timesteps, area (density kept at the paper's 1e-4 SE/unit^2)
+    "quick": dict(n_se=1000, timesteps=400, area=3162.0),
+    "mid": dict(n_se=3000, timesteps=900, area=5477.0),
+    "paper": dict(n_se=10_000, timesteps=3600, area=10_000.0),
+}
+
+
+def engine_cfg(scale: str, *, n_lp=4, speed=11.0, rng=250.0, pi=0.2,
+               mf=1.2, mt=10, gaia=True, kind=1, timesteps=None):
+    """`speed` is in PAPER units (10000-side torus) and is scaled by
+    side/10000 so the scaled-down world preserves the paper's *relative*
+    dynamics (an SE crosses the world in the same number of timesteps —
+    this is what sets the migration rate). `rng` stays absolute: SE
+    density matches the paper's 1e-4/unit^2, so an absolute range keeps
+    the paper's expected neighbor count (~19.6 at rng=250)."""
+    s = SCALES[scale]
+    f = s["area"] / 10_000.0
+    return EngineConfig(
+        abm=ABMConfig(n_se=s["n_se"], n_lp=n_lp, area=s["area"],
+                      speed=speed * f, interaction_range=rng,
+                      p_interact=pi),
+        heuristic=HeuristicConfig(kind=kind, mf=mf, mt=mt),
+        gaia_on=gaia,
+        timesteps=timesteps or s["timesteps"],
+    )
+
+
+def run_cfg(cfg, seed=0):
+    t0 = time.time()
+    _, series, counters = run(jax.random.key(seed), cfg)
+    counters["wall_s"] = time.time() - t0
+    return counters
+
+
+def write_csv(name: str, header: str, rows):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

@@ -1,0 +1,112 @@
+"""Drive the full dry-run campaign: every (arch x shape x mesh) cell in a
+fresh subprocess (each needs its own 512-device XLA init; a fresh process
+also bounds compiler memory).
+
+Usage: PYTHONPATH=src python benchmarks/dryrun_all.py [--mesh single multi]
+Writes results/dryrun/<arch>_<shape>_<mesh>.json and a campaign log.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", nargs="+", default=["single", "multi"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--only-arch", default="")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--components", action="store_true",
+                    help="run the component roofline pass per cell "
+                         "(writes *_comp.json; §Roofline table input)")
+    args = ap.parse_args()
+
+    cells = []
+    for arch, cfg in ARCHS.items():
+        if args.only_arch and arch != args.only_arch:
+            continue
+        for shape in SHAPES:  # includes inapplicable cells -> recorded skips
+            for mesh in args.mesh:
+                cells.append((arch, shape, mesh))
+
+    logp = os.path.join(ROOT, args.out, "campaign.log")
+    os.makedirs(os.path.dirname(logp), exist_ok=True)
+    done = 0
+    for arch, shape, mesh in cells:
+        suffix = "_comp.json" if args.components else ".json"
+        outf = os.path.join(ROOT, args.out, f"{arch}_{shape}_{mesh}{suffix}")
+        if args.skip_existing and os.path.exists(outf):
+            done += 1
+            continue
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out",
+               os.path.join(ROOT, args.out)]
+        if args.components:
+            cmd.append("--components")
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        try:
+            r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                               timeout=args.timeout)
+            status = "ok" if r.returncode == 0 else "FAIL"
+            tail = (r.stdout + r.stderr).strip().splitlines()[-1:] or [""]
+        except subprocess.TimeoutExpired:
+            status, tail = "TIMEOUT", [""]
+        if status != "ok" and not os.path.exists(outf):
+            with open(outf, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": status.lower(), "detail": tail[0][-2000:]},
+                          f)
+        done += 1
+        msg = (f"[{done}/{len(cells)}] {arch} x {shape} x {mesh}: {status} "
+               f"({time.time()-t0:.0f}s) {tail[0][-200:]}")
+        print(msg, flush=True)
+        with open(logp, "a") as f:
+            f.write(msg + "\n")
+
+        # Memory probe: XLA:CPU emulates bf16 with f32 buffers, inflating
+        # the measured peak. For cells whose raw peak exceeds the 16 GiB
+        # HBM budget, re-lower everything in f32 (no emulation converts,
+        # same shapes): peak_f32 / 2 bounds the true bf16 TPU peak.
+        try:
+            with open(outf) as f:
+                res = json.load(f)
+        except Exception:
+            res = {}
+        if res.get("status") == "ok" and \
+                res.get("peak_bytes_per_dev", 0) > 16 * 2 ** 30:
+            probe = os.path.join(ROOT, args.out,
+                                 f"{arch}_{shape}_{mesh}_f32probe.json")
+            cmd2 = cmd + ["--tag", "f32probe", "--grad-dtype", "f32"]
+            env2 = dict(env, REPRO_FORCE_F32="1")
+            try:
+                subprocess.run(cmd2, env=env2, capture_output=True,
+                               text=True, timeout=args.timeout)
+                with open(probe) as f:
+                    pres = json.load(f)
+                res["peak_bytes_per_dev_f32probe"] = \
+                    pres["peak_bytes_per_dev"]
+                res["peak_bytes_per_dev_bf16_bound"] = \
+                    pres["peak_bytes_per_dev"] / 2
+                with open(outf, "w") as f:
+                    json.dump(res, f, indent=1)
+                pk = pres["peak_bytes_per_dev"] / 2 ** 31
+                print(f"    f32-probe: bf16-true peak <= {pk:.2f} GiB",
+                      flush=True)
+            except Exception as e:  # probe is best-effort
+                print(f"    f32-probe failed: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

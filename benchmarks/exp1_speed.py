@@ -1,0 +1,44 @@
+"""Experiment 1 (paper Fig. 5): LCR and migrations vs. node speed x MF.
+
+Paper claim: at low speed, few migrations push LCR from the static 25%
+(4 LPs) to ~90%; higher speed needs ever more migrations for the same
+clustering level.
+"""
+from __future__ import annotations
+
+from benchmarks.common import engine_cfg, run_cfg, write_csv
+
+
+def main(scale: str = "quick", seeds=(0,)):
+    speeds = [1, 5, 11, 19, 29]
+    mfs = [1.1, 1.5, 3.0, 19.0]
+    rows = []
+    for speed in speeds:
+        for mf in mfs:
+            for seed in seeds:
+                c = run_cfg(engine_cfg(scale, speed=speed, mf=mf), seed)
+                rows.append((speed, mf, seed, round(c["mean_lcr"], 4),
+                             int(c["migrations"]),
+                             round(c["migration_ratio"], 2),
+                             round(c["wall_s"], 1)))
+                print(f"[exp1] speed={speed:<3} MF={mf:<5} seed={seed} "
+                      f"LCR={c['mean_lcr']:.3f} migs={int(c['migrations'])}")
+    path = write_csv("exp1.csv",
+                     "speed,mf,seed,mean_lcr,migrations,mr,wall_s", rows)
+
+    # paper-claim checks (trends)
+    by = {(s, m): r for (s, m, *_), r in zip([(r[0], r[1]) for r in rows],
+                                             rows)}
+    slow_aggr = by[(1, 1.1)]
+    slow_off = by[(1, 19.0)]
+    fast_aggr = by[(29, 1.1)]
+    assert slow_aggr[3] > 0.55, f"low-speed clustering too weak: {slow_aggr}"
+    assert slow_aggr[3] > slow_off[3] + 0.2, "MF sweep has no effect"
+    assert fast_aggr[4] > slow_aggr[4], "fast nodes should need more migs"
+    print(f"[exp1] OK -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "quick")

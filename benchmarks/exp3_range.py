@@ -1,0 +1,40 @@
+"""Experiment 3 (paper Fig. 7): ΔLCR vs. threshold interaction range.
+
+Paper claim: tiny ranges make unstable micro-clusters (many migrations,
+mediocre ΔLCR); mid ranges cluster best; very large ranges overlap
+everyone's neighborhoods and clustering quality degrades again.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SCALES, engine_cfg, run_cfg, write_csv
+
+
+def main(scale: str = "quick", seeds=(0,)):
+    # ranges scale with the area (the paper's 50..1600 on a 10k-side torus)
+    side = SCALES[scale]["area"]
+    fracs = [0.005, 0.01, 0.02, 0.04, 0.08, 0.16]
+    rows = []
+    for frac in fracs:
+        rng = side * frac
+        for seed in seeds:
+            on = run_cfg(engine_cfg(scale, rng=rng, mf=1.2), seed)
+            off = run_cfg(engine_cfg(scale, rng=rng, gaia=False), seed)
+            dlcr = on["mean_lcr"] - off["mean_lcr"]
+            rows.append((round(rng, 1), seed, round(dlcr, 4),
+                         round(on["migration_ratio"], 2)))
+            print(f"[exp3] range={rng:7.1f} seed={seed} dLCR {dlcr:+.3f} "
+                  f"MR {on['migration_ratio']:.1f}")
+    path = write_csv("exp3.csv", "range,seed,dlcr,mr", rows)
+
+    d = {r[0]: r[2] for r in rows}
+    vals = [d[round(side * f, 1)] for f in fracs]
+    mid = max(vals[1:4])
+    assert mid > vals[-1], f"huge ranges should degrade clustering: {vals}"
+    assert mid > 0.15, f"mid-range clustering too weak: {vals}"
+    print(f"[exp3] OK -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "quick")

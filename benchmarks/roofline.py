@@ -1,0 +1,99 @@
+"""Assemble the §Roofline table from the dry-run campaign results.
+
+Reads results/dryrun/*.json (written by benchmarks/dryrun_all.py) and the
+component-pass corrections (launch/costs.py) when available, and prints /
+writes the per-(arch x shape x mesh) roofline terms:
+
+    compute    = HLO_FLOPs / (chips x 197e12)
+    memory     = HLO_bytes / (chips x 819e9)
+    collective = collective_bytes / (chips x 50e9)
+
+plus dominant term, MODEL_FLOPS/HLO_FLOPs and the memory-fit columns.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(ROOT, "results", "dryrun")
+GIB = 2 ** 30
+
+
+def load_cells(pattern="*.json"):
+    """Base cell JSONs, with roofline terms overridden by the component
+    pass (*_comp.json) when present — the component pass corrects XLA's
+    count-while-bodies-once FLOP undercount (DESIGN.md §8)."""
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, pattern))):
+        if p.endswith("_f32probe.json") or p.endswith("_comp.json"):
+            continue
+        # canonical cells only — perf-iteration variants carry a tag
+        # after the mesh segment ({arch}_{shape}_{mesh}_{tag}.json)
+        if os.path.basename(p)[:-len(".json")].rsplit("_", 1)[-1] \
+                not in ("single", "multi"):
+            continue
+        with open(p) as f:
+            d = json.load(f)
+        comp_p = p[:-len(".json")] + "_comp.json"
+        if os.path.exists(comp_p):
+            with open(comp_p) as f:
+                c = json.load(f)
+            if c.get("status") == "ok":
+                for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+                          "dominant", "useful_flop_ratio",
+                          "roofline_fraction", "components"):
+                    if k in c:
+                        d[k] = c[k]
+                d["terms_source"] = "component-pass"
+        cells.append(d)
+    return cells
+
+
+def fmt_row(d):
+    if d["status"] != "ok":
+        return None
+    peak = d.get("peak_bytes_per_dev_bf16_bound",
+                 d.get("peak_bytes_per_dev_tpu_est",
+                       d.get("peak_bytes_per_dev", 0)))
+    fit = "Y" if peak <= 16 * GIB else "OVER"
+    return (d["arch"], d["shape"], d["mesh"],
+            f"{d['t_compute_s']:.3e}", f"{d['t_memory_s']:.3e}",
+            f"{d['t_collective_s']:.3e}", d["dominant"],
+            f"{d.get('useful_flop_ratio', 0):.2f}",
+            f"{d.get('roofline_fraction', 0):.3f}",
+            f"{d.get('peak_bytes_per_dev', 0)/GIB:.2f}",
+            f"{peak/GIB:.2f}", fit)
+
+
+HDR = ("arch", "shape", "mesh", "t_compute", "t_memory", "t_coll",
+       "dominant", "useful", "roofline_frac", "peak_raw_GiB",
+       "peak_est_GiB", "fits16G")
+
+
+def main(out_csv="results/paper/roofline.csv"):
+    cells = load_cells()
+    rows = [r for r in (fmt_row(d) for d in cells) if r]
+    skipped = [(d["arch"], d["shape"], d["mesh"]) for d in cells
+               if d["status"] == "skipped"]
+    bad = [(d["arch"], d["shape"], d["mesh"], d.get("detail", "")[:120])
+           for d in cells if d["status"] not in ("ok", "skipped")]
+    os.makedirs(os.path.dirname(os.path.join(ROOT, out_csv)), exist_ok=True)
+    with open(os.path.join(ROOT, out_csv), "w") as f:
+        f.write(",".join(HDR) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    w = [20, 12, 7, 10, 10, 10, 11, 7, 9, 8, 8, 5]
+    print(" ".join(h.ljust(x) for h, x in zip(HDR, w)))
+    for r in rows:
+        print(" ".join(str(v).ljust(x) for v, x in zip(r, w)))
+    print(f"\nok={len(rows)} skipped={len(skipped)} failed={len(bad)}")
+    for b in bad:
+        print("FAILED:", b)
+    return len(bad) == 0
+
+
+if __name__ == "__main__":
+    sys.exit(0 if main() else 1)

@@ -1,0 +1,63 @@
+"""Benchmark harness entrypoint: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale quick|mid|paper]
+                                            [--only exp1,exp2,...]
+
+Experiments (see DESIGN.md §Per-experiment index):
+    exp1      Fig. 5  — LCR & migrations vs. speed x MF
+    exp2      Fig. 6  — ΔLCR vs. #LPs
+    exp3      Fig. 7  — ΔLCR vs. interaction range
+    tables23  Tables 2-3 + Figs. 8-9 — ΔWCT via the calibrated cost model
+    gaiamoe   beyond-paper: adaptive MoE expert placement traffic
+    roofline  assemble the §Roofline table from results/dryrun
+
+The dry-run campaign itself (benchmarks/dryrun_all.py) is run separately
+(it spawns one 512-device subprocess per cell).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick",
+                    choices=["quick", "mid", "paper"])
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (exp1_speed, exp2_lps, exp3_range, tables23,
+                            gaia_moe_bench, roofline, selftune_bench)
+    benches = {
+        "exp1": lambda: exp1_speed.main(args.scale),
+        "exp2": lambda: exp2_lps.main(args.scale),
+        "exp3": lambda: exp3_range.main(args.scale),
+        "tables23": lambda: tables23.main(args.scale),
+        "gaiamoe": lambda: gaia_moe_bench.main(args.scale),
+        "selftune": lambda: selftune_bench.main(args.scale),
+        "roofline": lambda: roofline.main(),
+    }
+    only = [s for s in args.only.split(",") if s] or list(benches)
+    failures = []
+    for name in only:
+        t0 = time.time()
+        print(f"\n===== {name} ({args.scale}) =====", flush=True)
+        try:
+            benches[name]()
+            print(f"===== {name}: PASS ({time.time()-t0:.0f}s) =====")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"===== {name}: FAIL ({time.time()-t0:.0f}s) =====")
+    if failures:
+        print(f"\nFAILED: {failures}")
+        return 1
+    print("\nAll benchmarks passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

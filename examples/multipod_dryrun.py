@@ -1,0 +1,22 @@
+"""Launcher example: lower + compile one production cell and print its
+roofline terms — the per-cell core of the multi-pod dry-run campaign.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py \
+        [--arch tinyllama-1.1b] [--shape train_4k] [--mesh multi]
+
+NOTE: must be a fresh process (the 512 placeholder devices are pinned at
+first jax init — this is why dryrun.py sets XLA_FLAGS on lines 1-2).
+"""
+import runpy
+import sys
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv += ["--arch", "tinyllama-1.1b"]
+    if not any(a.startswith("--shape") for a in argv):
+        argv += ["--shape", "train_4k"]
+    if not any(a.startswith("--mesh") for a in argv):
+        argv += ["--mesh", "multi"]
+    sys.argv = ["repro.launch.dryrun"] + argv
+    runpy.run_module("repro.launch.dryrun", run_name="__main__")

@@ -1,0 +1,48 @@
+"""Quickstart: adaptive self-clustering on the paper's evaluation model.
+
+Runs the GAIA engine (10k-SE scaled down to 1k for a laptop CPU) with
+the adaptive partitioning OFF and ON, and prints the paper's headline
+numbers: Local Communication Ratio, migrations, and the estimated
+wall-clock gain on the two calibrated testbeds (Eq. 5/6).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.abm import ABMConfig
+from repro.core.costmodel import SETUPS, wct
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+
+def main():
+    abm = ABMConfig(n_se=1000, n_lp=4, area=3162.0, speed=11.0,
+                    interaction_range=250.0, p_interact=0.2)
+    ts = 400
+    print(f"ABM: {abm.n_se} SEs on {abm.n_lp} LPs, RWP speed {abm.speed}, "
+          f"{ts} timesteps")
+
+    results = {}
+    for gaia in (False, True):
+        cfg = EngineConfig(abm=abm, heuristic=HeuristicConfig(mf=1.2, mt=10),
+                           gaia_on=gaia, timesteps=ts)
+        _, _, counters = run(jax.random.key(0), cfg)
+        results[gaia] = counters
+        tag = "GAIA ON " if gaia else "GAIA OFF"
+        print(f"  {tag}: LCR={counters['mean_lcr']:.3f} "
+              f"migrations={int(counters['migrations'])} "
+              f"(MR {counters['migration_ratio']:.1f})")
+
+    print("\nEstimated wall-clock (cost model, interaction 1 KiB, "
+          "SE state 32 B):")
+    for name, params in SETUPS.items():
+        off = wct(results[False], params, abm.n_lp, ts,
+                  interaction_bytes=1024, migration_bytes=32)["TEC"]
+        on = wct(results[True], params, abm.n_lp, ts,
+                 interaction_bytes=1024, migration_bytes=32)["TEC"]
+        print(f"  {name:<12} OFF {off:8.2f}s  ON {on:8.2f}s  "
+              f"gain {100*(off-on)/off:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

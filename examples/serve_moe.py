@@ -1,0 +1,92 @@
+"""Serving driver: batched greedy decoding from a small MoE LM with GAIA
+adaptive expert placement running online.
+
+Each decode step routes tokens to experts; GAIA watches the per-group
+traffic matrix and migrates experts toward the data-parallel groups that
+use them (the paper's self-clustering with SE=expert, LP=EP shard),
+paying MigComm only when the α=ε/ι heuristic clears MF.
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig, ShapeConfig
+from repro.core import gaia_moe as gm
+from repro.launch.steps import build_serve_step
+from repro.models import lm as lm_mod
+from repro.parallel.ctx import make_ctx
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = ArchConfig(name="moe-serve", family="moe", n_layers=4,
+                     d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                     vocab_size=512,
+                     moe=MoEConfig(num_experts=16, top_k=2, d_expert=64,
+                                   capacity_factor=2.0))
+    px = make_ctx(None, q_block=32, kv_block=32)
+    Smax = args.prompt_len + args.gen
+    shape = ShapeConfig("serve", Smax, args.batch, "decode")
+
+    params = lm_mod.init_params(jax.random.key(0), cfg)
+    extras = lm_mod.init_extras(cfg)
+
+    # prefill the prompts
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0, 500)
+    cache, logits = lm_mod.prefill(params, {"tokens": prompts}, cfg, px,
+                                   cache_len=Smax)
+    tokens = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    gaia_cfg = gm.GaiaMoEConfig(num_experts=16, num_groups=4, mf=1.2,
+                                mt=8, window=4, interval=8)
+    gstate = gm.init_state(gaia_cfg)
+
+    decode = jax.jit(build_serve_step(cfg, shape, px).fn)
+
+    n_layers_moe = cfg.n_layers
+    out_tokens = [tokens]
+    migrations = 0
+    t0 = time.time()
+    for step in range(args.gen):
+        pos = jnp.int32(args.prompt_len + step)
+        cache, tokens = decode(params, extras, cache, tokens, pos)
+        out_tokens.append(tokens)
+        # observe routing traffic (toy: synthesize per-group counts from
+        # token ids so the demo is deterministic without layer taps)
+        grp = jnp.arange(args.batch) % gaia_cfg.num_groups
+        hot = tokens % gaia_cfg.num_experts
+        traffic = jnp.zeros((gaia_cfg.num_groups, 16)).at[grp, hot].add(10.0)
+        gstate, n = gm.maybe_update(gaia_cfg, gstate, traffic)
+        if int(n):
+            # physical migration: permute expert weights + routing table
+            perm, order = gm.placement_permutation(gstate["placement"], 16)
+            idx = jnp.tile(gm.migration_index(
+                jnp.arange(16, dtype=jnp.int32), order), (n_layers_moe, 1))
+            for kname in ("w_gate", "w_up", "w_down"):
+                params["layers"]["moe"][kname] = gm.apply_migration_stacked(
+                    params["layers"]["moe"][kname], idx)
+            extras = dict(extras, placement=jnp.tile(perm[None],
+                                                     (n_layers_moe, 1)))
+            migrations += int(n)
+            print(f"  step {step:3d}: migrated {int(n)} experts "
+                  f"(MigComm {gm.migration_bytes(int(n), cfg.d_model, 64)/1e6:.2f} MB)")
+    dt = time.time() - t0
+    gen = jnp.stack(out_tokens, axis=1)
+    print(f"generated {args.batch}x{args.gen} tokens in {dt:.1f}s "
+          f"({args.batch*args.gen/dt:.0f} tok/s), "
+          f"{migrations} expert migrations")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end training driver: a small LM on the synthetic Markov task,
+through the full production stack — data pipeline, jitted train step,
+AdamW+schedule, atomic/async checkpoints, watchdog, crash-safe resume.
+
+    PYTHONPATH=src python examples/train_lm.py               # ~12M params
+    PYTHONPATH=src python examples/train_lm.py --full        # ~100M params
+    PYTHONPATH=src python examples/train_lm.py --resume      # restart demo
+
+Cross-entropy on the order-2 Markov stream falls from ~ln(V) toward the
+task's conditional entropy within a few hundred steps.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import DataConfig
+from repro.launch.steps import build_train_step
+from repro.models import lm as lm_mod
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.parallel.ctx import make_ctx
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def small_cfg(full: bool) -> ArchConfig:
+    if full:  # ~100M params
+        return ArchConfig(name="lm-100m", family="dense", n_layers=10,
+                          d_model=640, n_heads=10, n_kv_heads=5,
+                          d_ff=2560, vocab_size=2048)
+    # vocab sized so the order-2 Markov task is learnable within a few
+    # hundred steps (contexts ~ V^2 must be << tokens seen)
+    return ArchConfig(name="lm-11m", family="dense", n_layers=6,
+                      d_model=256, n_heads=8, n_kv_heads=4,
+                      d_ff=1024, vocab_size=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="inject a crash after N steps (restart demo)")
+    args = ap.parse_args()
+
+    cfg = small_cfg(args.full)
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    px = make_ctx(None, q_block=64, kv_block=64)
+    n_params = sum(x.size for x in jax.tree.leaves(
+        jax.eval_shape(lambda k: lm_mod.init_params(k, cfg),
+                       jax.random.key(0))))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch {args.batch}x{args.seq}")
+
+    # early grad norms on a fresh LM are ~50-100: a clip of 1.0 would
+    # crush the effective lr, so clip loosely and decay lightly
+    bundle = build_train_step(cfg, shape, px,
+                              opt=AdamWConfig(lr=3e-3, warmup_steps=20,
+                                              total_steps=args.steps,
+                                              clip_norm=10.0,
+                                              weight_decay=0.01))
+
+    def init_state():
+        params = lm_mod.init_params(jax.random.key(0), cfg)
+        return params, adamw_init(params), lm_mod.init_extras(cfg)
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=0)
+    tr_cfg = TrainerConfig(total_steps=args.steps, checkpoint_every=100,
+                           checkpoint_dir=args.ckpt, log_every=20)
+    trainer = Trainer(tr_cfg, jax.jit(bundle.fn, donate_argnums=(0, 1)),
+                      init_state, data_cfg)
+    t0 = time.time()
+    out = trainer.run(fail_at=args.fail_at or None)
+    dt = time.time() - t0
+    loss = float(out["metrics"]["loss"])
+    toks = args.steps * args.batch * args.seq
+    print(f"done: final loss {loss:.3f} (uniform {float(jnp.log(cfg.vocab_size)):.3f}) "
+          f"in {dt:.0f}s ({toks/dt:.0f} tok/s, "
+          f"{6*n_params*toks/dt/1e9:.1f} GFLOP/s)")
+    assert loss < 0.8 * jnp.log(cfg.vocab_size), "no learning happened?"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Config registry: ``get_arch(name)`` / ``ARCHS`` / ``SHAPES``.
+
+Each assigned architecture lives in its own module with a full-scale
+``CONFIG`` and a reduced ``smoke_config()``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES  # noqa: F401
+
+_ARCH_MODULES = (
+    "yi_9b",
+    "tinyllama_1_1b",
+    "yi_6b",
+    "qwen2_7b",
+    "qwen3_moe_30b_a3b",
+    "deepseek_v3_671b",
+    "rwkv6_1_6b",
+    "internvl2_2b",
+    "seamless_m4t_medium",
+    "zamba2_1_2b",
+)
+
+ARCHS: Dict[str, ArchConfig] = {}
+_SMOKES = {}
+
+for _m in _ARCH_MODULES:
+    mod = importlib.import_module(f"repro.configs.{_m}")
+    ARCHS[mod.CONFIG.name] = mod.CONFIG
+    _SMOKES[mod.CONFIG.name] = mod.smoke_config
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _SMOKES[name]()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPES)}")
+    return SHAPES[name]

@@ -1,0 +1,14 @@
+"""GAIA self-clustering core — the paper's contribution.
+
+- abm: the evaluation model (RWP mobility + proximity interactions)
+- heuristics: self-clustering heuristics #1/#2/#3
+- balance: symmetric/asymmetric load balancing
+- engine: the timestepped adaptive-partitioning engine
+- costmodel: the paper's TEC/MigC cost analysis (Eqs. 1-6)
+- gaia_moe: the technique adapted to MoE expert placement (beyond-paper)
+"""
+from repro.core.abm import ABMConfig  # noqa: F401
+from repro.core.costmodel import (DISTRIBUTED, PARALLEL, SETUPS,  # noqa: F401
+                                  CostParams, wct)
+from repro.core.engine import EngineConfig, run  # noqa: F401
+from repro.core.heuristics import HeuristicConfig  # noqa: F401

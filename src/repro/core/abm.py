@@ -1,0 +1,86 @@
+"""The paper's evaluation model (§5.1): an agent-based model on a toroidal
+2-D space. Agents move by Random Waypoint (min speed = max speed, sleep 0,
+as in Experiment 1) and interact by proximity: each sender's interaction
+reaches every agent within the threshold range.
+
+Vectorized over all SEs; the pairwise proximity/LP-histogram hot spot has
+a Pallas kernel (repro/kernels/proximity) — the jnp path here is its
+oracle and the CPU default.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ABMConfig:
+    n_se: int = 10_000
+    n_lp: int = 4
+    area: float = 10_000.0  # toroidal square side (spaceunits)
+    speed: float = 11.0  # spaceunits/timestep (min = max, Exp. 1)
+    interaction_range: float = 250.0
+    p_interact: float = 0.2  # pi: P(SE sends an interaction this timestep)
+    use_pallas: bool = False
+
+
+def init_abm(key, cfg: ABMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    pos = jax.random.uniform(k1, (cfg.n_se, 2), maxval=cfg.area)
+    wp = jax.random.uniform(k2, (cfg.n_se, 2), maxval=cfg.area)
+    # round-robin random assignment: equal SEs per LP (paper: random but
+    # equal-sized)
+    lp = jax.random.permutation(k3, jnp.arange(cfg.n_se) % cfg.n_lp)
+    return {"pos": pos, "waypoint": wp, "lp": lp.astype(jnp.int32)}
+
+
+def toroidal_delta(a, b, area):
+    """Shortest per-axis displacement on the torus."""
+    d = jnp.abs(a - b)
+    return jnp.minimum(d, area - d)
+
+
+def rwp_step(key, pos, waypoint, cfg: ABMConfig):
+    """One Random-Waypoint move: advance `speed` toward the waypoint
+    (torus-aware); on arrival draw a new waypoint (sleep time 0)."""
+    delta = waypoint - pos
+    # shortest direction on the torus
+    delta = jnp.where(delta > cfg.area / 2, delta - cfg.area, delta)
+    delta = jnp.where(delta < -cfg.area / 2, delta + cfg.area, delta)
+    dist = jnp.linalg.norm(delta, axis=-1, keepdims=True)
+    arrived = dist[:, 0] <= cfg.speed
+    step = jnp.where(dist > 0, delta / jnp.maximum(dist, 1e-9), 0.0)
+    new_pos = jnp.where(arrived[:, None], waypoint,
+                        (pos + step * cfg.speed) % cfg.area)
+    new_wp = jnp.where(arrived[:, None],
+                       jax.random.uniform(key, waypoint.shape,
+                                          maxval=cfg.area),
+                       waypoint)
+    return new_pos % cfg.area, new_wp
+
+
+def interaction_counts(pos, lp, sender_mask, cfg: ABMConfig):
+    """Per-sender histogram of recipient LPs.
+
+    Returns counts (N, n_lp) int32: counts[i, l] = number of SEs within
+    `interaction_range` of sender i currently allocated on LP l (self
+    excluded). Rows of non-senders are zero.
+
+    O(N^2) pairwise — the paper's hot spot; see kernels/proximity for the
+    TPU tiling.
+    """
+    if cfg.use_pallas:
+        from repro.kernels.proximity.ops import proximity_lp_counts
+        return proximity_lp_counts(pos, lp, sender_mask, cfg.n_lp,
+                                   cfg.area, cfg.interaction_range)
+    n = pos.shape[0]
+    dx = toroidal_delta(pos[:, None, 0], pos[None, :, 0], cfg.area)
+    dy = toroidal_delta(pos[:, None, 1], pos[None, :, 1], cfg.area)
+    in_range = (dx * dx + dy * dy) <= cfg.interaction_range ** 2
+    in_range = in_range & ~jnp.eye(n, dtype=bool)
+    in_range = in_range & sender_mask[:, None]
+    onehot = jax.nn.one_hot(lp, cfg.n_lp, dtype=jnp.float32)
+    counts = in_range.astype(jnp.float32) @ onehot
+    return counts.astype(jnp.int32)

@@ -1,0 +1,97 @@
+"""Load-balancing constraints on the self-clustering outcome (paper §4.4).
+
+Symmetric: per-LP inbound migrations must equal outbound (the paper's
+"forbid migrations that would cause imbalances" — totals per LP, not per
+pair). Implemented as flow decomposition on the candidate matrix:
+pairwise swaps g[s,d] = min(cand[s,d], cand[d,s]) first, then ring
+rotations at every shift (handles cyclic wish patterns a pairwise-only
+matcher deadlocks on), then a final swap pass on the residual. Every
+granted unit is part of a swap or a rotation, so each LP's SE count is
+exactly invariant.
+
+Asymmetric: each LP has a capacity share (relative PEU speed, possibly
+measured at runtime); grants additionally drain over-target LPs toward
+under-target ones, so the allocation drifts to the capacity profile.
+
+Candidate selection within a granted (s,d) quota takes the highest-alpha
+SEs first.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def candidate_matrix(candidate, lp, dest, n_lp: int):
+    """cand[s, d] = number of SEs on LP s wanting to migrate to LP d."""
+    pair = lp * n_lp + dest
+    flat = jnp.where(candidate, pair, n_lp * n_lp)
+    counts = jnp.bincount(flat, length=n_lp * n_lp + 1)[:-1]
+    return counts.reshape(n_lp, n_lp)
+
+
+def _swap_pass(cand):
+    g = jnp.minimum(cand, cand.T)
+    return g * (1 - jnp.eye(g.shape[0], dtype=g.dtype))
+
+
+def symmetric_grants(cand):
+    """Count-preserving grants <= cand: swaps + full-ring rotations.
+
+    Each unit of grant lies on a 2-cycle or an L-cycle, so per-LP
+    in == out holds exactly (tested property)."""
+    L = cand.shape[0]
+    cand = cand * (1 - jnp.eye(L, dtype=cand.dtype))
+    g = _swap_pass(cand)
+    resid = cand - g
+    rows = jnp.arange(L)
+    for k in range(1, L):  # ring s -> (s+k) % L, flow = min edge
+        idx = (rows + k) % L
+        f = resid[rows, idx].min()
+        g = g.at[rows, idx].add(f)
+        resid = resid.at[rows, idx].add(-f)
+    extra = _swap_pass(resid)
+    return g + extra
+
+
+def asymmetric_grants(cand, current, capacity):
+    """Symmetric core + extra one-way grants draining toward the target
+    allocation n_se * capacity (capacity sums to 1)."""
+    g = symmetric_grants(cand)
+    n_lp = cand.shape[0]
+    total = current.sum()
+    target = jnp.round(capacity * total).astype(jnp.int32)
+    surplus = jnp.maximum(current - target, 0)
+    deficit = jnp.maximum(target - current, 0)
+    room = jnp.maximum(cand - g, 0)  # remaining unidirectional wishes
+    # proportional fill of each destination's deficit from willing sources
+    colsum = jnp.maximum(room.sum(axis=0), 1)
+    extra = jnp.floor(room * jnp.minimum(deficit, colsum)[None, :]
+                      / colsum[None, :]).astype(cand.dtype)
+    # a source may not give away more than its surplus
+    rowsum = jnp.maximum(extra.sum(axis=1), 1)
+    scale = jnp.minimum(surplus, rowsum) / rowsum
+    extra = jnp.floor(extra * scale[:, None]).astype(cand.dtype)
+    return g + extra * (1 - jnp.eye(n_lp, dtype=cand.dtype))
+
+
+def select_migrations(candidate, lp, dest, alpha, grants, n_lp: int):
+    """Admit the top-alpha candidates within each (src,dst) grant quota.
+
+    Returns a boolean (N,) mask of admitted migrations."""
+    n = candidate.shape[0]
+    pair = (lp * n_lp + dest).astype(jnp.int32)
+    pair = jnp.where(candidate, pair, n_lp * n_lp)
+    # rank candidates within their pair by descending alpha
+    a = jnp.clip(alpha, 0.0, 1e6)
+    order = jnp.argsort(pair.astype(jnp.float32) * 2e6 - a, stable=True)
+    sp = pair[order]
+    counts = jnp.bincount(pair, length=n_lp * n_lp + 1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[sp].astype(jnp.int32)
+    quota = grants.reshape(-1)
+    admit_sorted = (sp < n_lp * n_lp) & (rank < quota[jnp.minimum(sp, n_lp * n_lp - 1)])
+    admit = jnp.zeros((n,), bool).at[order].set(admit_sorted)
+    return admit & candidate

@@ -1,0 +1,171 @@
+"""GAIA self-clustering adapted to MoE expert placement (beyond-paper).
+
+Mapping from the paper's objects to the training framework:
+
+  SE       -> expert                (the migratable unit)
+  LP       -> EP shard              (expert-parallel rank, model axis)
+  message  -> routed token          (dispatch all-to-all traffic)
+  MigComm  -> expert weight move    (3 * d * d_expert bytes, bf16)
+
+The same heuristic-#1 core applies: for each expert, compare the token
+traffic arriving from its own shard's token groups (iota — these tokens
+need no all-to-all hop) against the max traffic from any other group
+(epsilon). When alpha = eps/iota > MF (and MT steps since the expert
+last moved), the expert is a migration candidate toward the hottest
+group; a symmetric load balancer (pairwise swaps, same code path as the
+paper's §4.4) keeps every shard serving exactly E/G experts.
+
+The placement is applied as a permutation in the router (models/moe.py),
+so migrating expert e is one weight gather along the expert axis —
+cost-accounted via MigC exactly as in Eq. 6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import balance as bal
+
+
+@dataclasses.dataclass(frozen=True)
+class GaiaMoEConfig:
+    num_experts: int = 64
+    num_groups: int = 8  # EP shards
+    mf: float = 1.2
+    mt: int = 200  # steps between migrations of one expert
+    window: int = 8  # EMA-ish window of traffic snapshots
+    interval: int = 100  # evaluate placement every `interval` steps
+
+
+def init_state(cfg: GaiaMoEConfig):
+    E, G = cfg.num_experts, cfg.num_groups
+    assert E % G == 0, (E, G)
+    return {
+        "placement": jnp.arange(E, dtype=jnp.int32) % G,  # expert -> shard
+        "traffic": jnp.zeros((cfg.window, G, E), jnp.float32),
+        "ptr": jnp.int32(0),
+        "last_mig": jnp.full((E,), -10**6, jnp.int32),
+        "step": jnp.int32(0),
+    }
+
+
+def observe(cfg: GaiaMoEConfig, state, group_expert_counts):
+    """Push a (G, E) token-traffic snapshot (from moe_fwd metrics)."""
+    tr = state["traffic"].at[state["ptr"] % cfg.window].set(
+        group_expert_counts.astype(jnp.float32))
+    return dict(state, traffic=tr, ptr=state["ptr"] + 1,
+                step=state["step"] + 1)
+
+
+def a2a_bytes(placement, group_expert_counts, token_bytes: int):
+    """All-to-all payload: tokens whose source group != expert's shard."""
+    G, E = group_expert_counts.shape
+    on_shard = placement[None, :] == jnp.arange(G)[:, None]  # (G, E)
+    remote = jnp.where(on_shard, 0.0,
+                       group_expert_counts.astype(jnp.float32)).sum()
+    return remote * token_bytes
+
+
+def evaluate(cfg: GaiaMoEConfig, state) -> Tuple[dict, jax.Array]:
+    """Heuristic #1 + symmetric balancing over experts.
+
+    Returns (new_state, n_migrations). Keeps E/G experts per shard by
+    pairwise swap grants (bal.symmetric_grants)."""
+    E, G = cfg.num_experts, cfg.num_groups
+    window = state["traffic"].sum(axis=0)  # (G, E)
+    placement = state["placement"]
+    t = state["step"]
+
+    local = jnp.take_along_axis(window.T, placement[:, None], 1)[:, 0]
+    ext = window.T.at[jnp.arange(E), placement].set(0.0)  # (E, G)
+    eps = ext.max(axis=-1)
+    dest = ext.argmax(axis=-1).astype(jnp.int32)
+    alpha = eps / jnp.maximum(local, 1.0)
+    eligible = (t - state["last_mig"]) >= cfg.mt
+    cand = eligible & (alpha > cfg.mf) & (eps > 0)
+
+    cmat = bal.candidate_matrix(cand, placement, dest, G)
+    grants = bal.symmetric_grants(cmat)
+    admit = bal.select_migrations(cand, placement, dest, alpha, grants, G)
+    new_placement = jnp.where(admit, dest, placement)
+    state = dict(state,
+                 placement=new_placement,
+                 last_mig=jnp.where(admit, t, state["last_mig"]))
+    return state, admit.sum()
+
+
+def placement_permutation(placement_shard, num_experts: int):
+    """Convert an expert->shard map into the expert->segment permutation
+    the MoE layer consumes (models/moe.py). Segments are shard-major, so
+    with E/G experts per shard (enforced by the symmetric balancer) the
+    segment's owner on the model axis == the expert's assigned shard.
+
+    Returns (perm (E,), inv (E,)): perm[e] = segment of expert e;
+    inv[s] = expert served by segment s."""
+    order = jnp.argsort(placement_shard, stable=True)  # segment -> expert
+    perm = jnp.zeros((num_experts,), jnp.int32).at[order].set(
+        jnp.arange(num_experts, dtype=jnp.int32))
+    return perm, order.astype(jnp.int32)
+
+
+def migration_bytes(n_migrations, d_model: int, d_expert: int,
+                    bytes_per_param: int = 2):
+    """MigComm for expert moves (3 SwiGLU matrices per expert)."""
+    return n_migrations * 3 * d_model * d_expert * bytes_per_param
+
+
+# ---------------------------------------------------------------------------
+# Physical migration (the paper's serialized SE-state transfer, Eq. 6)
+# ---------------------------------------------------------------------------
+#
+# Expert weights are STORED in segment order (models/moe.py): segment s of
+# the (sharded) expert axis holds the weights of the expert currently
+# placed there. A placement change therefore physically permutes rows of
+# every expert-axis leaf (weights + optimizer state) ONCE — the cross-
+# shard rows of that permutation are MigComm. The per-step graph never
+# gathers weights.
+
+
+def migration_index(perm_old, order_new):
+    """Row index for the segment-ordered store after a placement change.
+
+    perm_old[e] = old segment of expert e; order_new[s] = expert that the
+    new placement puts on segment s. stored_new[s] = stored_old[idx[s]].
+    """
+    return perm_old[order_new]
+
+
+def apply_migration(expert_leaf, idx, expert_axis: int = 0):
+    """Permute the expert axis of one leaf: out[s] = leaf[idx[s]]."""
+    return jnp.take(expert_leaf, idx, axis=expert_axis)
+
+
+def apply_migration_stacked(stacked_leaf, idx_per_layer):
+    """(L, E, ...) leaf with per-layer (L, E) indices."""
+    return jax.vmap(lambda w, i: jnp.take(w, i, axis=0))(
+        stacked_leaf, idx_per_layer)
+
+
+def count_moves(idx_per_layer):
+    """Number of experts that physically changed segment."""
+    E = idx_per_layer.shape[-1]
+    return (idx_per_layer != jnp.arange(E)[None, :]).sum()
+
+
+def maybe_update(cfg: GaiaMoEConfig, state, group_expert_counts):
+    """Per-step driver: observe traffic; every `interval` steps evaluate.
+
+    jit-friendly (lax.cond on the interval)."""
+    state = observe(cfg, state, group_expert_counts)
+
+    def do(s):
+        s2, n = evaluate(cfg, s)
+        return s2, n
+
+    def skip(s):
+        return s, jnp.int32(0)
+
+    return jax.lax.cond(state["step"] % cfg.interval == 0, do, skip, state)

@@ -1,0 +1,92 @@
+"""Self-clustering heuristics #1/#2/#3 (paper §4.3).
+
+All three share the same core (paper §4.3.4): per SE, compare the
+external-interaction count toward the most-contacted remote LP (epsilon)
+against the internal count (iota); migrate when alpha = eps/iota > MF and
+at least MT timesteps passed since the SE's last migration. They differ
+only in the accounting window:
+
+  #1 sliding window over the last kappa *timesteps*
+  #2 sliding window over the last omega *sending events*
+  #3 = #2, but evaluated only after zeta interactions since last eval
+
+Evaluation uses only LP-local data (each LP sees its own SEs' outgoing
+counts) — vectorized here over all SEs at once, which is equivalent
+because rows never mix across LPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HeuristicConfig:
+    kind: int = 1  # 1 | 2 | 3
+    mf: float = 1.2  # Migration Factor (alpha threshold)
+    mt: int = 10  # Migration Threshold (timesteps between migrations)
+    kappa: int = 10  # #1: window length in timesteps
+    omega: int = 8  # #2/#3: window length in sending events
+    zeta: int = 16  # #3: interactions between evaluations
+
+
+def init_state(cfg: HeuristicConfig, n_se: int, n_lp: int):
+    w = cfg.kappa if cfg.kind == 1 else cfg.omega
+    return {
+        "ring": jnp.zeros((w, n_se, n_lp), jnp.int32),
+        "ptr": jnp.zeros((n_se,), jnp.int32),  # #2/#3 event write pointer
+        "since_eval": jnp.zeros((n_se,), jnp.int32),  # #3 counter
+        "last_mig": jnp.full((n_se,), -10**6, jnp.int32),
+    }
+
+
+def update_window(cfg: HeuristicConfig, state, counts, sender_mask, t):
+    """Push this timestep's per-SE destination histogram into the window."""
+    ring = state["ring"]
+    if cfg.kind == 1:
+        # timestep window: every SE's slot advances each step
+        ring = ring.at[t % cfg.kappa].set(
+            jnp.where(sender_mask[:, None], counts, 0))
+        return dict(state, ring=ring)
+    # event window: only senders advance their own pointer
+    n = counts.shape[0]
+    idx = jnp.arange(n)
+    ptr = state["ptr"]
+    cur = ring[ptr, idx]  # (N, L)
+    new = jnp.where(sender_mask[:, None], counts, cur)
+    ring = ring.at[ptr, idx].set(new)
+    ptr = jnp.where(sender_mask, (ptr + 1) % cfg.omega, ptr)
+    since = state["since_eval"] + jnp.where(sender_mask,
+                                            counts.sum(-1), 0)
+    return dict(state, ring=ring, ptr=ptr, since_eval=since)
+
+
+def evaluate(cfg: HeuristicConfig, state, lp, t) -> Tuple[jax.Array,
+                                                          jax.Array,
+                                                          jax.Array,
+                                                          dict]:
+    """Returns (candidate (N,), dest_lp (N,), alpha (N,), new_state).
+
+    Also counts heuristic evaluations (the Heu term of Eq. 6)."""
+    n, L = state["ring"].shape[1:]
+    window = state["ring"].sum(axis=0)  # (N, L)
+    local = jnp.take_along_axis(window, lp[:, None], axis=1)[:, 0]
+    ext = window.at[jnp.arange(n), lp].set(0)
+    eps = ext.max(axis=-1)
+    dest = ext.argmax(axis=-1).astype(jnp.int32)
+    alpha = eps.astype(jnp.float32) / jnp.maximum(local, 1).astype(jnp.float32)
+
+    eligible = (t - state["last_mig"]) >= cfg.mt
+    if cfg.kind == 3:
+        do_eval = state["since_eval"] >= cfg.zeta
+        n_evals = do_eval.sum()
+        state = dict(state, since_eval=jnp.where(do_eval, 0,
+                                                 state["since_eval"]))
+    else:
+        do_eval = jnp.ones((n,), bool)
+        n_evals = jnp.int32(n)
+    candidate = do_eval & eligible & (alpha > cfg.mf) & (eps > 0)
+    return candidate, dest, alpha, dict(state), n_evals

@@ -1,0 +1,122 @@
+"""Self-tuning adaptive partitioning (paper §5.5).
+
+The paper leaves MF tuning to an offline sweep and sketches two
+mechanisms: "inter-run" (exploit the stability across independent
+replicas — pick MF from previous runs) and "intra-run" (observe the
+simulator for a time interval, tune, repeat). Both are implemented here
+on top of the cost model, exploiting exactly the property the paper
+calls out: the gain-vs-MF curve is monotone up to a tipping point
+(Figs. 8–9), so 1-D hill descent converges.
+
+Intra-run: the run is split into windows of `window` timesteps; after
+each window the controller prices the window with Eq. 5/6 (per-timestep
+TEC) and hill-climbs MF multiplicatively — if the last move made the
+window more expensive, reverse direction and halve the step. MF changes
+re-parameterize the heuristic between windows only (within a window the
+jitted scan is fixed), which is how a real LP would deploy it: the
+controller runs at the LP level on local counters, no centralization.
+
+Inter-run: golden-section-style bracketing on full-run TEC across
+replicas (different seeds), reusing the monotone-then-worse structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.core.costmodel import CostParams, SETUPS, wct
+from repro.core.engine import EngineConfig, init_engine, run, run_window
+from repro.core.heuristics import HeuristicConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SelfTuneConfig:
+    window: int = 100  # timesteps per observation interval
+    mf0: float = 4.0  # initial Migration Factor
+    step0: float = 0.5  # initial multiplicative step (mf *= 1 +/- step)
+    min_mf: float = 1.05
+    max_mf: float = 19.0
+    setup: str = "distributed"  # cost-model pricing of a window
+    interaction_bytes: int = 1024
+    migration_bytes: int = 32
+
+
+def _price(counters, p: CostParams, n_lp: int, n_steps: int,
+           tc: SelfTuneConfig) -> float:
+    return wct(counters, p, n_lp, n_steps,
+               interaction_bytes=tc.interaction_bytes,
+               migration_bytes=tc.migration_bytes)["TEC"]
+
+
+def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
+                   total_steps: Optional[int] = None):
+    """Run `cfg` with MF hill-descended every `window` steps.
+
+    Returns (final_state, history) where history rows are
+    (window_index, mf, window_lcr, window_tec_per_step)."""
+    total = total_steps or cfg.timesteps
+    params = SETUPS[tc.setup]
+    n_lp = cfg.abm.n_lp
+    state = init_engine(key, cfg)
+    mf = tc.mf0
+    step = tc.step0
+    direction = -1.0  # start by migrating more aggressively
+    prev: Optional[float] = None
+    history: List[Tuple[int, float, float, float]] = []
+
+    n_windows = total // tc.window
+    for w in range(n_windows):
+        cfg_w = dataclasses.replace(
+            cfg, heuristic=dataclasses.replace(cfg.heuristic, mf=mf))
+        state, counters = run_window(state, cfg_w, tc.window)
+        tec = _price(counters, params, n_lp, tc.window, tc) / tc.window
+        history.append((w, mf, counters["mean_lcr"], tec))
+        if prev is not None and tec > prev * 1.001:
+            direction = -direction  # worse: back off
+            step = max(step * 0.5, 0.02)
+        prev = tec
+        mf = float(min(max(mf * (1.0 + direction * step), tc.min_mf),
+                       tc.max_mf))
+    return state, history
+
+
+def inter_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
+                   n_probes: int = 6):
+    """Pick MF from full independent replicas (paper: use the multiple
+    runs you must do anyway for confidence intervals).
+
+    Golden-section-style bracket on [min_mf, max_mf] in log space; each
+    probe is one full run priced by the cost model. Returns
+    (best_mf, [(mf, tec), ...])."""
+    import math
+    params = SETUPS[tc.setup]
+    n_lp = cfg.abm.n_lp
+    lo, hi = math.log(tc.min_mf), math.log(tc.max_mf)
+    gr = (math.sqrt(5) - 1) / 2
+    trials = []
+
+    def probe(log_mf, i):
+        mf = math.exp(log_mf)
+        cfg_p = dataclasses.replace(
+            cfg, heuristic=dataclasses.replace(cfg.heuristic, mf=mf))
+        _, _, counters = run(jax.random.fold_in(key, i), cfg_p)
+        tec = _price(counters, params, n_lp, cfg.timesteps, tc)
+        trials.append((mf, tec))
+        return tec
+
+    a, b = lo, hi
+    c, d = b - gr * (b - a), a + gr * (b - a)
+    fc, fd = probe(c, 0), probe(d, 1)
+    for i in range(2, n_probes):
+        if fc < fd:
+            b, d, fd = d, c, fc
+            c = b - gr * (b - a)
+            fc = probe(c, i)
+        else:
+            a, c, fc = c, d, fd
+            d = a + gr * (b - a)
+            fd = probe(d, i)
+    best = min(trials, key=lambda t: t[1])
+    return best[0], trials

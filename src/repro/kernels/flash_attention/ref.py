@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the flash-attention kernel (exact softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q,k,v: (BH, S, D) (heads pre-flattened, KV pre-expanded)."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.flash_decode.flash_decode import flash_decode  # noqa: F401
+from repro.kernels.flash_decode.ref import decode_ref  # noqa: F401

@@ -1,0 +1,20 @@
+"""Oracle for the GQA flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q, k_cache, v_cache, pos):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); attend to positions <= pos."""
+    B, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    k = jnp.repeat(k_cache.transpose(0, 2, 1, 3), G, axis=1)  # (B,H,S,D)
+    v = jnp.repeat(v_cache.transpose(0, 2, 1, 3), G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    s = jnp.where(jnp.arange(S)[None, None, :] <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,17 @@
+"""Oracle for the fused MoE gate (softmax + top-k + histogram)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gate_ref(logits, k: int, bias=None, norm_topk: bool = True):
+    """logits: (T, E) f32. Returns (top_p (T,k), top_e (T,k), counts (E,))."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    sel = probs if bias is None else probs + bias[None, :]
+    _, top_e = jax.lax.top_k(sel, k)
+    top_p = jnp.take_along_axis(probs, top_e, axis=-1)
+    if norm_topk:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    counts = jnp.bincount(top_e.reshape(-1), length=logits.shape[-1])
+    return top_p, top_e.astype(jnp.int32), counts.astype(jnp.int32)

@@ -1,0 +1,3 @@
+"""jit'd public wrapper for the proximity kernel."""
+from repro.kernels.proximity.proximity import proximity_lp_counts  # noqa: F401
+from repro.kernels.proximity.ref import proximity_lp_counts_ref  # noqa: F401

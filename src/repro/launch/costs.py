@@ -1,0 +1,366 @@
+"""Roofline component costing (phase 2 of the dry-run).
+
+XLA's HLO cost analysis counts a while-loop body ONCE, so the aggregate
+flops of a scan-over-layers train step undercount by ~L x M. This pass
+decomposes the step into its loop bodies, lowers each ONE body with the
+production shardings and all inner scans unrolled (px.scan_unroll), and
+recomposes:
+
+  train:   L x M x grad(block)  +  M x grad(embed+head+loss)  +  1 x opt
+  prefill: L x fwd(block)       +  1 x head
+  decode:  L x decode(block)    +  1 x (embed+head)
+
+Each component is a real SPMD lowering on the production mesh, so its
+per-device flops/bytes AND its collectives (parsed from the partitioned
+HLO) are exact; the multipliers are the known trip counts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import blocks as blocks_mod
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as r6
+from repro.models.layers import COMPUTE_DT, chunked_xent, lm_head_fwd, \
+    rmsnorm, softmax_xent
+from repro.optim.adafactor import (adafactor_apply, adafactor_init,
+                                   adafactor_lean_apply, adafactor_lean_init)
+from repro.optim.adamw import AdamWConfig, adamw_apply, adamw_init
+from repro.parallel import sharding as shard_mod
+from repro.parallel.ctx import ParallelCtx
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _lower_component(fn, args_sds, args_specs, px, parse_collectives):
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(px.mesh, s) if isinstance(s, P) else s,
+        args_specs, is_leaf=lambda x: isinstance(x, P) or x is None)
+    jitted = jax.jit(fn, in_shardings=shardings)
+    compiled = jitted.lower(*args_sds).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll, _ = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(sum(coll.values())),
+    }
+
+
+def _layer_subtree(p_sds, key):
+    """Strip the leading stack dim from params[key]."""
+    return jax.tree.map(lambda s: SDS(s.shape[1:], s.dtype), p_sds[key])
+
+
+def component_plan(cfg: ArchConfig, shape: ShapeConfig, px: ParallelCtx
+                   ) -> List[Tuple[str, Any, Any, Any, float]]:
+    """[(name, fn, args_sds, args_specs, multiplier)] for this cell."""
+    M = px.num_microbatches if shape.kind == "train" else 1
+    B = shape.global_batch // M
+    S = shape.seq_len
+    d = cfg.d_model
+    be = px.batch_spec(B)
+    x_sds = SDS((B, S, d), COMPUTE_DT)
+    x_spec = P(be, None, None)
+    tok_sds = SDS((B, S), jnp.int32)
+    p_sds = jax.eval_shape(lambda k: lm_mod.init_params(k, cfg),
+                           jax.random.key(0))
+    p_spec_full = shard_mod.param_specs(p_sds, px)
+    train = shape.kind == "train"
+    plan = []
+
+    if shape.kind == "decode":
+        return _decode_plan(cfg, shape, px, p_sds, be)
+
+    def grad_of(f):
+        if not train:
+            return f
+        if px.remat == "none":
+            ck = f
+        else:
+            policy = (jax.checkpoint_policies.checkpoint_dots
+                      if px.remat == "dots" else None)
+            ck = jax.checkpoint(f, policy=policy)
+
+        def g(p, *a):
+            return jax.grad(
+                lambda pp, *aa: ck(pp, *aa).astype(
+                    jnp.float32).sum())(p, *a)
+        return g
+
+    def block_component(name, key, fn, mult, extra_sds=(), extra_specs=()):
+        lp_sds = _layer_subtree(p_sds, key)
+        lp_spec = shard_mod.param_specs(lp_sds, px)
+        plan.append((name, grad_of(fn) if train else fn,
+                     (lp_sds, x_sds) + tuple(extra_sds),
+                     (lp_spec, x_spec) + tuple(extra_specs), mult))
+
+    if cfg.encoder_decoder:
+        def enc_fn(p, x):
+            xa = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            from repro.models import attention as attn
+            x = x + attn.gqa_fwd(p["attn"], xa, cfg=cfg, px=px, causal=False,
+                                 batch_entry=be)
+            from repro.models.layers import mlp_fwd
+            xm = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            return x + mlp_fwd(p["mlp"], xm, px, be)
+
+        def dec_fn(p, x):
+            kv = encdec_mod._enc_cross_kv(p, x, cfg, px, be)
+            out, _ = encdec_mod._dec_block_full(p, x, kv, cfg, px, be, False)
+            return out
+
+        block_component("enc_block", "enc_layers", enc_fn, cfg.n_layers * M)
+        block_component("dec_block", "dec_layers", dec_fn, cfg.n_layers * M)
+    elif cfg.rwkv is not None:
+        def fn(p, x):
+            B_ = x.shape[0]
+            zero = {"state": jnp.zeros((B_, cfg.n_heads, cfg.rwkv.head_dim,
+                                        cfg.rwkv.head_dim), jnp.float32),
+                    "shift_a": jnp.zeros((B_, d), COMPUTE_DT),
+                    "shift_f": jnp.zeros((B_, d), COMPUTE_DT)}
+            return r6.rwkv_block_fwd(p, x, zero, cfg=cfg, px=px,
+                                     batch_entry=be)[0]
+        block_component("rwkv_block", "layers", fn, cfg.n_layers * M)
+    elif cfg.ssm is not None:
+        s = cfg.ssm
+        di = s.expand * d
+
+        def fn(p, x):
+            B_ = x.shape[0]
+            zero = {"ssm": jnp.zeros((B_, di // s.head_dim, s.head_dim,
+                                      s.d_state), jnp.float32),
+                    "conv": jnp.zeros((B_, s.d_conv - 1, di + 2 * s.d_state),
+                                      COMPUTE_DT)}
+            return m2.mamba2_fwd(p, x, zero, cfg=cfg, px=px,
+                                 batch_entry=be)[0]
+        block_component("mamba_block", "layers", fn, cfg.n_layers * M)
+
+        def shared_fn(p, x):
+            return blocks_mod.shared_block_fwd(p, x, x, cfg=cfg, px=px,
+                                               batch_entry=be)[0]
+        n_inv = (cfg.n_layers + cfg.shared_every - 1) // cfg.shared_every
+        lp_sds = p_sds["shared_block"]
+        lp_spec = shard_mod.param_specs(lp_sds, px)
+        plan.append(("shared_block",
+                     grad_of(shared_fn) if train else shared_fn,
+                     (lp_sds, x_sds), (lp_spec, x_spec), n_inv * M))
+    else:
+        def tf_fn(p, x, rb=None, pl_=None):
+            return blocks_mod.tf_block_fwd(p, x, cfg=cfg, px=px,
+                                           batch_entry=be, router_bias=rb,
+                                           placement=pl_)[0]
+        if cfg.moe is not None:
+            fk = cfg.moe.first_k_dense
+            E = cfg.moe.num_experts
+            rb_sds = SDS((E,), jnp.float32)
+            pl_sds = SDS((E,), jnp.int32)
+            block_component("moe_block", "layers", tf_fn,
+                            (cfg.n_layers - fk) * M,
+                            extra_sds=(rb_sds, pl_sds),
+                            extra_specs=(P(), P()))
+            if fk:
+                block_component("dense_block", "dense_layers",
+                                lambda p, x: tf_fn(p, x), fk * M)
+            if cfg.mtp_depth:
+                lp_sds = p_sds["mtp"]["block"]
+                lp_spec = shard_mod.param_specs(lp_sds, px)
+                plan.append(("mtp_block",
+                             grad_of(lambda p, x: tf_fn(p, x)) if train
+                             else (lambda p, x: tf_fn(p, x)),
+                             (lp_sds, x_sds), (lp_spec, x_spec), 1 * M))
+        else:
+            block_component("tf_block", "layers", tf_fn, cfg.n_layers * M)
+
+    # ---- head / loss ------------------------------------------------------
+    emb_sds = p_sds["embed"]
+    emb_spec = shard_mod.param_specs(emb_sds, px)
+    if train:
+        def head_fn(pe, h, toks):
+            mask = jnp.ones_like(toks, jnp.float32)
+            if px.loss_chunk:
+                tot, cnt = chunked_xent(h, pe, toks, mask, px, be,
+                                        px.loss_chunk)
+                return tot / jnp.maximum(cnt, 1.0)
+            logits = lm_head_fwd(pe, h, px, be)
+            return softmax_xent(logits, toks, mask)
+
+        def head_grad(pe, h, toks):
+            return jax.grad(lambda a, b: head_fn(a, b, toks),
+                            argnums=(0, 1))(pe, h)
+        n_heads_passes = (1 + (1 if cfg.mtp_depth else 0)) * M
+        plan.append(("head_loss", head_grad, (emb_sds, x_sds, tok_sds),
+                     (emb_spec, x_spec, P(be, None)), n_heads_passes))
+
+        # optimizer over the FULL param tree (no loops inside)
+        opt_init, opt_apply = {
+            "adamw": (adamw_init, adamw_apply),
+            "adafactor": (adafactor_init, adafactor_apply),
+            "adafactor_lean": (adafactor_lean_init, adafactor_lean_apply),
+        }[px.optimizer]
+        o_sds = jax.eval_shape(opt_init, p_sds)
+        o_spec = shard_mod.opt_specs(
+            p_spec_full, p_sds, px, zero1=px.zero1,
+            factored=px.optimizer.startswith("adafactor"),
+            lean=(px.optimizer == "adafactor_lean"))
+        gdt = jnp.bfloat16 if px.grad_dtype == "bf16" else jnp.float32
+        g_sds = jax.tree.map(lambda s: SDS(s.shape, gdt), p_sds)
+        g_spec = jax.tree.map(
+            lambda s, l: shard_mod.zero1_spec(s, l.shape, px),
+            p_spec_full, p_sds)
+
+        def opt_fn(g, o, p):
+            return opt_apply(AdamWConfig(), g, o, p)[0]
+        plan.append(("optimizer", opt_fn, (g_sds, o_sds, p_sds),
+                     (g_spec, o_spec, p_spec_full), 1.0))
+    else:
+        def head_fn(pe, h):
+            return lm_head_fwd(pe, h[:, -1:, :], px, be)
+        plan.append(("head", head_fn, (emb_sds, x_sds),
+                     (emb_spec, x_spec), 1.0))
+    return plan
+
+
+def _decode_plan(cfg, shape, px, p_sds, be):
+    """Per-layer decode components (one token vs the cache)."""
+    from repro.launch import specs as specs_mod
+    B = shape.global_batch
+    d = cfg.d_model
+    x1_sds = SDS((B, 1, d), COMPUTE_DT)
+    x1_spec = P(be, None, None)
+    cache_sds, cache_spec = specs_mod.cache_specs(cfg, shape, px)
+    pos_sds, pos_spec = SDS((), jnp.int32), P()
+    strip = lambda t: jax.tree.map(lambda s: SDS(s.shape[1:], s.dtype), t)
+    strip_sp = lambda t: jax.tree.map(
+        lambda s: P(*s[1:]), t, is_leaf=lambda x: isinstance(x, P))
+    plan = []
+
+    if cfg.encoder_decoder:
+        def fn(p, x, self_c, cross_c, pos):
+            from repro.models import attention as attn
+            from repro.models.layers import mlp_fwd
+            S_self = self_c["k"].shape[1]
+            seq_entry = px.shard_if(S_self, px.model_axis)
+            xa = rmsnorm(p["ln1"], x, cfg.norm_eps)
+            y, self_c = attn.gqa_decode(p["self_attn"], xa, self_c, pos,
+                                        cfg=cfg, px=px, batch_entry=be,
+                                        seq_entry=seq_entry)
+            x = x + y
+            xb = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            y, _ = attn.gqa_decode(p["cross_attn"], xb, cross_c,
+                                   jnp.int32(S_self - 1), cfg=cfg, px=px,
+                                   batch_entry=be, seq_entry=seq_entry,
+                                   cross=True)
+            x = x + y
+            xm = rmsnorm(p["ln3"], x, cfg.norm_eps)
+            return x + mlp_fwd(p["mlp"], xm, px, be)
+        plan.append(("dec_block_decode", fn,
+                     (_layer_subtree(p_sds, "dec_layers"), x1_sds,
+                      strip(cache_sds["self"]), strip(cache_sds["cross"]),
+                      pos_sds),
+                     (shard_mod.param_specs(_layer_subtree(p_sds,
+                                                           "dec_layers"), px),
+                      x1_spec, strip_sp(cache_spec["self"]),
+                      strip_sp(cache_spec["cross"]), pos_spec),
+                     cfg.n_layers))
+    elif cfg.rwkv is not None:
+        def fn(p, x, c):
+            return r6.rwkv_decode_step(p, x, c, cfg=cfg, px=px,
+                                       batch_entry=be)[0]
+        plan.append(("rwkv_decode", fn,
+                     (_layer_subtree(p_sds, "layers"), x1_sds,
+                      strip(cache_sds)),
+                     (shard_mod.param_specs(_layer_subtree(p_sds, "layers"),
+                                            px), x1_spec,
+                      strip_sp(cache_spec)), cfg.n_layers))
+    elif cfg.ssm is not None:
+        def fn(p, x, c):
+            return m2.mamba2_fwd(p, x, c, cfg=cfg, px=px, batch_entry=be,
+                                 decode=True)[0]
+        plan.append(("mamba_decode", fn,
+                     (_layer_subtree(p_sds, "layers"), x1_sds,
+                      strip(cache_sds["mamba"])),
+                     (shard_mod.param_specs(_layer_subtree(p_sds, "layers"),
+                                            px), x1_spec,
+                      strip_sp(cache_spec["mamba"])), cfg.n_layers))
+
+        def shfn(p, x, k, v, pos):
+            seq_entry = (px.seq_mega_spec(k.shape[1]) if B == 1
+                         else px.shard_if(k.shape[1], px.model_axis))
+            return blocks_mod.shared_block_decode(
+                p, x, x, {"k": k, "v": v}, pos, cfg=cfg, px=px,
+                batch_entry=be, seq_entry=seq_entry)[0]
+        n_inv = (cfg.n_layers + cfg.shared_every - 1) // cfg.shared_every
+        ksds = SDS(cache_sds["attn_k"].shape[1:], cache_sds["attn_k"].dtype)
+        ksp = P(*cache_spec["attn_k"][1:])
+        plan.append(("shared_decode", shfn,
+                     (p_sds["shared_block"], x1_sds, ksds, ksds, pos_sds),
+                     (shard_mod.param_specs(p_sds["shared_block"], px),
+                      x1_spec, ksp, ksp, pos_spec), n_inv))
+    else:
+        def fn(p, x, c, pos, rb=None, pl_=None):
+            S_c = c.shape[1] if cfg.mla is not None else c["k"].shape[1]
+            seq_entry = (px.seq_mega_spec(S_c) if B == 1
+                         else px.shard_if(S_c, px.model_axis))
+            return blocks_mod.tf_block_decode(
+                p, x, c, pos, cfg=cfg, px=px, batch_entry=be,
+                seq_entry=seq_entry, router_bias=rb, placement=pl_)[0]
+        fk = cfg.moe.first_k_dense if cfg.moe else 0
+        main_c = strip(cache_sds["main"])
+        main_sp = strip_sp(cache_spec["main"])
+        extra_sds, extra_sp = (), ()
+        fn_use = fn
+        if cfg.moe is not None:
+            E = cfg.moe.num_experts
+            extra_sds = (SDS((E,), jnp.float32), SDS((E,), jnp.int32))
+            extra_sp = (P(), P())
+        plan.append(("block_decode", fn_use,
+                     (_layer_subtree(p_sds, "layers"), x1_sds, main_c,
+                      pos_sds) + extra_sds,
+                     (shard_mod.param_specs(_layer_subtree(p_sds, "layers"),
+                                            px), x1_spec, main_sp,
+                      pos_spec) + extra_sp, cfg.n_layers - fk))
+        if fk:
+            plan.append(("dense_block_decode",
+                         lambda p, x, c, pos: fn(p, x, c, pos),
+                         (_layer_subtree(p_sds, "dense_layers"), x1_sds,
+                          strip(cache_sds["dense"]), pos_sds),
+                         (shard_mod.param_specs(
+                             _layer_subtree(p_sds, "dense_layers"), px),
+                          x1_spec, strip_sp(cache_spec["dense"]), pos_spec),
+                         fk))
+
+    emb_sds = p_sds["embed"]
+    emb_spec = shard_mod.param_specs(emb_sds, px)
+
+    def head_fn(pe, h):
+        return lm_head_fwd(pe, h, px, be)
+    plan.append(("head", head_fn, (emb_sds, x1_sds), (emb_spec, x1_spec),
+                 1.0))
+    return plan
+
+
+def component_costs(cfg, shape, px, parse_collectives) -> Dict[str, Any]:
+    """Lower every component; return per-component and recomposed costs."""
+    import dataclasses as dc
+    px_u = dc.replace(px, scan_unroll=True)
+    plan = component_plan(cfg, shape, px_u)
+    out = {"components": {}}
+    tot = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    for name, fn, sds, specs, mult in plan:
+        c = _lower_component(fn, sds, specs, px_u, parse_collectives)
+        out["components"][name] = dict(c, multiplier=mult)
+        for k in tot:
+            tot[k] += c[k] * mult
+    out.update(tot)
+    return out

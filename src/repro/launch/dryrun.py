@@ -1,0 +1,388 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept every sharding, the compiled module's memory
+analysis must fit the chip, and the roofline terms (§Roofline) are
+derived from cost_analysis + the collective ops parsed out of the
+post-partitioning HLO.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch yi-9b --shape train_4k --mesh single --out results/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.parallel import sharding as shard_mod
+from repro.parallel.ctx import make_ctx
+
+# TPU v5e hardware constants (targets; this container is CPU-only)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,512,1024]{...}' -> bytes. Tuples handled by the caller."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device output bytes of every collective op in the SPMD
+    (post-partitioning) HLO, bucketed by op kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    # lines look like:  %x = bf16[8,128]{1,0} all-gather(...), replica_groups=
+    pat = re.compile(
+        r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z\-]+)(?:-start)?\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        shape_part, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        op = op.replace("-start", "")
+        if op not in out:
+            continue
+        if shape_part.startswith("("):
+            inner = re.findall(r"[a-z0-9]+\[[0-9,]*\][^,)]*", shape_part)
+            b = sum(_shape_bytes(s) for s in inner)
+        else:
+            b = _shape_bytes(shape_part)
+        out[op] += b
+        counts[op] += 1
+    return out, counts
+
+
+def _per_dev_shape(shape, spec, mesh, *, data_unsharded=False):
+    """Per-device dims of a leaf under `spec` on `mesh`."""
+    dims = list(shape)
+    entries = list(spec) + [None] * (len(dims) - len(spec))
+    for i, e in enumerate(entries):
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is None:
+                continue
+            if data_unsharded and a != "model":
+                continue
+            dims[i] //= mesh.shape[a]
+    return tuple(dims)
+
+
+def bf16_emulation_correction(hlo_text, in_sds, in_specs, mesh) -> dict:
+    """XLA:CPU emulates bf16 by materializing f32 copies of bf16 buffers
+    (absent pre-backend; never emitted by the TPU backend). Quantify the
+    inflation so §Dry-run can report a TPU-corrected peak.
+
+    f32 tensors whose dims equal a bf16 input leaf's per-device dims (or
+    the leaf with data axes unsharded — the FSDP all-gather) are emulation
+    buffers running at 2x the width the TPU backend would use. We subtract
+    HALF their size: exact for working buffers (f32 here, bf16 on TPU),
+    conservative for pure input copies (cost 0 on TPU). The corrected
+    number is therefore still an upper bound.
+    """
+    full, half = {}, {}
+    leaves = jax.tree.leaves(in_sds)
+    specs = jax.tree.leaves(in_specs, is_leaf=lambda x: x is None or
+                            isinstance(x, jax.sharding.PartitionSpec))
+    if len(specs) != len(leaves):  # spec tree uses None for replicated
+        specs = [jax.sharding.PartitionSpec()] * len(leaves)
+    for leaf, spec in zip(leaves, specs):
+        if leaf.dtype != jnp.bfloat16:
+            continue
+        spec = spec or jax.sharding.PartitionSpec()
+        full[_per_dev_shape(leaf.shape, spec, mesh)] = True
+        g = _per_dev_shape(leaf.shape, spec, mesh, data_unsharded=True)
+        half.setdefault(g, True)
+    seen = set()
+    sub_full = sub_half = 0
+    for m in re.finditer(
+            r"%?([\w.\-]+)\s+=\s+f32\[([0-9,]*)\]\S*\s+(\w+)", hlo_text):
+        name, dims_s, op = m.groups()
+        if op not in ("convert", "fusion", "copy", "all-gather",
+                      "all-gather-start", "bitcast"):
+            continue
+        base = name.split(".")[0]
+        dims = tuple(int(d) for d in dims_s.split(",")) if dims_s else ()
+        if (base, dims) in seen:
+            continue
+        size = 4
+        for d in dims:
+            size *= d
+        if dims in full:
+            seen.add((base, dims))
+            sub_full += size // 2
+        elif dims in half:
+            seen.add((base, dims))
+            sub_half += size // 2
+    return {"bf16_emulation_bytes": sub_full + sub_half,
+            "input_shaped_inflation": sub_full, "gather_inflation": sub_half}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: D=batch
+    tokens per step. Train counts fwd+bwd (6), prefill/decode fwd (2)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    toks = shape.tokens if shape.kind == "prefill" else shape.global_batch
+    return 2.0 * n * toks
+
+
+def make_cell(arch: str, shape_name: str, mesh_kind: str, px_overrides=None):
+    """(cfg, shape, mesh, px) with the production policy for this cell."""
+    px_overrides = dict(px_overrides or {})
+    tp = px_overrides.pop("tp", 16)
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"), tp=tp)
+    huge = cfg.param_count() > 100e9  # deepseek-v3: FSDP + adafactor + bf16
+    kw = dict(
+        seq_shard_attn=(cfg.n_heads % mesh.shape["model"] != 0),
+        num_microbatches=(max(1, shape.global_batch //
+                              (mesh.devices.size // mesh.shape["model"]))
+                          if shape.kind == "train" else 1),
+        fsdp=huge,
+        optimizer="adafactor_lean" if huge else "adamw",
+        grad_dtype="bf16" if huge else "f32",
+        loss_chunk=1024 if huge else 0,
+    )
+    kw.update(px_overrides or {})
+    px = make_ctx(mesh, **kw)
+    return cfg, shape, mesh, px
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, px_overrides=None):
+    cfg = get_arch(arch)
+    if shape_name not in cfg.shapes():
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped",
+                "reason": "inapplicable (see DESIGN.md §Arch-applicability)"}
+    cfg, shape, mesh, px = make_cell(arch, shape_name, mesh_kind,
+                                     px_overrides)
+    bundle = build_step(cfg, shape, px)
+    in_sh = jax.tree.map(
+        lambda s: shard_mod.to_shardings(s, px), bundle.in_specs,
+        is_leaf=lambda x: x is None or isinstance(x, jax.sharding.PartitionSpec))
+    out_sh = jax.tree.map(
+        lambda s: shard_mod.to_shardings(s, px), bundle.out_specs,
+        is_leaf=lambda x: x is None or isinstance(x, jax.sharding.PartitionSpec))
+
+    t0 = time.time()
+    jitted = jax.jit(bundle.fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=bundle.donate)
+    lowered = jitted.lower(*bundle.in_sds)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll_bytes, coll_counts = parse_collectives(hlo)
+
+    chips = mesh.devices.size
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    cbytes_dev = float(sum(coll_bytes.values()))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = cbytes_dev / LINK_BW
+    mflops = model_flops(cfg, shape)
+    mflops_dev = mflops / chips
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    bound = max(t_compute, t_memory, t_coll)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": cbytes_dev,
+        "collective_breakdown": coll_bytes,
+        "collective_counts": coll_counts,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mflops,
+        "useful_flop_ratio": (mflops_dev / flops_dev) if flops_dev else 0.0,
+        "roofline_fraction": (t_compute / bound) if bound else 0.0,
+        "arg_bytes_per_dev": mem.argument_size_in_bytes,
+        "out_bytes_per_dev": mem.output_size_in_bytes,
+        "temp_bytes_per_dev": mem.temp_size_in_bytes,
+        "code_bytes": mem.generated_code_size_in_bytes,
+        "peak_bytes_per_dev": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               - mem.alias_size_in_bytes
+                               + mem.temp_size_in_bytes),
+    }
+    # XLA:CPU inflates bf16 buffers to f32 (emulation); correct toward the
+    # TPU backend, which compiles bf16 natively. Both numbers reported.
+    corr = bf16_emulation_correction(hlo, bundle.in_sds, bundle.in_specs,
+                                     mesh)
+    result.update(corr)
+    result["peak_bytes_per_dev_tpu_est"] = (
+        result["peak_bytes_per_dev"] - corr["bf16_emulation_bytes"])
+    return result
+
+
+def run_components(arch: str, shape_name: str, mesh_kind: str,
+                   px_overrides=None):
+    """Phase-2 roofline: per-loop-body component costing (launch/costs.py)
+    with known trip-count multipliers — corrects XLA cost_analysis'
+    count-while-bodies-once undercount."""
+    from repro.launch import costs as costs_mod
+    cfg = get_arch(arch)
+    if shape_name not in cfg.shapes():
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped"}
+    cfg, shape, mesh, px = make_cell(arch, shape_name, mesh_kind,
+                                     px_overrides)
+    out = costs_mod.component_costs(cfg, shape, px, parse_collectives)
+    chips = mesh.devices.size
+    mflops = model_flops(cfg, shape)
+    t_c = out["flops"] / PEAK_FLOPS
+    t_m = out["bytes"] / HBM_BW
+    t_l = out["collective_bytes"] / LINK_BW
+    bound = max(t_c, t_m, t_l)
+    out.update({
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "chips": chips,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+        "dominant": max((("compute", t_c), ("memory", t_m),
+                         ("collective", t_l)), key=lambda kv: kv[1])[0],
+        "model_flops": mflops,
+        "useful_flop_ratio": (mflops / chips / out["flops"])
+        if out["flops"] else 0.0,
+        "roofline_fraction": (t_c / bound) if bound else 0.0,
+    })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--components", action="store_true",
+                    help="component-pass roofline instead of the full step")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--causal-skip", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--q-block", type=int, default=0)
+    ap.add_argument("--kv-block", type=int, default=0)
+    ap.add_argument("--zero1", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=0,
+                    help="TP degree (re-splits the 256 intra-pod chips)")
+    ap.add_argument("--seq-parallel", type=int, default=-1)
+    ap.add_argument("--ep2d", type=int, default=-1)
+    ap.add_argument("--fsdp", type=int, default=-1)
+    ap.add_argument("--optimizer", default="")
+    ap.add_argument("--grad-dtype", default="")
+    ap.add_argument("--loss-chunk", type=int, default=-1)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    ov = {"remat": args.remat, "causal_skip": bool(args.causal_skip),
+          "zero1": bool(args.zero1)}
+    if args.tp:
+        ov["tp"] = args.tp
+    if args.seq_parallel >= 0:
+        ov["seq_parallel"] = bool(args.seq_parallel)
+    if args.ep2d >= 0:
+        ov["ep2d"] = bool(args.ep2d)
+    if args.fsdp >= 0:
+        ov["fsdp"] = bool(args.fsdp)
+    if args.optimizer:
+        ov["optimizer"] = args.optimizer
+    if args.grad_dtype:
+        ov["grad_dtype"] = args.grad_dtype
+    if args.loss_chunk >= 0:
+        ov["loss_chunk"] = args.loss_chunk
+    if args.microbatches:
+        ov["num_microbatches"] = args.microbatches
+    if args.q_block:
+        ov["q_block"] = args.q_block
+    if args.kv_block:
+        ov["kv_block"] = args.kv_block
+
+    if args.components:
+        res = run_components(args.arch, args.shape, args.mesh, ov)
+        res["overrides"] = dict(ov)
+        os.makedirs(args.out, exist_ok=True)
+        tag = f"_{args.tag}" if args.tag else ""
+        path = os.path.join(
+            args.out, f"{args.arch}_{args.shape}_{args.mesh}{tag}_comp.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if res["status"] == "ok":
+            print(f"[components] {args.arch} x {args.shape} x {args.mesh}: "
+                  f"dominant={res['dominant']} t=(c {res['t_compute_s']:.3e},"
+                  f" m {res['t_memory_s']:.3e}, coll "
+                  f"{res['t_collective_s']:.3e}) "
+                  f"useful={res['useful_flop_ratio']:.3f}")
+        else:
+            print(f"[components] {args.arch} x {args.shape} x {args.mesh}: "
+                  f"{res['status']}")
+        return 0
+
+    res = run_cell(args.arch, args.shape, args.mesh, ov)
+    res["overrides"] = {k: v for k, v in ov.items()}
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"_{args.tag}" if args.tag else ""
+    path = os.path.join(args.out,
+                        f"{args.arch}_{args.shape}_{args.mesh}{tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    if res["status"] == "ok":
+        print(f"[dryrun] {args.arch} x {args.shape} x {args.mesh}: OK "
+              f"compile={res['compile_s']}s dominant={res['dominant']} "
+              f"t=(c {res['t_compute_s']:.3e}, m {res['t_memory_s']:.3e}, "
+              f"coll {res['t_collective_s']:.3e}) "
+              f"useful={res['useful_flop_ratio']:.2f} "
+              f"peak/dev={res['peak_bytes_per_dev']/2**30:.2f}GiB "
+              f"(tpu-est {res['peak_bytes_per_dev_tpu_est']/2**30:.2f}GiB)")
+    else:
+        print(f"[dryrun] {args.arch} x {args.shape} x {args.mesh}: "
+              f"{res['status']} ({res.get('reason','')})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the 512-device placeholder env
+var must be set by the entrypoint (dryrun.py) before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, tp: int = 16):
+    """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips).
+
+    Axes: "pod" (slow inter-pod links — DP/DiLoCo/pipeline only),
+    "data" (batch), "model" (TP/EP/sequence).
+
+    ``tp`` re-splits the 256 intra-pod chips between the data and model
+    axes (a §Perf hillclimbing knob: TP degree trades TP-gather volume
+    against DP-gradient volume). tp=16 is the assignment's baseline mesh.
+    """
+    assert 256 % tp == 0, tp
+    shape = (2, 256 // tp, tp) if multi_pod else (256 // tp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"need {data * model} devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"))

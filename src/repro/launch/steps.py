@@ -1,0 +1,210 @@
+"""Step builders: train_step / prefill_step / serve_step.
+
+``build_train_step`` wires together the model loss, microbatched gradient
+accumulation (lax.scan, fp32 accumulators), AdamW with fp32 master
+weights (ZeRO-1 sharded), aux-free MoE router-bias updates and the GAIA
+expert-placement state. The returned StepBundle carries everything the
+dry-run / trainer needs to jit with explicit shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import specs as specs_mod
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.optim.adafactor import (adafactor_apply, adafactor_init,
+                                   adafactor_lean_apply, adafactor_lean_init)
+from repro.optim.adamw import AdamWConfig, adamw_apply, adamw_init
+from repro.parallel import sharding as shard_mod
+from repro.parallel.ctx import ParallelCtx
+
+BIAS_LR = 1e-3  # aux-free router bias update rate (DeepSeek-V3)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    in_sds: tuple
+    in_specs: tuple
+    out_specs: Any
+    donate: tuple = ()
+
+
+def _param_sds(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda k: lm_mod.init_params(k, cfg), jax.random.key(0))
+
+
+def _extras_sds(cfg: ArchConfig):
+    return jax.eval_shape(lambda: lm_mod.init_extras(cfg))
+
+
+def extras_specs(cfg, px):
+    if cfg.moe is None:
+        return {}
+    return {"router_bias": P(), "placement": P()}
+
+
+def model_fns(cfg: ArchConfig):
+    """(loss_fn, prefill_fn, decode_fn) for this architecture family."""
+    if cfg.encoder_decoder:
+        return (encdec_mod.encdec_loss, encdec_mod.encdec_prefill,
+                encdec_mod.encdec_decode)
+    return lm_mod.loss_fn, lm_mod.prefill, lm_mod.decode_step
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def _update_router_bias(extras, metrics):
+    """Aux-loss-free balancing: push the selection bias of overloaded
+    experts down, underloaded up (sign update, DeepSeek-V3 §2.1.2)."""
+    if "expert_counts" not in metrics or "router_bias" not in extras:
+        return extras
+    counts = metrics["expert_counts"].astype(jnp.float32)  # (Lmoe, E)
+    mean = counts.mean(axis=-1, keepdims=True)
+    bias = extras["router_bias"] + BIAS_LR * jnp.sign(mean - counts)
+    return dict(extras, router_bias=bias)
+
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, px: ParallelCtx,
+                     opt: Optional[AdamWConfig] = None) -> StepBundle:
+    opt = opt or AdamWConfig()
+    loss_fn, _, _ = model_fns(cfg)
+    M = px.num_microbatches
+    assert shape.global_batch % M == 0, (shape.global_batch, M)
+    opt_init, opt_apply = {
+        "adamw": (adamw_init, adamw_apply),
+        "adafactor": (adafactor_init, adafactor_apply),
+        "adafactor_lean": (adafactor_lean_init, adafactor_lean_apply),
+    }[px.optimizer]
+    gdt = jnp.bfloat16 if px.grad_dtype == "bf16" else jnp.float32
+
+    p_sds = _param_sds(cfg)
+    p_spec = shard_mod.param_specs(p_sds, px)
+    # ZeRO-2: gradient accumulators live sharded over the data axes (the
+    # constraint makes GSPMD reduce-scatter each microbatch's grads).
+    g_spec = jax.tree.map(lambda s, l: shard_mod.zero1_spec(s, l.shape, px),
+                          p_spec, p_sds)
+
+    def train_step(params, opt_state, extras, batch):
+        def to_micro(x):
+            return x.reshape(M, x.shape[0] // M, *x.shape[1:])
+
+        mb = jax.tree.map(to_micro, batch)
+
+        def constrain_g(tree):
+            if px.mesh is None:
+                return tree
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(px.mesh, s)), tree, g_spec)
+
+        g0 = constrain_g(jax.tree.map(lambda p: jnp.zeros(p.shape, gdt),
+                                      params))
+
+        def micro(carry, b):
+            gacc, ex = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, b, ex, cfg, px), has_aux=True)(params)
+            ex = _update_router_bias(ex, metrics)
+            gacc = constrain_g(jax.tree.map(
+                lambda a, g: a + g.astype(gdt), gacc, grads))
+            scalars = {k: v for k, v in metrics.items()
+                       if getattr(v, "ndim", None) == 0}
+            scalars["loss"] = loss
+            return (gacc, ex), scalars
+
+        (gsum, extras), scalars = jax.lax.scan(micro, (g0, extras), mb)
+        grads = jax.tree.map(lambda g: g / M, gsum)
+        params, opt_state, om = opt_apply(opt, grads, opt_state, params)
+        metrics = jax.tree.map(lambda x: x.mean(), scalars)
+        metrics.update(om)
+        return params, opt_state, extras, metrics
+
+    # --- jit signature -----------------------------------------------------
+    o_sds = jax.eval_shape(opt_init, p_sds)
+    o_spec = shard_mod.opt_specs(p_spec, p_sds, px, zero1=px.zero1,
+                                 factored=px.optimizer.startswith("adafactor"),
+                                 lean=(px.optimizer == "adafactor_lean"))
+    e_sds = _extras_sds(cfg)
+    e_spec = extras_specs(cfg, px)
+    b_sds, b_spec = specs_mod.train_batch_specs(cfg, shape, px)
+    metrics_spec = None  # replicated scalars
+
+    out_specs = (p_spec, o_spec, e_spec, metrics_spec)
+    return StepBundle(
+        fn=train_step,
+        in_sds=(p_sds, o_sds, e_sds, b_sds),
+        in_specs=(p_spec, o_spec, e_spec, b_spec),
+        out_specs=out_specs,
+        donate=(0, 1, 2),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill / serve
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ArchConfig, shape: ShapeConfig,
+                       px: ParallelCtx) -> StepBundle:
+    _, prefill_fn, _ = model_fns(cfg)
+
+    def prefill_step(params, batch):
+        return prefill_fn(params, batch, cfg, px, cache_len=shape.seq_len)
+
+    p_sds = _param_sds(cfg)
+    p_spec = shard_mod.param_specs(p_sds, px)
+    b_sds, b_spec = specs_mod.prefill_batch_specs(cfg, shape, px)
+    cache_sds, cache_spec = specs_mod.cache_specs(cfg, shape, px)
+    logits_spec = None
+    return StepBundle(
+        fn=prefill_step,
+        in_sds=(p_sds, b_sds),
+        in_specs=(p_spec, b_spec),
+        out_specs=(cache_spec, logits_spec),
+    )
+
+
+def build_serve_step(cfg: ArchConfig, shape: ShapeConfig,
+                     px: ParallelCtx) -> StepBundle:
+    _, _, decode_fn = model_fns(cfg)
+
+    def serve_step(params, extras, cache, tokens, pos):
+        new_cache, logits = decode_fn(params, cache, tokens, pos, extras,
+                                      cfg, px)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_cache, next_tokens
+
+    p_sds = _param_sds(cfg)
+    p_spec = shard_mod.param_specs(p_sds, px)
+    e_sds = _extras_sds(cfg)
+    e_spec = extras_specs(cfg, px)
+    d_sds, d_spec = specs_mod.decode_input_specs(cfg, shape, px)
+    return StepBundle(
+        fn=serve_step,
+        in_sds=(p_sds, e_sds, d_sds["cache"], d_sds["tokens"], d_sds["pos"]),
+        in_specs=(p_spec, e_spec, d_spec["cache"], d_spec["tokens"],
+                  d_spec["pos"]),
+        out_specs=(d_spec["cache"], P(px.batch_spec(shape.global_batch))),
+        donate=(2,),
+    )
+
+
+def build_step(cfg, shape, px) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, px)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, px)
+    return build_serve_step(cfg, shape, px)

@@ -1,0 +1,402 @@
+"""Attention: GQA (train/prefill/decode) and MLA (DeepSeek-V3).
+
+Three distribution layouts, chosen by the sharding policy:
+
+* heads-sharded (default TP): query heads split over the model axis; KV
+  heads split when divisible, else replicated (GQA with few KV heads).
+  Train/prefill use a blockwise-online-softmax ("flash") formulation in
+  pure jnp — this is also the oracle for the Pallas kernels.
+* sequence-sharded (qwen2: 28 heads % 16 != 0): query positions split
+  over the model axis, KV replicated per block (GSPMD all-gathers).
+* decode: KV cache sequence-sharded over the model axis (and over every
+  axis for long_500k); partial softmax stats combine via the small
+  all-reduces GSPMD inserts for reductions over a sharded dim. This is
+  flash-decode, expressed in the partitioner rather than by hand.
+
+``causal_skip=True`` unrolls query blocks in Python so each block scans
+only its own KV prefix — the exact lower triangle, ~2x fewer FLOPs than
+the masked single-scan baseline (§Perf iteration 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DT, _init, apply_rope
+from repro.parallel.ctx import ParallelCtx
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, d: int, n_heads: int, n_kv: int, head_dim: int, bias: bool):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, n_heads, head_dim)),
+        "wk": _init(ks[1], (d, n_kv, head_dim)),
+        "wv": _init(ks[2], (d, n_kv, head_dim)),
+        "wo": _init(ks[3], (n_heads, head_dim, d)),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), COMPUTE_DT)
+        p["bk"] = jnp.zeros((n_kv, head_dim), COMPUTE_DT)
+        p["bv"] = jnp.zeros((n_kv, head_dim), COMPUTE_DT)
+    return p
+
+
+def init_mla(key, d: int, n_heads: int, c):
+    """c: MLAConfig."""
+    ks = jax.random.split(key, 6)
+    qh = c.qk_nope_head_dim + c.qk_rope_head_dim
+    return {
+        "w_dq": _init(ks[0], (d, c.q_lora_rank)),
+        "w_uq": _init(ks[1], (c.q_lora_rank, n_heads, qh)),
+        "w_dkv": _init(ks[2], (d, c.kv_lora_rank + c.qk_rope_head_dim)),
+        "w_uk": _init(ks[3], (c.kv_lora_rank, n_heads, c.qk_nope_head_dim)),
+        "w_uv": _init(ks[4], (c.kv_lora_rank, n_heads, c.v_head_dim)),
+        "wo": _init(ks[5], (n_heads, c.v_head_dim, d)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention primitives (jnp flash — oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def _online_block(q, k, v, m, l, acc, mask=None):
+    """One online-softmax update. q:(...,qb,D) k,v:(...,kb,D)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "...qk,...kd->...qd", p.astype(COMPUTE_DT), v
+    ).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _expand_kv(k, n_heads: int):
+    """(B,Hkv,S,D) -> (B,Hq,S,D) by group repetition."""
+    n_kv = k.shape[1]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=1)
+
+
+def flash_heads(q, k, v, *, causal: bool, px: ParallelCtx, batch_entry,
+                head_entry) -> jax.Array:
+    """Head-sharded blockwise attention.
+
+    q: (B, Hq, S, D); k,v: (B, Hq, Skv, D) (already group-expanded).
+    With ``px.causal_skip`` each query block only scans its KV prefix.
+    """
+    B, H, S, Dk = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[2]
+    S_orig, Skv_orig = S, Skv
+    qb = min(px.q_block, S)
+    kb = min(px.kv_block, Skv)
+    if S % qb:  # pad queries to a block multiple (MTP runs on S-1)
+        pad = qb * math.ceil(S / qb) - S
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        S = q.shape[2]
+    if Skv % kb:
+        pad = kb * math.ceil(Skv / kb) - Skv
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Skv = k.shape[2]
+    nq = S // qb
+    nk = Skv // kb
+
+    def scan_kv_prefix(qi, qblk, n_blocks, offset_blocks=0):
+        """Online-softmax over kv blocks [offset, offset+n_blocks)."""
+        kpre = jax.lax.dynamic_slice_in_dim(k, offset_blocks * kb, n_blocks * kb, 2)
+        vpre = jax.lax.dynamic_slice_in_dim(v, offset_blocks * kb, n_blocks * kb, 2)
+        kpre = kpre.reshape(B, H, n_blocks, kb, Dk).transpose(2, 0, 1, 3, 4)
+        vpre = vpre.reshape(B, H, n_blocks, kb, Dv).transpose(2, 0, 1, 3, 4)
+        m0 = jnp.full((B, H, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qb), jnp.float32)
+        a0 = jnp.zeros((B, H, qb, Dv), jnp.float32)
+        qpos = qi * qb + jnp.arange(qb)
+
+        def step(carry, j, kj, vj):
+            m, l, acc = carry
+            kpos = (offset_blocks + j) * kb + jnp.arange(kb)
+            mask = None
+            if causal:
+                mask = qpos[:, None] >= kpos[None, :]
+            if Skv != Skv_orig:
+                valid = (kpos < Skv_orig)[None, :]
+                mask = valid if mask is None else (mask & valid)
+            return _online_block(qblk, kj, vj, m, l, acc, mask)
+
+        if px.scan_unroll:
+            carry = (m0, l0, a0)
+            for j in range(n_blocks):
+                carry = step(carry, j, kpre[j], vpre[j])
+            m, l, acc = carry
+        else:
+            def body(carry, kv_j):
+                (mla, j) = carry
+                kj, vj = kv_j
+                return ((step(mla, j, kj, vj), j + 1), None)
+
+            ((m, l, acc), _), _ = jax.lax.scan(
+                body, ((m0, l0, a0), jnp.int32(0)), (kpre, vpre))
+        return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+
+    outs = []
+    for qi in range(nq):
+        qblk = jax.lax.dynamic_slice_in_dim(q, qi * qb, qb, 2)
+        if causal and px.causal_skip:
+            # exact lower triangle: this q block sees kv blocks [0 .. hi)
+            hi = min(nk, math.ceil(((qi + 1) * qb) / kb))
+            outs.append(scan_kv_prefix(qi, qblk, hi))
+        else:
+            outs.append(scan_kv_prefix(qi, qblk, nk))
+    out = jnp.concatenate(outs, axis=2) if len(outs) > 1 else outs[0]
+    out = out[:, :, :S_orig, :]
+    return px.constrain(out, batch_entry, head_entry, None, None)
+
+
+def flash_seq(q, k, v, *, causal: bool, px: ParallelCtx, batch_entry):
+    """Sequence-sharded attention (qwen2 fallback: Hq % model != 0).
+
+    q: (B, Hq, S, D) with S sharded over the model axis; k, v replicated
+    (GSPMD all-gathers them once per layer). Online softmax over KV blocks.
+    """
+    B, H, S, D = q.shape
+    Skv = k.shape[2]
+    kb = min(px.kv_block, Skv)
+    nk = Skv // kb
+    q = px.constrain(q, batch_entry, None, px.shard_if(S, px.model_axis), None)
+    kpre = k.reshape(B, H, nk, kb, D).transpose(2, 0, 1, 3, 4)
+    vpre = v.reshape(B, H, nk, kb, D).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(S)
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, D), jnp.float32)
+
+    def step(carry, j, kj, vj):
+        m, l, acc = carry
+        kpos = j * kb + jnp.arange(kb)
+        mask = (qpos[:, None] >= kpos[None, :]) if causal else None
+        return _online_block(q, kj, vj, m, l, acc, mask)
+
+    if px.scan_unroll:
+        carry = (m0, l0, a0)
+        for j in range(nk):
+            carry = step(carry, j, kpre[j], vpre[j])
+        m, l, acc = carry
+    else:
+        def body(carry, kv_j):
+            (mla, j) = carry
+            kj, vj = kv_j
+            return ((step(mla, j, kj, vj), j + 1), None)
+
+        ((m, l, acc), _), _ = jax.lax.scan(body, ((m0, l0, a0), jnp.int32(0)),
+                                           (kpre, vpre))
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+    return px.constrain(out, batch_entry, None,
+                        px.shard_if(S, px.model_axis), None)
+
+
+def decode_attend(q, k_cache, v_cache, pos, *, px: ParallelCtx, batch_entry,
+                  seq_entry):
+    """Single-token decode against a sequence-sharded KV cache.
+
+    q: (B, Hq, D); caches: (B, Skv, Hkv, D) with Skv sharded (flash-decode:
+    each shard computes partial stats; GSPMD's all-reduces over the sharded
+    Skv dim combine them exactly).
+    """
+    B, H, D = q.shape
+    Skv, Hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = D ** -0.5
+    k = _expand_kv(k_cache.transpose(0, 2, 1, 3), H)  # (B,Hq,Skv,D)
+    v = _expand_kv(v_cache.transpose(0, 2, 1, 3), H)
+    s = jnp.einsum("bhd,bhkd->bhk", q, k).astype(jnp.float32) * scale
+    valid = jnp.arange(Skv)[None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    s = px.constrain(s, batch_entry, None, seq_entry)
+    p = jax.nn.softmax(s, axis=-1)  # reductions over sharded Skv -> psum
+    out = jnp.einsum("bhk,bhkd->bhd", p.astype(COMPUTE_DT), v)
+    return px.constrain(out, batch_entry, None, None)
+
+
+# ---------------------------------------------------------------------------
+# GQA module
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, rope_theta, positions, px, batch_entry, *, n_heads):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(COMPUTE_DT))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(COMPUTE_DT))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(COMPUTE_DT))
+    if "bq" in p:
+        q = q + p["bq"].astype(COMPUTE_DT)[None, :, None, :]
+        k = k + p["bk"].astype(COMPUTE_DT)[None, :, None, :]
+        v = v + p["bv"].astype(COMPUTE_DT)[None, :, None, :]
+    if rope_theta:
+        q = apply_rope(q, positions[:, None, :], rope_theta)
+        k = apply_rope(k, positions[:, None, :], rope_theta)
+    return q, k, v
+
+
+def gqa_fwd(p, x, *, cfg, px: ParallelCtx, causal: bool, batch_entry,
+            positions=None, kv_override=None, return_kv: bool = False):
+    """Full-sequence GQA attention (train / prefill).
+
+    kv_override: (k, v) from an encoder for cross-attention.
+    return_kv: also return (k, v) laid out (B, S, Hkv, D) for the cache.
+    """
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, x, cfg.rope_theta, positions, px, batch_entry,
+                           n_heads=H)
+    if kv_override is not None:
+        k, v = kv_override
+    head_entry = px.shard_if(H, px.model_axis)
+    kv_entry = px.shard_if(Hkv, px.model_axis)
+    if px.seq_shard_attn or head_entry is None:
+        k = px.constrain(k, batch_entry, None, None, None)
+        v = px.constrain(v, batch_entry, None, None, None)
+        out = flash_seq(q, _expand_kv(k, H), _expand_kv(v, H), causal=causal,
+                        px=px, batch_entry=batch_entry)
+    else:
+        q = px.constrain(q, batch_entry, head_entry, None, None)
+        k = px.constrain(k, batch_entry, kv_entry, None, None)
+        v = px.constrain(v, batch_entry, kv_entry, None, None)
+        out = flash_heads(q, _expand_kv(k, H), _expand_kv(v, H), causal=causal,
+                          px=px, batch_entry=batch_entry, head_entry=head_entry)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(COMPUTE_DT))
+    # land directly in the sequence-parallel layout (reduce-scatter, not
+    # all-reduce): never materialize a full-S unsharded residual
+    y = px.constrain(y, batch_entry, px.seq_entry(S), None)
+    if return_kv:
+        return y, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    return y
+
+
+def gqa_decode(p, x, cache, pos, *, cfg, px: ParallelCtx, batch_entry,
+               seq_entry, cross: bool = False):
+    """One-token decode. x: (B, 1, d). cache: dict(k,v): (B,Smax,Hkv,Dh).
+
+    Returns (y, new_cache). For cross-attention (enc-dec) the cache is
+    read-only.
+    """
+    B = x.shape[0]
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, x, cfg.rope_theta, positions, px, batch_entry,
+                           n_heads=H)
+    if not cross:
+        k_new = k.transpose(0, 2, 1, 3).astype(cache["k"].dtype)  # (B,1,Hkv,D)
+        v_new = v.transpose(0, 2, 1, 3).astype(cache["v"].dtype)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos_scalar(pos), 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos_scalar(pos), 1)
+        cache = {"k": ck, "v": cv}
+    out = decode_attend(q[:, :, 0, :], cache["k"], cache["v"],
+                        pos_scalar(pos), px=px, batch_entry=batch_entry,
+                        seq_entry=seq_entry)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(COMPUTE_DT))[:, None, :]
+    return px.constrain(y, batch_entry, None, None), cache
+
+
+def pos_scalar(pos):
+    return pos if pos.ndim == 0 else pos.reshape(-1)[0]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def mla_fwd(p, x, *, cfg, px: ParallelCtx, batch_entry, positions=None,
+            return_latent: bool = False):
+    """MLA train/prefill: materialize per-head K/V from the latent, then
+    run head-sharded flash (128 heads divide the model axis)."""
+    c = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(COMPUTE_DT))
+    q = jnp.einsum("bsr,rhk->bhsk", cq, p["w_uq"].astype(COMPUTE_DT))
+    q_nope, q_rope = jnp.split(q, [c.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(COMPUTE_DT))
+    ckv, k_rope = jnp.split(ckv_full, [c.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, None, :, :], positions[:, None, :],
+                        cfg.rope_theta)  # (B,1,S,rope)
+    k_nope = jnp.einsum("bsr,rhk->bhsk", ckv, p["w_uk"].astype(COMPUTE_DT))
+    v = jnp.einsum("bsr,rhk->bhsk", ckv, p["w_uv"].astype(COMPUTE_DT))
+
+    head_entry = px.shard_if(H, px.model_axis)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, H, S, c.qk_rope_head_dim))], -1)
+    qf = px.constrain(qf, batch_entry, head_entry, None, None)
+    kf = px.constrain(kf, batch_entry, head_entry, None, None)
+    v = px.constrain(v, batch_entry, head_entry, None, None)
+    out = flash_heads(qf, kf, v, causal=True, px=px, batch_entry=batch_entry,
+                      head_entry=head_entry)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(COMPUTE_DT))
+    y = px.constrain(y, batch_entry, px.seq_entry(S), None)
+    if return_latent:
+        return y, ckv_full  # (B,S, kv_rank + rope) — the decode cache line
+    return y
+
+
+def mla_decode(p, x, cache, pos, *, cfg, px: ParallelCtx, batch_entry,
+               seq_entry):
+    """MLA decode with weight absorption: scores live in the latent space,
+    cache is (B, Smax, kv_rank + rope) — 576 floats/token, head-free."""
+    c = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 else pos
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(COMPUTE_DT))
+    q = jnp.einsum("bsr,rhk->bhsk", cq, p["w_uq"].astype(COMPUTE_DT))
+    q_nope, q_rope = jnp.split(q[:, :, 0, :], [c.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope[:, :, None, :], positions[:, None, :],
+                        cfg.rope_theta)[:, :, 0, :]
+
+    new_line = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(COMPUTE_DT))
+    rp = pos_scalar(pos)
+    new_rope = apply_rope(
+        new_line[:, :, c.kv_lora_rank:][:, None, :, :],
+        positions[:, None, :], cfg.rope_theta)[:, 0]
+    new_line = jnp.concatenate([new_line[:, :, :c.kv_lora_rank], new_rope], -1)
+    cache = jax.lax.dynamic_update_slice_in_dim(
+        cache, new_line.astype(cache.dtype), rp, 1)
+
+    lat, k_rope = cache[..., :c.kv_lora_rank], cache[..., c.kv_lora_rank:]
+    # absorb W_uk into q: (B,H,nope) x (r,H,nope) -> (B,H,r)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope, p["w_uk"].astype(COMPUTE_DT))
+    scale = (c.qk_nope_head_dim + c.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, lat.astype(COMPUTE_DT))
+         + jnp.einsum("bhk,bsk->bhs", q_rope, k_rope.astype(COMPUTE_DT)))
+    s = s.astype(jnp.float32) * scale
+    valid = jnp.arange(cache.shape[1])[None, None, :] <= rp
+    s = jnp.where(valid, s, NEG_INF)
+    # Skv is model-sharded (flash-decode): heads stay replicated here
+    s = px.constrain(s, batch_entry, None, seq_entry)
+    pw = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DT)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", pw, lat.astype(COMPUTE_DT))
+    out = jnp.einsum("bhr,rhk->bhk", ctx_lat, p["w_uv"].astype(COMPUTE_DT))
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(COMPUTE_DT))[:, None, :]
+    return px.constrain(y, batch_entry, None, None), cache

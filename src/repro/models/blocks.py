@@ -1,0 +1,153 @@
+"""Per-layer block assembly for each architecture family."""
+from __future__ import annotations
+
+import types
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (COMPUTE_DT, init_mlp, init_rmsnorm, mlp_fwd,
+                                 rmsnorm)
+from repro.parallel.ctx import ParallelCtx
+
+
+def attn_cfg_view(cfg, d_model=None, n_heads=None, n_kv=None, head_dim=None):
+    """A lightweight view with the attention-relevant fields overridden
+    (used by zamba2's shared block, which attends at 2*d_model)."""
+    v = types.SimpleNamespace()
+    v.n_heads = n_heads or cfg.n_heads
+    v.n_kv_heads = n_kv or cfg.n_kv_heads
+    v.rope_theta = cfg.rope_theta
+    v.norm_eps = cfg.norm_eps
+    hd = head_dim or ((d_model or cfg.d_model) // v.n_heads)
+    v.resolved_head_dim = hd
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE transformer block
+# ---------------------------------------------------------------------------
+
+
+def init_tf_block(key, cfg, moe_layer: bool):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"ln1": init_rmsnorm(d), "ln2": init_rmsnorm(d)}
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(ks[0], d, cfg.n_heads, cfg.mla)
+    else:
+        p["attn"] = attn.init_gqa(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.resolved_head_dim, cfg.qkv_bias)
+    if moe_layer:
+        p["moe"] = moe_mod.init_moe(ks[1], d, cfg.moe)
+    else:
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff)
+    return p
+
+
+def tf_block_fwd(p, x, *, cfg, px: ParallelCtx, batch_entry, causal=True,
+                 router_bias=None, placement=None, return_kv=False):
+    """Full-sequence block (train / prefill). Returns (x, kv_or_None, metrics)."""
+    sp = px.seq_entry(x.shape[1])
+    xa = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    kv = None
+    if cfg.mla is not None:
+        if return_kv:
+            y, kv = attn.mla_fwd(p["attn"], xa, cfg=cfg, px=px,
+                                 batch_entry=batch_entry, return_latent=True)
+        else:
+            y = attn.mla_fwd(p["attn"], xa, cfg=cfg, px=px,
+                             batch_entry=batch_entry)
+    else:
+        if return_kv:
+            y, kv = attn.gqa_fwd(p["attn"], xa, cfg=cfg, px=px, causal=causal,
+                                 batch_entry=batch_entry, return_kv=True)
+        else:
+            y = attn.gqa_fwd(p["attn"], xa, cfg=cfg, px=px, causal=causal,
+                             batch_entry=batch_entry)
+    x = px.constrain(x + y, batch_entry, sp, None)
+    xm = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    metrics = {}
+    if "moe" in p:
+        y2, metrics = moe_mod.moe_fwd(p["moe"], xm, m=cfg.moe, px=px,
+                                      batch_entry=batch_entry,
+                                      router_bias=router_bias,
+                                      placement=placement)
+    else:
+        y2 = mlp_fwd(p["mlp"], xm, px, batch_entry)
+    return x + y2, kv, metrics
+
+
+def tf_block_decode(p, x, cache, pos, *, cfg, px: ParallelCtx, batch_entry,
+                    seq_entry, router_bias=None, placement=None):
+    """Single-token block step. cache: {"k","v"} or MLA latent array."""
+    xa = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla is not None:
+        y, cache = attn.mla_decode(p["attn"], xa, cache, pos, cfg=cfg, px=px,
+                                   batch_entry=batch_entry, seq_entry=seq_entry)
+    else:
+        y, cache = attn.gqa_decode(p["attn"], xa, cache, pos, cfg=cfg, px=px,
+                                   batch_entry=batch_entry, seq_entry=seq_entry)
+    x = x + y
+    xm = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        y2, _ = moe_mod.moe_fwd(p["moe"], xm, m=cfg.moe, px=px,
+                                batch_entry=batch_entry,
+                                router_bias=router_bias, placement=placement)
+    else:
+        y2 = mlp_fwd(p["mlp"], xm, px, batch_entry)
+    return x + y2, cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 shared attention block (weights shared across invocations)
+# ---------------------------------------------------------------------------
+
+
+def init_shared_block(key, cfg):
+    d2 = 2 * cfg.d_model
+    ks = jax.random.split(key, 4)
+    from repro.models.layers import _init
+    acfg = attn_cfg_view(cfg, d_model=d2)
+    return {
+        "ln1": init_rmsnorm(d2),
+        "ln2": init_rmsnorm(d2),
+        "attn": attn.init_gqa(ks[0], d2, cfg.n_heads, cfg.n_kv_heads,
+                              acfg.resolved_head_dim, False),
+        "mlp": init_mlp(ks[1], d2, cfg.d_ff),
+        "w_down": _init(ks[2], (d2, cfg.d_model)),
+    }
+
+
+def shared_block_fwd(p, h, emb0, *, cfg, px, batch_entry, return_kv=False):
+    d2cfg = attn_cfg_view(cfg, d_model=2 * cfg.d_model)
+    xin = jnp.concatenate([h, emb0], axis=-1)
+    xa = rmsnorm(p["ln1"], xin, cfg.norm_eps)
+    kv = None
+    if return_kv:
+        y, kv = attn.gqa_fwd(p["attn"], xa, cfg=d2cfg, px=px, causal=True,
+                             batch_entry=batch_entry, return_kv=True)
+    else:
+        y = attn.gqa_fwd(p["attn"], xa, cfg=d2cfg, px=px, causal=True,
+                         batch_entry=batch_entry)
+    xin = xin + y
+    xm = rmsnorm(p["ln2"], xin, cfg.norm_eps)
+    xin = xin + mlp_fwd(p["mlp"], xm, px, batch_entry)
+    delta = jnp.einsum("bsd,de->bse", xin, p["w_down"].astype(COMPUTE_DT))
+    return h + px.constrain(delta, batch_entry, None, None), kv
+
+
+def shared_block_decode(p, h, emb0, cache, pos, *, cfg, px, batch_entry,
+                        seq_entry):
+    d2cfg = attn_cfg_view(cfg, d_model=2 * cfg.d_model)
+    xin = jnp.concatenate([h, emb0], axis=-1)
+    xa = rmsnorm(p["ln1"], xin, cfg.norm_eps)
+    y, cache = attn.gqa_decode(p["attn"], xa, cache, pos, cfg=d2cfg, px=px,
+                               batch_entry=batch_entry, seq_entry=seq_entry)
+    xin = xin + y
+    xm = rmsnorm(p["ln2"], xin, cfg.norm_eps)
+    xin = xin + mlp_fwd(p["mlp"], xm, px, batch_entry)
+    delta = jnp.einsum("bsd,de->bse", xin, p["w_down"].astype(COMPUTE_DT))
+    return h + px.constrain(delta, batch_entry, None, None), cache

@@ -1,0 +1,188 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The speech/text frontend is a stub per the assignment: the encoder
+consumes precomputed frame embeddings (B, S, d_frame). Encoder blocks are
+bidirectional self-attention + MLP; decoder blocks add causal self-attn
+and cross-attn over the encoder output. RoPE replaces the released
+model's relative-position scheme (DESIGN.md §Adaptations).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (COMPUTE_DT, _init, embed_fwd, init_embed,
+                                 init_mlp, init_rmsnorm, lm_head_fwd,
+                                 mlp_fwd, rmsnorm, softmax_xent)
+from repro.parallel.ctx import ParallelCtx
+
+FRAME_DIM = 1024  # stub frontend output dim
+
+
+def _init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model),
+        "attn": attn.init_gqa(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.resolved_head_dim, False),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model),
+        "ln3": init_rmsnorm(cfg.d_model),
+        "self_attn": attn.init_gqa(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.resolved_head_dim,
+                                   False),
+        "cross_attn": attn.init_gqa(ks[1], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.resolved_head_dim,
+                                    False),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(key, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(key, 5)
+    ek = jax.random.split(ks[0], cfg.n_layers)
+    dk = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "src_proj": _init(ks[2], (FRAME_DIM, cfg.d_model)),
+        "embed": init_embed(ks[3], cfg.padded_vocab, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: _init_enc_block(k, cfg))(ek),
+        "dec_layers": jax.vmap(lambda k: _init_dec_block(k, cfg))(dk),
+        "enc_norm": init_rmsnorm(cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg, px: ParallelCtx, batch_entry, train=False):
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(COMPUTE_DT),
+                   params["src_proj"].astype(COMPUTE_DT))
+    x = px.constrain(x, batch_entry, None, None)
+
+    def body(xc, p_layer):
+        xa = rmsnorm(p_layer["ln1"], xc, cfg.norm_eps)
+        xc = xc + attn.gqa_fwd(p_layer["attn"], xa, cfg=cfg, px=px,
+                               causal=False, batch_entry=batch_entry)
+        xm = rmsnorm(p_layer["ln2"], xc, cfg.norm_eps)
+        return xc + mlp_fwd(p_layer["mlp"], xm, px, batch_entry), 0
+
+    fn = body
+    if train and px.remat != "none":
+        fn = jax.checkpoint(body)
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block_full(p, x, enc_kv, cfg, px, batch_entry, collect_cache):
+    xa = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    kv = None
+    if collect_cache:
+        y, kv = attn.gqa_fwd(p["self_attn"], xa, cfg=cfg, px=px, causal=True,
+                             batch_entry=batch_entry, return_kv=True)
+    else:
+        y = attn.gqa_fwd(p["self_attn"], xa, cfg=cfg, px=px, causal=True,
+                         batch_entry=batch_entry)
+    x = x + y
+    xc = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + attn.gqa_fwd(p["cross_attn"], xc, cfg=cfg, px=px, causal=False,
+                         batch_entry=batch_entry, kv_override=enc_kv)
+    xm = rmsnorm(p["ln3"], x, cfg.norm_eps)
+    return x + mlp_fwd(p["mlp"], xm, px, batch_entry), kv
+
+
+def _enc_cross_kv(p_layer, enc_out, cfg, px, batch_entry):
+    """Project encoder output to this decoder layer's cross K/V."""
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out,
+                   p_layer["cross_attn"]["wk"].astype(COMPUTE_DT))
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out,
+                   p_layer["cross_attn"]["wv"].astype(COMPUTE_DT))
+    return k, v
+
+
+def encdec_loss(params, batch, extras, cfg, px: ParallelCtx):
+    frames, tokens = batch["frames"], batch["tokens"]
+    B, S = tokens.shape
+    batch_entry = px.batch_spec(B)
+    enc_out = encode(params, frames, cfg, px, batch_entry, train=True)
+    x = embed_fwd(params["embed"], tokens, px, batch_entry)
+
+    def body(xc, p_layer):
+        kv = _enc_cross_kv(p_layer, enc_out, cfg, px, batch_entry)
+        out, _ = _dec_block_full(p_layer, xc, kv, cfg, px, batch_entry, False)
+        return out, 0
+
+    fn = jax.checkpoint(body) if px.remat != "none" else body
+    x, _ = jax.lax.scan(fn, x, params["dec_layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head_fwd(params["embed"], x, px, batch_entry)
+    mask = batch.get("loss_mask")
+    loss = softmax_xent(logits[:, :-1], tokens[:, 1:],
+                        mask[:, 1:] if mask is not None else None)
+    return loss, {"xent": loss}
+
+
+def encdec_prefill(params, batch, cfg, px: ParallelCtx, cache_len: int):
+    """Encode the source and precompute per-layer cross K/V; allocate an
+    empty self-attention cache of cache_len."""
+    frames = batch["frames"]
+    B = frames.shape[0]
+    batch_entry = px.batch_spec(B)
+    enc_out = encode(params, frames, cfg, px, batch_entry)
+
+    def body(_, p_layer):
+        k, v = _enc_cross_kv(p_layer, enc_out, cfg, px, batch_entry)
+        return 0, {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+
+    _, cross = jax.lax.scan(body, 0, params["dec_layers"])
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    self_cache = {
+        "k": jnp.zeros((L, B, cache_len, Hkv, Dh), COMPUTE_DT),
+        "v": jnp.zeros((L, B, cache_len, Hkv, Dh), COMPUTE_DT),
+    }
+    # BOS logits
+    logits = lm_head_fwd(params["embed"],
+                         rmsnorm(params["final_norm"],
+                                 enc_out[:, -1:, :], cfg.norm_eps),
+                         px, batch_entry)
+    return {"self": self_cache, "cross": cross}, logits
+
+
+def encdec_decode(params, cache, tokens, pos, extras, cfg, px: ParallelCtx):
+    B = tokens.shape[0]
+    batch_entry = px.batch_spec(B)
+    x = embed_fwd(params["embed"], tokens[:, None], px, batch_entry)
+    S_self = cache["self"]["k"].shape[2]
+    S_cross = cache["cross"]["k"].shape[2]
+    seq_entry = px.shard_if(S_self, px.model_axis)
+    cross_entry = px.shard_if(S_cross, px.model_axis)
+
+    def body(xc, xs):
+        p_layer, self_c, cross_c = xs
+        xa = rmsnorm(p_layer["ln1"], xc, cfg.norm_eps)
+        y, self_c = attn.gqa_decode(p_layer["self_attn"], xa, self_c, pos,
+                                    cfg=cfg, px=px, batch_entry=batch_entry,
+                                    seq_entry=seq_entry)
+        xc = xc + y
+        xb = rmsnorm(p_layer["ln2"], xc, cfg.norm_eps)
+        # cross attention: cache is read-only, attend over full source
+        y, _ = attn.gqa_decode(p_layer["cross_attn"], xb, cross_c,
+                               jnp.int32(S_cross - 1), cfg=cfg, px=px,
+                               batch_entry=batch_entry, seq_entry=cross_entry,
+                               cross=True)
+        xc = xc + y
+        xm = rmsnorm(p_layer["ln3"], xc, cfg.norm_eps)
+        xc = xc + mlp_fwd(p_layer["mlp"], xm, px, batch_entry)
+        return xc, self_c
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head_fwd(params["embed"], x, px, batch_entry)[:, 0, :]
+    return {"self": new_self, "cross": cache["cross"]}, logits

@@ -1,0 +1,179 @@
+"""Shared building blocks: norms, MLPs, RoPE, embeddings, cross-entropy.
+
+All modules are functional: ``init_*`` returns a param dict, ``*_fwd``
+consumes it. Params are stored bf16; norms/softmax/losses compute fp32.
+
+REPRO_FORCE_F32=1 switches params+compute to fp32 (same shapes). Used by
+the dry-run memory probe: XLA:CPU emulates bf16 via f32 buffers, so a
+bf16 compile OVERSTATES the TPU footprint; an f32 compile has no
+emulation converts and its peak/2 bounds the true bf16 peak (intentional
+f32 buffers — softmax stats, norms — are small). See dryrun.py.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.ctx import ParallelCtx
+
+_FORCE_F32 = os.environ.get("REPRO_FORCE_F32", "0") == "1"
+PARAM_DT = jnp.float32 if _FORCE_F32 else jnp.bfloat16
+COMPUTE_DT = jnp.float32 if _FORCE_F32 else jnp.bfloat16
+
+
+def _init(key, shape, scale=None, dtype=PARAM_DT):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), PARAM_DT)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(k1, (d, f)),
+        "w_up": _init(k2, (d, f)),
+        "w_down": _init(k3, (f, d)),
+    }
+
+
+def mlp_fwd(p, x, px: ParallelCtx, batch_entry=None):
+    """SwiGLU. Hidden dim sharded over the model axis (Megatron TP)."""
+    f = p["w_gate"].shape[-1]
+    fspec = px.shard_if(f, px.model_axis)
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(COMPUTE_DT))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(COMPUTE_DT))
+    h = px.constrain(h, batch_entry, None, fspec)
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(COMPUTE_DT) * u
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(COMPUTE_DT))
+    # reduce-scatter into the sequence-parallel layout (never a full-S
+    # unsharded residual)
+    return px.constrain(out, batch_entry, px.seq_entry(out.shape[1]), None)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d: int, tie: bool = False):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": _init(k1, (vocab, d), scale=0.02)}
+    if not tie:
+        p["lm_head"] = _init(k2, (d, vocab))
+    return p
+
+
+def embed_fwd(p, tokens, px: ParallelCtx, batch_entry=None):
+    out = jnp.take(p["embedding"].astype(COMPUTE_DT), tokens, axis=0)
+    return px.constrain(out, batch_entry, px.seq_entry(out.shape[1]), None)
+
+
+def lm_head_fwd(p, x, px: ParallelCtx, batch_entry=None):
+    w = p.get("lm_head")
+    if w is None:
+        w = p["embedding"].T
+    v = w.shape[-1]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(COMPUTE_DT))
+    return px.constrain(logits, batch_entry, None, px.shard_if(v, px.model_axis))
+
+
+def chunked_xent(h, p_embed, labels, mask, px: ParallelCtx, batch_entry,
+                 chunk: int = 1024):
+    """Sequence-chunked cross-entropy: the (B, chunk, V) logits are
+    (re)computed per chunk under jax.checkpoint, so the full (B, S, V)
+    fp32 logit tensor never materializes (§Perf: memory-term iteration).
+
+    Returns (sum_nll, sum_mask) so the caller can normalize."""
+    w = p_embed.get("lm_head")
+    if w is None:
+        w = p_embed["embedding"].T
+    B, S, D = h.shape
+    c = min(chunk, S)
+    n = S // c
+    rem = S - n * c
+    vspec = px.shard_if(w.shape[-1], px.model_axis)
+
+    @jax.checkpoint
+    def piece(hc, lc, mc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, w.astype(COMPUTE_DT))
+        logits = px.constrain(logits, batch_entry, None, vspec)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, lc, mc = inp
+        s, k = piece(hc, lc, mc)
+        return (tot + s, cnt + k), None
+
+    resh = lambda x: x[:, : n * c].reshape(B, n, c, *x.shape[2:]).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)),
+        (resh(h), resh(labels), resh(mask.astype(jnp.float32))))
+    if rem:
+        s, k = piece(h[:, n * c:], labels[:, n * c:],
+                     mask[:, n * c:].astype(jnp.float32))
+        tot, cnt = tot + s, cnt + k
+    return tot, cnt
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Cross-entropy in fp32 over a (possibly vocab-sharded) last dim.
+
+    Reductions over the sharded vocab dim lower to small all-reduces under
+    GSPMD, so the full logit tensor is never gathered.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,429 @@
+"""Decoder-only LM assembly: init / loss / prefill / decode for every
+decoder-only family (dense, MoE, MLA+MoE, RWKV6, Mamba2-hybrid, VLM).
+
+Layers are stacked (L, ...) and driven by ``lax.scan`` so the compiled
+HLO contains one block body regardless of depth; training wraps the body
+in ``jax.checkpoint`` (remat). Encoder-decoder (seamless) lives in
+repro/models/encdec.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as r6
+from repro.models.layers import (COMPUTE_DT, PARAM_DT, _init, chunked_xent,
+                                 embed_fwd, init_embed, init_rmsnorm,
+                                 lm_head_fwd, rmsnorm, softmax_xent)
+from repro.parallel.ctx import ParallelCtx
+
+MTP_WEIGHT = 0.3
+MOE_AUX_WEIGHT = 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    if cfg.encoder_decoder:
+        from repro.models.encdec import init_encdec
+        return init_encdec(key, cfg)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": init_embed(ks[0], cfg.padded_vocab, cfg.d_model,
+                            cfg.tie_embeddings),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if cfg.rwkv is not None:
+        lk = jax.random.split(ks[1], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: r6.init_rwkv_block(k, cfg.d_model, cfg))(lk)
+    elif cfg.ssm is not None:  # zamba2 hybrid
+        lk = jax.random.split(ks[1], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: m2.init_mamba2(k, cfg.d_model, cfg))(lk)
+        p["shared_block"] = blocks.init_shared_block(ks[2], cfg)
+    elif cfg.moe is not None:
+        fk = cfg.moe.first_k_dense
+        if fk:
+            dk = jax.random.split(ks[3], fk)
+            p["dense_layers"] = jax.vmap(
+                lambda k: blocks.init_tf_block(k, cfg, moe_layer=False))(dk)
+        lk = jax.random.split(ks[1], cfg.n_layers - fk)
+        p["layers"] = jax.vmap(
+            lambda k: blocks.init_tf_block(k, cfg, moe_layer=True))(lk)
+    else:
+        lk = jax.random.split(ks[1], cfg.n_layers)
+        p["layers"] = jax.vmap(
+            lambda k: blocks.init_tf_block(k, cfg, moe_layer=False))(lk)
+    if cfg.n_vision_tokens:
+        p["vision_proj"] = _init(ks[4], (cfg.d_model, cfg.d_model))
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": _init(ks[5], (2 * cfg.d_model, cfg.d_model)),
+            "block": blocks.init_tf_block(ks[6], cfg, moe_layer=False),
+            "norm": init_rmsnorm(cfg.d_model),
+        }
+    return p
+
+
+def init_extras(cfg) -> Dict[str, Any]:
+    """Mutable non-gradient state: aux-free router bias + GAIA placement."""
+    if cfg.moe is None:
+        return {}
+    n_moe = cfg.n_layers - cfg.moe.first_k_dense
+    E = cfg.moe.num_experts
+    return {
+        "router_bias": jnp.zeros((n_moe, E), jnp.float32),
+        "placement": jnp.tile(jnp.arange(E, dtype=jnp.int32), (n_moe, 1)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Backbone forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg, px, batch_entry):
+    x = embed_fwd(params["embed"], batch["tokens"], px, batch_entry)
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        v = jnp.einsum("bvd,de->bve", batch["vision_embeds"].astype(COMPUTE_DT),
+                       params["vision_proj"].astype(COMPUTE_DT))
+        x = jnp.concatenate([v, x[:, cfg.n_vision_tokens:, :]], axis=1)
+    return px.constrain(x, batch_entry, px.seq_entry(x.shape[1]), None)
+
+
+def _maybe_remat(fn, px, train):
+    if train and px.remat != "none":
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if px.remat == "dots" else None)
+        return jax.checkpoint(fn, policy=policy)
+    return fn
+
+
+def backbone_fwd(params, x, cfg, px: ParallelCtx, batch_entry, extras,
+                 *, train: bool, collect_cache: bool = False):
+    """Returns (h, cache_or_None, metrics)."""
+    B, S, _ = x.shape
+
+    if cfg.rwkv is not None:
+        H, N = cfg.n_heads, cfg.rwkv.head_dim
+        zero = {
+            "state": jnp.zeros((B, H, N, N), jnp.float32),
+            "shift_a": jnp.zeros((B, cfg.d_model), COMPUTE_DT),
+            "shift_f": jnp.zeros((B, cfg.d_model), COMPUTE_DT),
+        }
+
+        def body(xcur, p_layer):
+            out, carry = r6.rwkv_block_fwd(p_layer, xcur, zero, cfg=cfg,
+                                           px=px, batch_entry=batch_entry)
+            return out, (carry if collect_cache else 0)
+
+        h, caches = jax.lax.scan(_maybe_remat(body, px, train), x,
+                                 params["layers"])
+        return h, (caches if collect_cache else None), {}
+
+    if cfg.ssm is not None:  # zamba2
+        s = cfg.ssm
+        di = s.expand * cfg.d_model
+        H = di // s.head_dim
+        n_inv = (cfg.n_layers + cfg.shared_every - 1) // cfg.shared_every
+        d2 = 2 * cfg.d_model
+        hd2 = d2 // cfg.n_heads
+        emb0 = x
+        zero_m = {
+            "ssm": jnp.zeros((B, H, s.head_dim, s.d_state), jnp.float32),
+            "conv": jnp.zeros((B, s.d_conv - 1, di + 2 * s.d_state), COMPUTE_DT),
+        }
+        k_stack = jnp.zeros((n_inv, B, S, cfg.n_kv_heads, hd2), COMPUTE_DT)
+        v_stack = jnp.zeros_like(k_stack)
+
+        def body(carry, xs):
+            xcur, ks, vs, inv = carry
+            p_m, i = xs
+
+            def with_shared(args):
+                xc, ks, vs, inv = args
+                if collect_cache:
+                    xc, kv = blocks.shared_block_fwd(
+                        params["shared_block"], xc, emb0, cfg=cfg, px=px,
+                        batch_entry=batch_entry, return_kv=True)
+                    ks = jax.lax.dynamic_update_slice_in_dim(
+                        ks, kv[0].astype(COMPUTE_DT)[None], inv, 0)
+                    vs = jax.lax.dynamic_update_slice_in_dim(
+                        vs, kv[1].astype(COMPUTE_DT)[None], inv, 0)
+                else:
+                    xc, _ = blocks.shared_block_fwd(
+                        params["shared_block"], xc, emb0, cfg=cfg, px=px,
+                        batch_entry=batch_entry)
+                return xc, ks, vs, inv + 1
+
+            xcur, ks, vs, inv = jax.lax.cond(
+                i % cfg.shared_every == 0, with_shared, lambda a: a,
+                (xcur, ks, vs, inv))
+            xcur, mcarry = m2.mamba2_fwd(p_m, xcur, zero_m, cfg=cfg, px=px,
+                                         batch_entry=batch_entry)
+            return (xcur, ks, vs, inv), (mcarry if collect_cache else 0)
+
+        (h, ks, vs, _), mstates = jax.lax.scan(
+            _maybe_remat(body, px, train), (x, k_stack, v_stack, jnp.int32(0)),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        cache = ({"mamba": mstates, "attn_k": ks, "attn_v": vs}
+                 if collect_cache else None)
+        return h, cache, {}
+
+    # ---- transformer stacks (dense / moe / mla) -------------------------
+    metrics: Dict[str, Any] = {}
+    cache_parts = []
+    sp = px.seq_entry(S)
+
+    def run_stack(xcur, stack, moe_stack: bool):
+        rb = extras.get("router_bias") if moe_stack else None
+        pl = extras.get("placement") if moe_stack else None
+
+        def body(xc, xs):
+            if moe_stack and rb is not None:
+                p_layer, rb_row, pl_row = xs
+            else:
+                p_layer, rb_row, pl_row = xs, None, None
+            out, kv, met = blocks.tf_block_fwd(
+                p_layer, xc, cfg=cfg, px=px, batch_entry=batch_entry,
+                router_bias=rb_row, placement=pl_row,
+                return_kv=collect_cache)
+            out = px.constrain(out, batch_entry, sp, None)
+            ys = {}
+            if collect_cache:
+                ys["kv"] = kv
+            if moe_stack and met:
+                ys["counts"] = met["expert_counts"]
+                ys["aux"] = met["moe_aux_loss"]
+                ys["dropped"] = met["moe_dropped"]
+            return out, ys
+
+        xs = (stack, rb, pl) if (moe_stack and rb is not None) else stack
+        return jax.lax.scan(_maybe_remat(body, px, train), xcur, xs)
+
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        x, ys = run_stack(x, params["dense_layers"], False)
+        if collect_cache:
+            cache_parts.append(("dense", ys["kv"]))
+    x, ys = run_stack(x, params["layers"], cfg.moe is not None)
+    if collect_cache:
+        cache_parts.append(("main", ys["kv"]))
+    if cfg.moe is not None and "counts" in ys:
+        metrics["expert_counts"] = ys["counts"]  # (Lmoe, E)
+        metrics["moe_aux_loss"] = ys["aux"].mean()
+        metrics["moe_dropped"] = ys["dropped"].sum()
+
+    cache = None
+    if collect_cache:
+        cache = {name: kv for name, kv in cache_parts}
+    return x, cache, metrics
+
+
+# ---------------------------------------------------------------------------
+# Loss (train)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, extras, cfg, px: ParallelCtx):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    batch_entry = px.batch_spec(B)
+    x = _embed_inputs(params, batch, cfg, px, batch_entry)
+    h, _, metrics = backbone_fwd(params, x, cfg, px, batch_entry, extras,
+                                 train=True)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(tokens, jnp.float32)
+    if px.loss_chunk:
+        tot, cnt = chunked_xent(h[:, :-1], params["embed"], tokens[:, 1:],
+                                mask[:, 1:], px, batch_entry, px.loss_chunk)
+        loss = tot / jnp.maximum(cnt, 1.0)
+    else:
+        logits = lm_head_fwd(params["embed"], h, px, batch_entry)
+        loss = softmax_xent(logits[:, :-1], tokens[:, 1:], mask[:, 1:])
+    metrics["xent"] = loss
+
+    if cfg.mtp_depth and "mtp" in params:
+        # Multi-token prediction (DeepSeek-V3): predict t+2 from
+        # concat(h_t, emb(tok_{t+1})) through one extra block.
+        emb_next = embed_fwd(params["embed"], tokens[:, 1:], px, batch_entry)
+        hin = jnp.concatenate([rmsnorm(params["mtp"]["norm"], h[:, :-1],
+                                       cfg.norm_eps), emb_next], axis=-1)
+        hm = jnp.einsum("bsd,de->bse", hin,
+                        params["mtp"]["proj"].astype(COMPUTE_DT))
+        hm, _, _ = blocks.tf_block_fwd(params["mtp"]["block"], hm, cfg=cfg,
+                                       px=px, batch_entry=batch_entry)
+        if px.loss_chunk:
+            tot, cnt = chunked_xent(hm[:, :-1], params["embed"],
+                                    tokens[:, 2:], mask[:, 2:], px,
+                                    batch_entry, px.loss_chunk)
+            mtp_loss = tot / jnp.maximum(cnt, 1.0)
+        else:
+            lm2 = lm_head_fwd(params["embed"], hm, px, batch_entry)
+            mtp_loss = softmax_xent(lm2[:, :-1], tokens[:, 2:], mask[:, 2:])
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + MTP_WEIGHT * mtp_loss
+
+    if "moe_aux_loss" in metrics:
+        loss = loss + MOE_AUX_WEIGHT * metrics["moe_aux_loss"]
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg, px: ParallelCtx, cache_len: int):
+    """Run the full prompt, return (cache, last_logits).
+
+    Attention caches are allocated at ``cache_len`` (>= prompt length) and
+    laid out sequence-sharded (see cache_specs)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    batch_entry = px.batch_spec(B)
+    x = _embed_inputs(params, batch, cfg, px, batch_entry)
+    h, cache, _ = backbone_fwd(params, x, cfg, px, batch_entry,
+                               init_extras(cfg), train=False,
+                               collect_cache=True)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_head_fwd(params["embed"], h[:, -1:, :], px, batch_entry)
+    cache = _pad_cache_to(cache, cfg, px, cache_len, batch_entry)
+    return cache, logits
+
+
+def _pad_cache_to(cache, cfg, px, cache_len, batch_entry):
+    """Pad prefill caches along the sequence dim up to cache_len."""
+    def pad(path_leaf):
+        return path_leaf
+
+    if cfg.rwkv is not None or cfg.encoder_decoder:
+        return cache
+
+    def pad_seq(arr, axis):
+        S = arr.shape[axis]
+        if S >= cache_len:
+            return arr
+        pad_width = [(0, 0)] * arr.ndim
+        pad_width[axis] = (0, cache_len - S)
+        return jnp.pad(arr, pad_width)
+
+    if cfg.ssm is not None:
+        cache["attn_k"] = pad_seq(cache["attn_k"], 2)
+        cache["attn_v"] = pad_seq(cache["attn_v"], 2)
+        return cache
+    out = {}
+    for name, kv in cache.items():
+        if cfg.mla is not None:
+            out[name] = pad_seq(kv, 2)  # latent (L,B,S,r)
+        else:
+            out[name] = {"k": pad_seq(kv[0], 2), "v": pad_seq(kv[1], 2)}
+    return out
+
+
+def decode_step(params, cache, tokens, pos, extras, cfg, px: ParallelCtx):
+    """One greedy decode step. tokens: (B,) int32; pos: scalar int32.
+
+    Returns (new_cache, logits (B, V))."""
+    B = tokens.shape[0]
+    batch_entry = px.batch_spec(B)
+    x = embed_fwd(params["embed"], tokens[:, None], px, batch_entry)
+
+    if cfg.rwkv is not None:
+        def body(xc, xs):
+            p_layer, c = xs
+            out, c2 = r6.rwkv_decode_step(p_layer, xc, c, cfg=cfg, px=px,
+                                          batch_entry=batch_entry)
+            return out, c2
+        h, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+
+    elif cfg.ssm is not None:
+        emb0 = x
+        seq_entry = _decode_seq_entry(cfg, cache, px, B)
+
+        def body(carry, xs):
+            xc, ks, vs, inv = carry
+            p_m, mcache, i = xs
+
+            def with_shared(args):
+                xc, ks, vs, inv = args
+                c = {"k": jax.lax.dynamic_index_in_dim(ks, inv, 0, False),
+                     "v": jax.lax.dynamic_index_in_dim(vs, inv, 0, False)}
+                xc, c = blocks.shared_block_decode(
+                    params["shared_block"], xc, emb0, c, pos, cfg=cfg, px=px,
+                    batch_entry=batch_entry, seq_entry=seq_entry)
+                ks = jax.lax.dynamic_update_slice_in_dim(ks, c["k"][None], inv, 0)
+                vs = jax.lax.dynamic_update_slice_in_dim(vs, c["v"][None], inv, 0)
+                return xc, ks, vs, inv + 1
+
+            xc, ks, vs, inv = jax.lax.cond(i % cfg.shared_every == 0,
+                                           with_shared, lambda a: a,
+                                           (xc, ks, vs, inv))
+            xc, m2c = m2.mamba2_fwd(p_m, xc, mcache, cfg=cfg, px=px,
+                                    batch_entry=batch_entry, decode=True)
+            return (xc, ks, vs, inv), m2c
+
+        (h, ks, vs, _), mstates = jax.lax.scan(
+            body, (x, cache["attn_k"], cache["attn_v"], jnp.int32(0)),
+            (params["layers"], cache["mamba"], jnp.arange(cfg.n_layers)))
+        new_cache = {"mamba": mstates, "attn_k": ks, "attn_v": vs}
+
+    else:
+        seq_entry = _decode_seq_entry(cfg, cache, px, B)
+        new_cache = {}
+
+        def run_stack(xc, stack, stack_cache, moe_stack):
+            rb = extras.get("router_bias") if moe_stack else None
+            pl = extras.get("placement") if moe_stack else None
+
+            def body(xcur, xs):
+                if moe_stack and rb is not None:
+                    p_layer, c, rb_row, pl_row = xs
+                else:
+                    (p_layer, c), rb_row, pl_row = xs, None, None
+                out, c2 = blocks.tf_block_decode(
+                    p_layer, xcur, c, pos, cfg=cfg, px=px,
+                    batch_entry=batch_entry, seq_entry=seq_entry,
+                    router_bias=rb_row, placement=pl_row)
+                return out, c2
+
+            xs = ((stack, stack_cache, rb, pl) if (moe_stack and rb is not None)
+                  else (stack, stack_cache))
+            return jax.lax.scan(body, xc, xs)
+
+        xcur = x
+        if cfg.moe is not None and cfg.moe.first_k_dense:
+            xcur, c2 = run_stack(xcur, params["dense_layers"], cache["dense"],
+                                 False)
+            new_cache["dense"] = c2
+        xcur, c2 = run_stack(xcur, params["layers"], cache["main"],
+                             cfg.moe is not None)
+        new_cache["main"] = c2
+        h = xcur
+
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = lm_head_fwd(params["embed"], h, px, batch_entry)[:, 0, :]
+    return new_cache, logits
+
+
+def _decode_seq_entry(cfg, cache, px, batch: int):
+    if cfg.mla is not None:
+        S = cache["main"].shape[2]
+    elif cfg.ssm is not None:
+        S = cache["attn_k"].shape[2]
+    else:
+        S = cache["main"]["k"].shape[2]
+    # batch=1 (long_500k): the KV sequence is the only shardable dim, so
+    # spread it over every mesh axis; otherwise batch owns the data axes
+    # and the sequence shards over the model axis only.
+    if batch == 1:
+        return px.seq_mega_spec(S)
+    return px.shard_if(S, px.model_axis)

@@ -1,0 +1,134 @@
+"""Mamba2 SSD block [arXiv:2405.21060] — chunked scan, TPU-native.
+
+The SSD recurrence has a *scalar* per-head decay, so the chunked form is
+pure matmuls (MXU-friendly), unlike RWKV6's per-channel decay:
+
+    h_t = a_t h_{t-1} + (b_t x_t^T)        h: (P, N) per head
+    y_t = c_t^T h_t + D x_t
+
+Chunked (chunk c, A = cumsum(log a)):
+    intra:  Y = ((C B^T) . L) X        L[t,i] = exp(A_t - A_i), i <= t
+    inter:  Y += (C . exp(A)) h_0
+    state:  h_c = exp(A_c) h_0 + sum_i exp(A_c - A_i) b_i x_i^T
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DT, _init, init_rmsnorm, rmsnorm
+from repro.parallel.ctx import ParallelCtx
+
+
+def init_mamba2(key, d: int, cfg):
+    s = cfg.ssm
+    di = s.expand * d
+    H = di // s.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": init_rmsnorm(d),
+        # fused in_proj: [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": _init(ks[0], (d, 2 * di + 2 * s.d_state + H)),
+        "conv_w": _init(ks[1], (s.d_conv, di + 2 * s.d_state), scale=0.5),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "ln_y": init_rmsnorm(di),
+        "w_out": _init(ks[2], (di, d)),
+    }
+
+
+def _ssd_chunked(xh, bh, ch, dt, A_log, h0, chunk: int, unroll: bool = False):
+    """xh: (B,S,H,P); bh,ch: (B,S,N); dt: (B,S,H); h0: (B,H,P,N)."""
+    B, S, H, P = xh.shape
+    N = bh.shape[-1]
+    c = min(chunk, S)
+    nc = S // c
+    a = -jnp.exp(A_log)[None, None, :] * dt  # log decay (B,S,H), <= 0
+    xs = (xh * dt[..., None]).reshape(B, nc, c, H, P).transpose(1, 0, 3, 2, 4)
+    bs = bh.reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+    cs = ch.reshape(B, nc, c, N).transpose(1, 0, 2, 3)
+    As = a.reshape(B, nc, c, H).transpose(1, 0, 3, 2)  # (nc,B,H,c)
+
+    def step(h, inp):
+        xc, bc, cc, ac = inp  # (B,H,c,P), (B,c,N), (B,c,N), (B,H,c)
+        Ac = jnp.cumsum(ac, axis=-1)  # (B,H,c)
+        # intra-chunk
+        cb = jnp.einsum("btn,bin->bti", cc, bc)[:, None, :, :]  # (B,1,c,c)
+        L = jnp.exp(Ac[:, :, :, None] - Ac[:, :, None, :])
+        L = jnp.where(jnp.tril(jnp.ones((c, c), bool))[None, None], L, 0.0)
+        y = jnp.einsum("bhti,bhip->bhtp", cb * L, xc)
+        # inter-chunk (state h enters each position with decay exp(A_t))
+        y += jnp.einsum("btn,bhpn,bht->bhtp", cc, h, jnp.exp(Ac))
+        # state update
+        decay_to_end = jnp.exp(Ac[:, :, -1:] - Ac)  # (B,H,c)
+        h = jnp.exp(Ac[:, :, -1])[..., None, None] * h + jnp.einsum(
+            "bhtp,btn,bht->bhpn", xc, bc, decay_to_end)
+        return h, y
+
+    inp = (xs.astype(jnp.float32), bs.astype(jnp.float32),
+           cs.astype(jnp.float32), As.astype(jnp.float32))
+    if unroll:
+        h = h0.astype(jnp.float32)
+        ylist = []
+        for i in range(nc):
+            h, yi = step(h, tuple(t[i] for t in inp))
+            ylist.append(yi)
+        ys = jnp.stack(ylist, axis=0)
+    else:
+        h, ys = jax.lax.scan(step, h0.astype(jnp.float32), inp)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, P)
+    return y, h
+
+
+def mamba2_fwd(p, x, carry, *, cfg, px: ParallelCtx, batch_entry,
+               decode: bool = False):
+    """x: (B,S,d). carry: dict(ssm (B,H,P,N), conv (B,d_conv-1,ch)).
+
+    decode=True runs the exact single-step recurrence (S must be 1).
+    """
+    s = cfg.ssm
+    B, S, D = x.shape
+    di = s.expand * D
+    H = di // s.head_dim
+    P, N = s.head_dim, s.d_state
+    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, p["w_in"].astype(COMPUTE_DT))
+    z, xr, bc, dt = jnp.split(proj, [di, 2 * di, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xr, bc], axis=-1)  # (B,S,di+2N)
+
+    # causal depthwise conv over the sequence, with carried tail state
+    tail = carry["conv"]  # (B, d_conv-1, ch)
+    seq = jnp.concatenate([tail.astype(COMPUTE_DT), conv_in], axis=1)
+    kw = p["conv_w"].astype(COMPUTE_DT)  # (d_conv, ch)
+    conv = sum(seq[:, i:i + S, :] * kw[i][None, None, :]
+               for i in range(s.d_conv))
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(COMPUTE_DT)
+    new_tail = seq[:, S:S + s.d_conv - 1, :]
+
+    xr, bh, ch = jnp.split(conv, [di, di + N], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    xh = xr.reshape(B, S, H, P)
+    h_entry = px.shard_if(H, px.model_axis)
+    xh = px.constrain(xh, batch_entry, None, h_entry, None)
+
+    if decode:
+        a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dtv[:, 0])  # (B,H)
+        h0 = carry["ssm"].astype(jnp.float32)
+        kv = jnp.einsum("bhp,bn->bhpn",
+                        (xh[:, 0] * dtv[:, 0, :, None]).astype(jnp.float32),
+                        bh[:, 0].astype(jnp.float32))
+        h1 = a[..., None, None] * h0 + kv
+        y = jnp.einsum("bn,bhpn->bhp", ch[:, 0].astype(jnp.float32), h1)
+        y = y[:, None].reshape(B, 1, H, P)
+        hS = h1
+    else:
+        y, hS = _ssd_chunked(xh, bh, ch, dtv, p["A_log"], carry["ssm"],
+                             s.chunk, unroll=px.scan_unroll)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(COMPUTE_DT)
+    y = rmsnorm(p["ln_y"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DT)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(COMPUTE_DT))
+    out = px.constrain(out, batch_entry, None, None)
+    return x + out, {"ssm": hS, "conv": new_tail}

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts FFN with expert parallelism and GAIA placement hooks.
+
+Dispatch is sort-based ("dropping" style, as in MaxText): token/expert
+slots are ranked within their expert segment and slots beyond the static
+capacity are dropped. The (E, C, d) slot buffer is sharded over the model
+axis on E (expert parallelism); the gather from data-sharded tokens into
+expert-sharded slots is where GSPMD materializes the all-to-all.
+
+GAIA integration (the paper's self-clustering, adapted — see
+repro/core/gaia_moe.py): ``placement`` is a permutation of experts to
+EP ranks. The layer applies it by permuting the router's expert ids, so
+hot experts migrate between shards without touching weight layouts; the
+per-(shard, expert) traffic statistics the heuristic needs come back in
+the metrics dict.
+
+aux-loss-free balancing (DeepSeek-V3): a non-gradient per-expert bias is
+added to the routing scores for selection only; its update happens in the
+train step from the returned counts.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DT, _init
+from repro.parallel.ctx import ParallelCtx
+
+
+def init_moe(key, d: int, cfg_moe):
+    m = cfg_moe
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, m.num_experts), scale=0.02,
+                        dtype=jnp.float32),
+        "w_gate": _init(ks[1], (m.num_experts, d, m.d_expert)),
+        "w_up": _init(ks[2], (m.num_experts, d, m.d_expert)),
+        "w_down": _init(ks[3], (m.num_experts, m.d_expert, d)),
+    }
+    if m.num_shared_experts:
+        f = m.d_shared * m.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _init(kk[0], (d, f)),
+            "w_up": _init(kk[1], (d, f)),
+            "w_down": _init(kk[2], (f, d)),
+        }
+    return p
+
+
+def _capacity(tokens: int, m) -> int:
+    c = int(m.capacity_factor * tokens * m.top_k / m.num_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_fwd(p, x, *, m, px: ParallelCtx, batch_entry,
+            router_bias: Optional[jax.Array] = None,
+            placement: Optional[jax.Array] = None):
+    """x: (B, S, d). Returns (out, metrics).
+
+    router_bias: (E,) aux-free balancing bias (selection only, no grad).
+    placement: (E,) permutation: expert e is served by slot placement[e]
+      (GAIA expert migration — reorders segments in the (E,C,d) buffer).
+    """
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    C = _capacity(T, m)
+    # Flattening (B@data, S@model[SP], D) into (T, D) would force GSPMD to
+    # materialize batch-unsharded compromises; move the model axis to D
+    # first so every dispatch intermediate stays (lead@data, D@model).
+    x = px.constrain(x, batch_entry, None, px.shard_if(D, px.model_axis))
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = probs if router_bias is None else probs + jax.lax.stop_gradient(
+        router_bias)[None, :]
+    _, top_e = jax.lax.top_k(select, K)  # (T, K) expert ids
+    top_p = jnp.take_along_axis(probs, top_e, axis=-1)
+    if m.norm_topk_prob:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    top_p = top_p.astype(COMPUTE_DT)
+
+    if placement is not None:
+        # GAIA expert migration: placement[e] = buffer segment serving
+        # expert e. Weights are STORED in segment order (w_gate[s] holds
+        # the weights of the expert currently placed on segment s), so the
+        # per-step graph only remaps routing ids — the physical weight
+        # movement (MigComm, Eq. 6) happens once per migration event in
+        # gaia_moe.apply_migration, exactly like the paper's serialized
+        # SE-state transfer, NOT as a per-step gather.
+        seg_e = placement[top_e]
+    else:
+        seg_e = top_e
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+
+    # ---- grouped sort-based dispatch ------------------------------------
+    # One group per data shard: every sort/scatter below is batched over
+    # the (sharded) group dim and therefore device-local. The only
+    # cross-device movement is the (G,E,C,D) buffer constraint — which is
+    # exactly the MoE all-to-all.
+    ep_axes = px.ep_axes
+    use_2d = (px.ep2d and ep_axes is not None
+              and E % px.axis_size(ep_axes) == 0)
+    if use_2d:
+        # 2-D EP: one global dispatch group; the (E, C, D) slot buffer
+        # shards E over (data x model) jointly, so expert weights are
+        # never gathered — tokens travel (the all-to-all), weights don't.
+        G = 1
+        g_entry = None
+        e_entry = ep_axes
+    else:
+        G = px.axis_size(batch_entry) if batch_entry is not None else 1
+        g_entry = batch_entry
+        e_entry = px.shard_if(E, px.model_axis)
+    Tg = T // G
+    C = max(2 * K, _capacity(Tg, m))
+    # The per-group scatter buffer (E*C+1, D) is large (E*C can exceed Tg
+    # by the capacity slack); keep its D dim model-sharded until the
+    # (G,E,C,D) constraint flips the sharding to expert-parallel — this is
+    # a (D-shard -> E-shard) all-to-all instead of materializing the full
+    # buffer per device.
+    d_entry = px.shard_if(D, px.model_axis)
+
+    def grp(x):
+        return x.reshape(G, Tg, *x.shape[1:])
+
+    flat_e = grp(seg_e).reshape(G, Tg * K)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(Tg), K), (G, Tg * K))
+    flat_w = grp(top_p).reshape(G, Tg * K)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, -1)
+    st = jnp.take_along_axis(flat_t, order, -1)
+    sw = jnp.take_along_axis(flat_w, order, -1)
+    counts = jax.vmap(lambda fe: jnp.bincount(fe, length=E))(flat_e)
+    seg_start = jnp.cumsum(counts, -1) - counts
+    pos_in_e = (jnp.arange(Tg * K, dtype=jnp.int32)[None, :]
+                - jnp.take_along_axis(seg_start, se, -1).astype(jnp.int32))
+    keep = pos_in_e < C
+    dest = jnp.where(keep, se * C + pos_in_e, E * C)
+
+    xg = px.constrain(grp(xt), g_entry, None, d_entry)  # (G, Tg, D)
+    scatter = jax.vmap(
+        lambda d_, t_, x_: jnp.zeros((E * C + 1, D), COMPUTE_DT)
+        .at[d_].set(x_[t_]))
+    buf = px.constrain(scatter(dest, st, xg), g_entry, None, d_entry)
+    h = buf[:, : E * C].reshape(G, E, C, D)
+    h = px.constrain(h, g_entry, e_entry, None, None)  # <- the all-to-all
+
+    # ---- expert FFN (SwiGLU): E over model axis; under fsdp the weights
+    # are additionally d-sharded over data and gathered just-in-time ----
+    g_ = jnp.einsum("gecd,edf->gecf", h, w_gate.astype(COMPUTE_DT))
+    u = jnp.einsum("gecd,edf->gecf", h, w_up.astype(COMPUTE_DT))
+    g_ = px.constrain(g_, g_entry, e_entry, None, None)
+    hmid = jax.nn.silu(g_.astype(jnp.float32)).astype(COMPUTE_DT) * u
+    y = jnp.einsum("gecf,efd->gecd", hmid, w_down.astype(COMPUTE_DT))
+    y = px.constrain(y, g_entry, e_entry, None, None)
+
+    # ---- combine (reverse all-to-all + weighted scatter-add) ------------
+    y_flat = y.reshape(G, E * C, D)
+    y_flat = px.constrain(y_flat, g_entry, None, d_entry)
+    safe = jnp.minimum(dest, E * C - 1)
+    gather = jax.vmap(lambda yf, d_: yf[d_])
+    contrib = jnp.where(keep[..., None],
+                        sw[..., None] * gather(y_flat, safe), 0.0)
+    out = jax.vmap(
+        lambda t_, c_: jnp.zeros((Tg, D), COMPUTE_DT).at[t_].add(c_))(
+        st, contrib)
+    out = px.constrain(out, g_entry, None, d_entry).reshape(B, S, D)
+    out = px.constrain(out, batch_entry, px.seq_entry(S), None)
+    # (G, E) traffic by *segment*; re-index to expert ids for GAIA/bias
+    # (expert e is served by segment placement[e]).
+    gcounts = counts if placement is None else counts[:, placement]
+    counts = gcounts.sum(0)
+
+    if "shared" in p:
+        from repro.models.layers import mlp_fwd
+        out = out + mlp_fwd(p["shared"], x, px, batch_entry)
+
+    # load-balance aux loss (switch-style) + routing stats for GAIA
+    frac_tokens = counts.astype(jnp.float32) / (T * K)
+    frac_probs = probs.mean(axis=0)
+    aux_loss = E * jnp.sum(jax.lax.stop_gradient(frac_tokens) * frac_probs)
+    dropped = jnp.sum(jnp.where(keep, 0, 1))
+    metrics = {
+        "expert_counts": jnp.bincount(top_e.reshape(-1), length=E),
+        "group_expert_counts": gcounts,
+        "moe_aux_loss": aux_loss,
+        "moe_dropped": dropped,
+    }
+    return out, metrics

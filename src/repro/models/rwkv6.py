@@ -1,0 +1,206 @@
+"""RWKV-6 "Finch" — attention-free time-mix with data-dependent decay
+[arXiv:2404.05892], adapted to TPU as a chunked recurrence.
+
+Recurrence (per head, state S in R^{N x N}):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Chunked form (chunk c): with l_t = cumsum(log w) inside the chunk,
+    o_t  = (r_t . exp(l_{t-1})) @ S_0
+         + sum_{i<t} [sum_n r_tn k_in exp(l_{t-1,n} - l_{i,n})] v_i
+         + (r_t . u . k_t) v_t
+    S_c  = diag(exp(l_c)) S_0 + sum_i (k_i . exp(l_c - l_i))^T v_i
+Every exponent is <= 0, so the chunked form is unconditionally stable —
+this is the TPU adaptation of the CUDA wkv kernel's running-max trick
+(see DESIGN.md §Adaptations). The intra-chunk term is O(c^2 N) per head
+and maps to the MXU via one (c,c) matmul per channel group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DT, _init, init_rmsnorm, rmsnorm
+from repro.parallel.ctx import ParallelCtx
+
+
+def init_rwkv_block(key, d: int, cfg):
+    r = cfg.rwkv
+    ks = jax.random.split(key, 12)
+    H = cfg.n_heads
+    N = r.head_dim
+    return {
+        "ln_attn": init_rmsnorm(d),
+        "ln_ffn": init_rmsnorm(d),
+        # token-shift data-dependent mix (lora): 5 targets r,k,v,w,g
+        "mix_base": jnp.zeros((5, d), COMPUTE_DT),
+        "mix_lora_a": _init(ks[0], (d, 5 * cfg.rwkv.mix_lora)),
+        "mix_lora_b": _init(ks[1], (5, cfg.rwkv.mix_lora, d), scale=0.01),
+        # projections
+        "t_r": _init(ks[2], (d, d)),
+        "t_k": _init(ks[3], (d, d)),
+        "t_v": _init(ks[4], (d, d)),
+        "t_g": _init(ks[5], (d, d)),
+        "t_o": _init(ks[6], (d, d)),
+        # data-dependent decay lora
+        "w_base": jnp.full((d,), -6.0, jnp.float32),
+        "decay_a": _init(ks[7], (d, r.decay_lora)),
+        "decay_b": _init(ks[8], (r.decay_lora, d), scale=0.01),
+        "bonus_u": jnp.zeros((H, N), jnp.float32),
+        "ln_x": init_rmsnorm(d),
+        # channel mix
+        "ck": _init(ks[9], (d, cfg.d_ff)),
+        "cv": _init(ks[10], (cfg.d_ff, d)),
+        "cr": _init(ks[11], (d, d)),
+    }
+
+
+def _time_shift(x, last):
+    """Shift right by one along S; position 0 takes `last` (B, d)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix_rkvwg(p, xn, last, px, batch_entry):
+    """Data-dependent token-shift interpolation -> r,k,v,w,g inputs."""
+    xs = _time_shift(xn, last)
+    delta = xs - xn
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xn, p["mix_lora_a"].astype(COMPUTE_DT)))
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    mixes = p["mix_base"].astype(COMPUTE_DT) + jnp.einsum(
+        "bsir,ird->bsid", lora, p["mix_lora_b"].astype(COMPUTE_DT))
+    # x_i = xn + delta * mix_i   for i in r,k,v,w,g
+    return xn[:, :, None, :] + delta[:, :, None, :] * mixes
+
+
+def rwkv_time_mix(p, xn, state, shift_last, *, cfg, px: ParallelCtx,
+                  batch_entry):
+    """Chunked RWKV6 time-mix.
+
+    xn: (B,S,d) normed input; state: (B,H,N,N); shift_last: (B,d).
+    Returns (out, new_state, new_shift_last).
+    """
+    B, S, D = xn.shape
+    H, N = cfg.n_heads, cfg.rwkv.head_dim
+    c = min(cfg.rwkv.chunk, S)
+    assert S % c == 0, (S, c)
+    mixed = _mix_rkvwg(p, xn, shift_last, px, batch_entry)
+    xr, xk, xv, xw, xg = [mixed[:, :, i, :] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xr, p["t_r"].astype(COMPUTE_DT))
+    k = jnp.einsum("bsd,de->bse", xk, p["t_k"].astype(COMPUTE_DT))
+    v = jnp.einsum("bsd,de->bse", xv, p["t_v"].astype(COMPUTE_DT))
+    g = jnp.einsum("bsd,de->bse", xg, p["t_g"].astype(COMPUTE_DT))
+    # log-decay in (-inf, 0): logw = -exp(w_base + lora)
+    wl = jnp.einsum("bsd,dr->bsr", xw, p["decay_a"].astype(COMPUTE_DT))
+    logw = -jnp.exp(p["w_base"][None, None, :]
+                    + jnp.einsum("bsr,rd->bsd", jnp.tanh(wl),
+                                 p["decay_b"].astype(COMPUTE_DT)).astype(jnp.float32))
+
+    def heads(x):
+        return x.reshape(B, S, H, N).transpose(0, 2, 1, 3)  # (B,H,S,N)
+
+    h_entry = px.shard_if(H, px.model_axis)
+    rh = px.constrain(heads(r), batch_entry, h_entry, None, None).astype(jnp.float32)
+    kh = px.constrain(heads(k), batch_entry, h_entry, None, None).astype(jnp.float32)
+    vh = px.constrain(heads(v), batch_entry, h_entry, None, None).astype(jnp.float32)
+    lw = px.constrain(heads(logw), batch_entry, h_entry, None, None)
+    u = p["bonus_u"][None, :, None, :]
+
+    nc = S // c
+    rh, kh, vh, lw = [t.reshape(B, H, nc, c, N).transpose(2, 0, 1, 3, 4)
+                      for t in (rh, kh, vh, lw)]
+
+    def chunk_step(S0, inp):
+        rc, kc, vc, lwc = inp  # (B,H,c,N)
+        l = jnp.cumsum(lwc, axis=2)  # (B,H,c,N), decreasing
+        l_prev = l - lwc  # l_{t-1}
+        # intra-chunk: A[t,i] = sum_n r_tn k_in exp(l_{t-1,n} - l_{i,n}), i<t
+        expo = l_prev[:, :, :, None, :] - l[:, :, None, :, :]  # (B,H,t,i,N)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)[None, None, :, :, None]
+        A = jnp.sum(jnp.where(tri, jnp.exp(expo), 0.0)
+                    * rc[:, :, :, None, :] * kc[:, :, None, :, :], axis=-1)
+        o = jnp.einsum("bhti,bhin->bhtn", A, vc)
+        # diagonal bonus: (r_t . u . k_t) v_t
+        o += jnp.sum(rc * u * kc, axis=-1, keepdims=True) * vc
+        # state contribution
+        o += jnp.einsum("bhtn,bhnm->bhtm", rc * jnp.exp(l_prev), S0)
+        # state update
+        kd = kc * jnp.exp(l[:, :, -1:, :] - l)  # (B,H,c,N)
+        S1 = jnp.exp(l[:, :, -1, :])[..., None] * S0 + jnp.einsum(
+            "bhtn,bhtm->bhnm", kd, vc)
+        return S1, o
+
+    if px.scan_unroll:
+        st = state.astype(jnp.float32)
+        olist = []
+        for i in range(nc):
+            st, o = chunk_step(st, (rh[i], kh[i], vh[i], lw[i]))
+            olist.append(o)
+        state, outs = st, jnp.stack(olist, axis=0)
+    else:
+        state, outs = jax.lax.scan(chunk_step, state.astype(jnp.float32),
+                                   (rh, kh, vh, lw))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, N)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, D)
+    out = rmsnorm(p["ln_x"], out.astype(COMPUTE_DT))
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DT)
+    y = jnp.einsum("bsd,de->bse", out, p["t_o"].astype(COMPUTE_DT))
+    return (px.constrain(y, batch_entry, None, None), state,
+            xn[:, -1, :])
+
+
+def rwkv_channel_mix(p, xn, shift_last, *, px: ParallelCtx, batch_entry):
+    xs = _time_shift(xn, shift_last)
+    # rwkv6 channel mix uses a fixed 0.5 shift-mix for simplicity here
+    xk = 0.5 * (xn + xs)
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(COMPUTE_DT))
+    k = px.constrain(k, batch_entry, None,
+                     px.shard_if(p["ck"].shape[-1], px.model_axis))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(COMPUTE_DT)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cv"].astype(COMPUTE_DT))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xk, p["cr"].astype(COMPUTE_DT)).astype(jnp.float32)
+    ).astype(COMPUTE_DT)
+    return px.constrain(r * kv, batch_entry, None, None), xn[:, -1, :]
+
+
+def rwkv_block_fwd(p, x, carry, *, cfg, px: ParallelCtx, batch_entry):
+    """carry: dict(state (B,H,N,N), shift_a (B,d), shift_f (B,d))."""
+    xn = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    y, state, sa = rwkv_time_mix(p, xn, carry["state"], carry["shift_a"],
+                                 cfg=cfg, px=px, batch_entry=batch_entry)
+    x = x + y
+    xf = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    y2, sf = rwkv_channel_mix(p, xf, carry["shift_f"], px=px,
+                              batch_entry=batch_entry)
+    x = x + y2
+    return x, {"state": state, "shift_a": sa, "shift_f": sf}
+
+
+def rwkv_decode_step(p, x, carry, *, cfg, px: ParallelCtx, batch_entry):
+    """Single-token recurrent step (S=1): exact recurrence, O(N^2)/head."""
+    B = x.shape[0]
+    H, N = cfg.n_heads, cfg.rwkv.head_dim
+    xn = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    mixed = _mix_rkvwg(p, xn, carry["shift_a"], px, batch_entry)
+    xr, xk, xv, xw, xg = [mixed[:, :, i, :] for i in range(5)]
+    r = (xr @ p["t_r"].astype(COMPUTE_DT)).reshape(B, H, N).astype(jnp.float32)
+    k = (xk @ p["t_k"].astype(COMPUTE_DT)).reshape(B, H, N).astype(jnp.float32)
+    v = (xv @ p["t_v"].astype(COMPUTE_DT)).reshape(B, H, N).astype(jnp.float32)
+    g = xg @ p["t_g"].astype(COMPUTE_DT)
+    wl = jnp.tanh(xw @ p["decay_a"].astype(COMPUTE_DT)) @ p["decay_b"].astype(COMPUTE_DT)
+    w = jnp.exp(-jnp.exp(p["w_base"][None, None, :] + wl.astype(jnp.float32)))
+    w = w.reshape(B, H, N)
+    S0 = carry["state"].astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,N,N)
+    o = jnp.einsum("bhn,bhnm->bhm", r, S0 + p["bonus_u"][None, :, :, None] * kv)
+    S1 = w[..., :, None] * S0 + kv
+    out = o.reshape(B, 1, H * N).astype(COMPUTE_DT)
+    out = rmsnorm(p["ln_x"], out)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DT)
+    y = out @ p["t_o"].astype(COMPUTE_DT)
+    x = x + y
+    xf = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    y2, sf = rwkv_channel_mix(p, xf, carry["shift_f"], px=px,
+                              batch_entry=batch_entry)
+    x = x + y2
+    return x, {"state": S1, "shift_a": xn[:, -1, :], "shift_f": sf}

@@ -1,0 +1,166 @@
+"""Adafactor [arXiv:1804.04235] with bf16 momentum and fp32 master weights.
+
+The second moment is rank-factored over the last two dims (row/col means),
+cutting optimizer state from 12 bytes/param (AdamW fp32 m+v) to
+~6 bytes/param (fp32 master + bf16 m + negligible factored v). This is
+what makes deepseek-v3-671b training *fit* on the 512-chip mesh — see
+EXPERIMENTS.md §Dry-run capacity notes.
+
+``adafactor_lean_*`` is the single-pod 671B variant: classic Adafactor
+(beta1=0, no momentum buffer) with NO fp32 master — bf16 params are
+updated directly with *stochastic rounding* (unbiased; the standard
+recipe for sub-fp32 weight training, cf. Gopher / DeepSeek-V3's own
+low-precision recipes). State drops to the factored second moment only
+(~0.01 bytes/param), so weights+grads+state = ~4 bytes/param: 671B fits
+in 256 x 16 GiB with room for activations. Accuracy trade recorded in
+DESIGN.md §Deviations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, global_norm, lr_at
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def vrow(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def vcol(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        "vr": jax.tree.map(vrow, params),
+        "vc": jax.tree.map(vcol, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_apply(c: AdamWConfig, grads, state, params,
+                    decay: float = 0.999):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(c, step)
+
+    def upd(g, m, vr, vc, w):
+        g = g.astype(jnp.float32) * scale
+        g2 = jnp.square(g) + 1e-30
+        if _factored(g.shape):
+            vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+        else:
+            vr = decay * vr + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(vr + 1e-30)
+        # update clipping (RMS<=1) per the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        m32 = c.beta1 * m.astype(jnp.float32) + (1 - c.beta1) * u
+        w = w - lr * (m32 + c.weight_decay * w)
+        return m32.astype(jnp.bfloat16), vr, vc, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    fm = treedef.flatten_up_to(state["m"])
+    fvr = treedef.flatten_up_to(state["vr"])
+    fvc = treedef.flatten_up_to(state["vc"])
+    fw = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, vr, vc, w)
+           for g, m, vr, vc, w in zip(flat_g, fm, fvr, fvc, fw)]
+    new_state = {
+        "m": treedef.unflatten([o[0] for o in out]),
+        "vr": treedef.unflatten([o[1] for o in out]),
+        "vc": treedef.unflatten([o[2] for o in out]),
+        "master": treedef.unflatten([o[3] for o in out]),
+        "step": step,
+    }
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype),
+                              new_state["master"], params)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Lean variant: no master, no momentum, stochastic-rounding bf16 updates
+# ---------------------------------------------------------------------------
+
+
+def _stochastic_round_bf16(key, x32):
+    """Unbiased fp32 -> bf16 rounding: add uniform 16-bit noise below the
+    bf16 mantissa, truncate. E[round(x)] = x."""
+    bits = jax.lax.bitcast_convert_type(x32, jnp.uint32)
+    noise = jax.random.bits(key, x32.shape, jnp.uint32) & jnp.uint32(0xFFFF)
+    trunc = (bits + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(trunc, jnp.float32).astype(
+        jnp.bfloat16)
+
+
+def adafactor_lean_init(params):
+    def vrow(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    def vcol(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape) else jnp.zeros((1,), jnp.float32))
+
+    return {
+        "vr": jax.tree.map(vrow, params),
+        "vc": jax.tree.map(vcol, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_lean_apply(c: AdamWConfig, grads, state, params,
+                         decay: float = 0.999):
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(c, step)
+    base_key = jax.random.fold_in(jax.random.key(17), step)
+
+    def upd(i, g, vr, vc, w):
+        g = g.astype(jnp.float32) * scale
+        g2 = jnp.square(g) + 1e-30
+        if _factored(g.shape):
+            vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30))
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+        else:
+            vr = decay * vr + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(vr + 1e-30)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        w32 = w.astype(jnp.float32)
+        w32 = w32 - lr * (u + c.weight_decay * w32)
+        if w.dtype == jnp.bfloat16:
+            w = _stochastic_round_bf16(jax.random.fold_in(base_key, i), w32)
+        else:
+            w = w32.astype(w.dtype)
+        return vr, vc, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    fvr = treedef.flatten_up_to(state["vr"])
+    fvc = treedef.flatten_up_to(state["vc"])
+    fw = treedef.flatten_up_to(params)
+    out = [upd(i, g, vr, vc, w)
+           for i, (g, vr, vc, w) in enumerate(zip(flat_g, fvr, fvc, fw))]
+    new_state = {
+        "vr": treedef.unflatten([o[0] for o in out]),
+        "vc": treedef.unflatten([o[1] for o in out]),
+        "step": step,
+    }
+    new_params = treedef.unflatten([o[2] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

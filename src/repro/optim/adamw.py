@@ -1,0 +1,82 @@
+"""AdamW with fp32 master weights, global-norm clipping and a linear
+warmup + cosine schedule. Optimizer state is ZeRO-1 sharded over the data
+axes (see repro/parallel/sharding.py:zero1_spec): m/v/master carry an
+extra data-axis sharding on their largest divisible dim, and GSPMD's
+reduce-scatter/all-gather around the update IS the ZeRO-1 schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PARAM_DT
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def lr_at(c: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = c.lr * step / max(c.warmup_steps, 1)
+    t = jnp.clip((step - c.warmup_steps)
+                 / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 * c.lr + 0.9 * c.lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def adamw_init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_apply(c: AdamWConfig, grads, state, params):
+    """Returns (new_params bf16, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(c, step)
+    b1c = 1 - c.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - c.beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = c.beta1 * m + (1 - c.beta1) * g
+        v = c.beta2 * v + (1 - c.beta2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        w = w - lr * (mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * w)
+        return m, v, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_w = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), new_w, params)
+    new_state = {"m": new_m, "v": new_v, "master": new_w, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

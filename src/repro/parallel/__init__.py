@@ -1,0 +1,1 @@
+from repro.parallel.ctx import ParallelCtx, make_ctx  # noqa: F401

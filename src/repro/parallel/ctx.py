@@ -1,0 +1,167 @@
+"""Parallel execution context.
+
+``ParallelCtx`` carries the mesh and the axis-naming/layout policy through
+the model code. Model code never hard-codes axis names; it asks the ctx for
+sharding constraints, and the ctx degrades gracefully to a no-op on a
+single-device mesh (smoke tests) or when a dimension does not divide the
+axis size (e.g. 4 KV heads on a 16-way model axis, or qwen2's 28 query
+heads -> sequence-sharded attention fallback).
+
+Axis convention (see launch/mesh.py):
+    single-pod : ("data", "model")            = (16, 16)
+    multi-pod  : ("pod", "data", "model")     = (2, 16, 16)
+
+Batch is sharded over ("pod","data"); tensor-parallel dims over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisEntry = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Optional[Mesh]
+    batch_axes: Tuple[str, ...]  # ("pod","data") or ("data",) or ()
+    model_axis: Optional[str]  # "model" or None
+    # --- layout / schedule policy knobs (hillclimbed in EXPERIMENTS.md §Perf)
+    seq_shard_attn: bool = False  # qwen2 fallback: shard S instead of heads
+    # sequence parallelism (Megatron SP): the residual stream stays
+    # S-sharded over the model axis between blocks; GSPMD all-gathers at
+    # the TP boundary and reduce-scatters back. Cuts per-device activation
+    # residency by model_size (decisive for prefill_32k on big d_model).
+    seq_parallel: bool = True
+    num_microbatches: int = 1
+    remat: str = "full"  # "none" | "full" | "dots"
+    zero1: bool = True
+    use_pallas: bool = False
+    # attention flash block sizes (jnp reference path)
+    q_block: int = 512
+    kv_block: int = 1024
+    # causal scheduling: skip fully-masked KV blocks (§Perf iteration)
+    causal_skip: bool = True
+    # unroll inner scans (cost-analysis lowering only: XLA's HLO cost
+    # analysis counts while bodies once, so the roofline component pass
+    # lowers single layers with loops unrolled)
+    scan_unroll: bool = False
+    # FSDP-style weight sharding: every param additionally shards its
+    # largest free dim over the data axes (GSPMD all-gathers at use).
+    # Required for >=100B-param models on 16GB chips (deepseek-v3).
+    fsdp: bool = False
+    # 2-D expert parallelism: experts shard over (data x model) jointly
+    # (deepseek: 256 experts over 256 ranks = 1 expert/device, weights
+    # never gathered; tokens move via all-to-all instead). Falls back to
+    # grouped EP when E doesn't divide the joint axis size. §Perf knob.
+    ep2d: bool = False
+    # gradient accumulator dtype ("f32" | "bf16")
+    grad_dtype: str = "f32"
+    # sequence-chunked cross-entropy (0 = off): avoids materializing the
+    # full (B,S,V) fp32 logits; logits recomputed per chunk in the bwd
+    loss_chunk: int = 0
+    # optimizer: "adamw" | "adafactor" (factored 2nd moment, bf16 momentum)
+    optimizer: str = "adamw"
+
+    # ------------------------------------------------------------------
+    @property
+    def data_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.batch_axes) if self.batch_axes else 1
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or self.model_axis is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def n_devices(self) -> int:
+        return 1 if self.mesh is None else self.mesh.devices.size
+
+    @property
+    def ep_axes(self) -> AxisEntry:
+        """Expert-parallel axes: innermost data axis + model axis (pods
+        replicate experts; their grads all-reduce over the pod links)."""
+        if self.mesh is None or self.model_axis is None:
+            return None
+        if self.batch_axes:
+            return (self.batch_axes[-1], self.model_axis)
+        return self.model_axis
+
+    # ------------------------------------------------------------------
+    def constrain(self, x: jax.Array, *spec: AxisEntry) -> jax.Array:
+        """with_sharding_constraint; silently a no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        assert len(spec) == x.ndim, (spec, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec))
+        )
+
+    def sharding(self, *spec: AxisEntry) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+    # ------------------------------------------------------------------
+    def axis_size(self, entry: AxisEntry) -> int:
+        if entry is None or self.mesh is None:
+            return 1
+        if isinstance(entry, str):
+            return self.mesh.shape[entry]
+        return math.prod(self.mesh.shape[a] for a in entry)
+
+    def shard_if(self, dim: int, entry: AxisEntry) -> AxisEntry:
+        """Return `entry` if `dim` divides its total size, else None."""
+        n = self.axis_size(entry)
+        return entry if (n > 1 and dim % n == 0) else None
+
+    def batch_spec(self, batch: int) -> AxisEntry:
+        """Largest prefix of the batch axes that divides `batch`."""
+        if self.mesh is None or not self.batch_axes:
+            return None
+        axes = []
+        prod = 1
+        for a in self.batch_axes:
+            if batch % (prod * self.mesh.shape[a]) == 0:
+                axes.append(a)
+                prod *= self.mesh.shape[a]
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    def seq_entry(self, seq: int) -> AxisEntry:
+        """Sequence-parallel residual sharding (None when off/indivisible)."""
+        if not self.seq_parallel:
+            return None
+        return self.shard_if(seq, self.model_axis)
+
+    def seq_mega_spec(self, seq: int) -> AxisEntry:
+        """Shard a long sequence over every available axis (long_500k KV)."""
+        if self.mesh is None:
+            return None
+        axes = tuple(self.batch_axes) + ((self.model_axis,) if self.model_axis else ())
+        prod = math.prod(self.mesh.shape[a] for a in axes)
+        if axes and seq % prod == 0:
+            return axes
+        return self.shard_if(seq, self.model_axis)
+
+
+def make_ctx(mesh: Optional[Mesh], **kw) -> ParallelCtx:
+    """Build a ParallelCtx from a mesh created by launch.mesh."""
+    if mesh is None:
+        return ParallelCtx(mesh=None, batch_axes=(), model_axis=None, **kw)
+    names = mesh.axis_names
+    if names == ("pod", "data", "model"):
+        return ParallelCtx(mesh, ("pod", "data"), "model", **kw)
+    if names == ("data", "model"):
+        return ParallelCtx(mesh, ("data",), "model", **kw)
+    if names == ("data",):
+        return ParallelCtx(mesh, ("data",), None, **kw)
+    raise ValueError(f"unrecognized mesh axes {names}")

@@ -1,0 +1,195 @@
+"""Name-based partition rules for parameter/optimizer/cache pytrees.
+
+Specs are derived from leaf names + shapes so one rule set covers every
+architecture. Stacked layer params (leading L dim from the scan stack)
+get a None prefix automatically. Dims that don't divide the axis size
+fall back to replication (e.g. 4 KV heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.ctx import ParallelCtx
+
+# leaf name -> (trailing-rank, spec builder over trailing dims)
+# m = model axis entry maker: m(dim) -> axis or None
+
+
+def _rules(px: ParallelCtx):
+    m = lambda d: px.shard_if(d, px.model_axis)
+
+    def rule(name, shape, in_moe: bool):
+        n = name
+        if n in ("embedding",):  # (V, D)
+            return (m(shape[-2]), None)
+        if n in ("lm_head",):  # (D, V)
+            return (None, m(shape[-1]))
+        if n in ("wq", "wk", "wv"):  # (d, H, Dh)
+            return (None, m(shape[-2]), None)
+        if n in ("bq", "bk", "bv"):  # (H, Dh)
+            return (m(shape[-2]), None)
+        if n == "wo" and len(shape) >= 3:  # (H, Dh, d)
+            return (m(shape[-3]), None, None)
+        def fsdp_entry(dim):
+            # fsdp: shard the expert contraction dim over the data axes;
+            # GSPMD all-gathers the (small) per-layer slice just-in-time
+            # and reduce-scatters its grads (deepseek-v3).
+            if not px.fsdp or not px.batch_axes:
+                return None
+            ba = tuple(px.batch_axes) if len(px.batch_axes) > 1 \
+                else px.batch_axes[0]
+            return px.shard_if(dim, ba)
+
+        def expert_entry(dim):
+            # 2-D EP: experts shard over (data x model) jointly, one (or
+            # few) experts per device — weights never gathered (px.ep2d)
+            if px.ep2d and px.ep_axes is not None \
+                    and dim % px.axis_size(px.ep_axes) == 0:
+                return px.ep_axes
+            return m(dim)
+
+        # MoE expert weights are identified by their dict path ("moe" key,
+        # outside the dense "shared" sub-dict) — NOT by shape, which is
+        # ambiguous once layers are stacked: stacked dense (L, d, f) looks
+        # exactly like per-layer experts (E, d, f).
+        if n in ("w_gate", "w_up"):
+            if in_moe:  # experts (E, d, f): EP over model, fsdp over d
+                ee = expert_entry(shape[-3])
+                fs = None if isinstance(ee, tuple) else fsdp_entry(shape[-2])
+                return (ee, fs, None)
+            return (None, m(shape[-1]))  # dense (d, f): column parallel
+        if n == "w_down":
+            if in_moe:  # experts (E, f, d)
+                ee = expert_entry(shape[-3])
+                fs = None if isinstance(ee, tuple) else fsdp_entry(shape[-2])
+                return (ee, fs, None)
+            return (m(shape[-2]), None)  # dense (f, d) / zamba (2d, d)
+        if n == "router":  # (d, E)
+            return (None, m(shape[-1]))
+        # MLA
+        if n in ("w_dq", "w_dkv"):
+            return (None, None)
+        if n in ("w_uq", "w_uk", "w_uv"):  # (r, H, hd)
+            return (None, m(shape[-2]), None)
+        # rwkv6
+        if n in ("t_r", "t_k", "t_v", "t_g"):  # (d, d) -> column parallel
+            return (None, m(shape[-1]))
+        if n == "t_o":  # (d, d) -> row parallel
+            return (m(shape[-2]), None)
+        if n == "ck":  # (d, ff)
+            return (None, m(shape[-1]))
+        if n == "cv":  # (ff, d)
+            return (m(shape[-2]), None)
+        # mamba2
+        if n == "w_in":  # (d, 2di+2N+H)
+            return (None, m(shape[-1]))
+        if n == "w_out":  # (di, d)
+            return (m(shape[-2]), None)
+        if n == "proj":  # mtp (2d, d)
+            return (m(shape[-2]), None)
+        return None  # replicate
+
+    return rule
+
+
+def param_specs(params_shape: Any, px: ParallelCtx):
+    """Map a pytree of ShapeDtypeStructs (or arrays) to PartitionSpecs.
+
+    With ``px.fsdp`` every spec is additionally extended with data-axis
+    sharding on its largest free dim (ZeRO-3/FSDP semantics: GSPMD
+    all-gathers weights at use, reduce-scatters their grads)."""
+    rule = _rules(px)
+
+    def visit(path, leaf):
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        keys = {str(k.key) for k in path
+                if isinstance(k, jax.tree_util.DictKey)}
+        in_moe = "moe" in keys and "shared" not in keys
+        shape = leaf.shape
+        trailing = rule(name, shape, in_moe) if name else None
+        if trailing is None:
+            spec = P()
+        else:
+            prefix = (None,) * (len(shape) - len(trailing))
+            spec = P(*(prefix + tuple(trailing)))
+        if px.fsdp:
+            spec = zero1_spec(spec, shape, px)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def zero1_spec(spec: P, shape, px: ParallelCtx) -> P:
+    """Extend a param spec with data-axis sharding on the largest
+    unsharded, divisible dim (ZeRO-1 optimizer-state partitioning)."""
+    if px.mesh is None or not px.batch_axes:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None:
+                used.add(a)
+    avail = [a for a in px.batch_axes if a not in used]
+    if not avail:
+        return spec
+    # try the whole group first, then suffixes (innermost axes first)
+    for lo in range(len(avail)):
+        group = tuple(avail[lo:])
+        size = 1
+        for a in group:
+            size *= px.mesh.shape[a]
+        best, best_dim = -1, -1
+        for i, (e, d) in enumerate(zip(entries, shape)):
+            if e is None and d % size == 0 and d > best:
+                best, best_dim = d, i
+        if best_dim >= 0:
+            entries[best_dim] = group if len(group) > 1 else group[0]
+            return P(*entries)
+    return spec
+
+
+def opt_specs(param_specs_tree, params_shape, px: ParallelCtx,
+              zero1: bool = True, factored: bool = False,
+              lean: bool = False):
+    """Optimizer-state specs matching adamw_init/adafactor_init/
+    adafactor_lean_init."""
+    def one(spec, leaf):
+        return zero1_spec(spec, leaf.shape, px) if zero1 else spec
+
+    mv = jax.tree.map(one, param_specs_tree, params_shape)
+    if not factored:
+        return {"m": mv, "v": mv, "master": mv, "step": P()}
+
+    def drop(spec, leaf, axis_from_end):
+        # vr drops the last dim, vc the second-to-last (see adafactor_init)
+        shape = leaf.shape
+        if len(shape) < 2 or shape[-1] <= 1 or shape[-2] <= 1:
+            return P() if axis_from_end == 2 else spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        del entries[len(shape) - axis_from_end]
+        return P(*entries)
+
+    vr = jax.tree.map(lambda s, l: drop(one(s, l), l, 1),
+                      param_specs_tree, params_shape)
+    vc = jax.tree.map(lambda s, l: drop(one(s, l), l, 2),
+                      param_specs_tree, params_shape)
+    if lean:
+        return {"vr": vr, "vc": vc, "step": P()}
+    return {"m": mv, "vr": vr, "vc": vc, "master": mv, "step": P()}
+
+
+def to_shardings(spec_tree, px: ParallelCtx):
+    if px.mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(px.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

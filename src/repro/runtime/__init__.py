@@ -1,0 +1,2 @@
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401
+from repro.runtime.watchdog import Watchdog  # noqa: F401

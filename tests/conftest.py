@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; only the dry-run subprocesses fake a 512-chip mesh."""
+import os
+
+# Determinism + keep XLA from grabbing all RAM for test workers.
+os.environ.setdefault("XLA_PYTHON_CLIENT_PREALLOCATE", "false")
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

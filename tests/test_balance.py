@@ -1,0 +1,136 @@
+"""Load-balancing constraint tests (paper §4.4) — includes hypothesis
+property tests of the core invariants:
+
+  symmetric: migrations never change any LP's SE count;
+  quota: admitted migrations per (src, dst) never exceed the grant;
+  asymmetric: grants drain SEs toward the capacity profile, never past it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance as bal
+
+settings.register_profile("ci", deadline=None, max_examples=40)
+settings.load_profile("ci")
+
+
+def _random_case(draw, n_se_max=60, n_lp_max=5):
+    n_lp = draw(st.integers(2, n_lp_max))
+    n_se = draw(st.integers(n_lp, n_se_max))
+    lp = draw(st.lists(st.integers(0, n_lp - 1), min_size=n_se,
+                       max_size=n_se))
+    dest = draw(st.lists(st.integers(0, n_lp - 1), min_size=n_se,
+                         max_size=n_se))
+    cand = draw(st.lists(st.booleans(), min_size=n_se, max_size=n_se))
+    alpha = draw(st.lists(st.floats(0.0, 100.0, allow_nan=False),
+                          min_size=n_se, max_size=n_se))
+    lp = jnp.asarray(lp, jnp.int32)
+    dest = jnp.asarray(dest, jnp.int32)
+    cand = jnp.asarray(cand) & (dest != lp)  # a migration must move
+    return n_lp, lp, dest, cand, jnp.asarray(alpha, jnp.float32)
+
+
+case = st.builds(lambda d: d, st.data())
+
+
+@given(st.data())
+def test_symmetric_preserves_lp_counts(data):
+    n_lp, lp, dest, cand, alpha = _random_case(data.draw)
+    cmat = bal.candidate_matrix(cand, lp, dest, n_lp)
+    grants = bal.symmetric_grants(cmat)
+    admit = bal.select_migrations(cand, lp, dest, alpha, grants, n_lp)
+    new_lp = jnp.where(admit, dest, lp)
+    before = np.bincount(np.asarray(lp), minlength=n_lp)
+    after = np.bincount(np.asarray(new_lp), minlength=n_lp)
+    np.testing.assert_array_equal(before, after)
+
+
+@given(st.data())
+def test_admissions_respect_grants_and_candidacy(data):
+    n_lp, lp, dest, cand, alpha = _random_case(data.draw)
+    cmat = bal.candidate_matrix(cand, lp, dest, n_lp)
+    grants = bal.symmetric_grants(cmat)
+    admit = np.asarray(
+        bal.select_migrations(cand, lp, dest, alpha, grants, n_lp))
+    assert not np.any(admit & ~np.asarray(cand))
+    # per-(src,dst) admitted count <= grant
+    g = np.asarray(grants)
+    for s in range(n_lp):
+        for d in range(n_lp):
+            m = admit & (np.asarray(lp) == s) & (np.asarray(dest) == d)
+            assert m.sum() <= g[s, d]
+
+
+@given(st.data())
+def test_candidate_matrix_counts(data):
+    n_lp, lp, dest, cand, alpha = _random_case(data.draw)
+    cmat = np.asarray(bal.candidate_matrix(cand, lp, dest, n_lp))
+    for s in range(n_lp):
+        for d in range(n_lp):
+            want = int(np.sum(np.asarray(cand) & (np.asarray(lp) == s)
+                              & (np.asarray(dest) == d)))
+            assert cmat[s, d] == want
+
+
+def test_symmetric_grants_are_pairwise_min():
+    cand = jnp.array([[0, 5, 1], [3, 0, 0], [2, 4, 0]], jnp.int32)
+    g = np.asarray(bal.symmetric_grants(cand))
+    assert g[0, 1] == 3 and g[1, 0] == 3
+    assert g[0, 2] == 1 and g[2, 0] == 1
+    assert g[1, 2] == 0 and g[2, 1] == 0
+    assert np.all(np.diag(g) == 0)
+
+
+def test_select_prefers_higher_alpha():
+    # 3 candidates LP0->LP1 but only 1 reverse candidate: quota 1 each way.
+    lp = jnp.array([0, 0, 0, 1], jnp.int32)
+    dest = jnp.array([1, 1, 1, 0], jnp.int32)
+    cand = jnp.array([True, True, True, True])
+    alpha = jnp.array([1.5, 9.0, 2.5, 3.0], jnp.float32)
+    cmat = bal.candidate_matrix(cand, lp, dest, 2)
+    grants = bal.symmetric_grants(cmat)
+    admit = np.asarray(bal.select_migrations(cand, lp, dest, alpha, grants, 2))
+    np.testing.assert_array_equal(admit, [False, True, False, True])
+
+
+@given(st.data())
+def test_asymmetric_never_overshoots_targets(data):
+    n_lp, lp, dest, cand, alpha = _random_case(data.draw)
+    current = jnp.bincount(lp, length=n_lp)
+    capacity = jnp.ones((n_lp,), jnp.float32) / n_lp
+    cmat = bal.candidate_matrix(cand, lp, dest, n_lp)
+    grants = bal.asymmetric_grants(cmat, current, capacity)
+    admit = bal.select_migrations(cand, lp, dest, alpha, grants, n_lp)
+    new_lp = jnp.where(admit, dest, lp)
+    total = int(current.sum())
+    target = np.round(np.asarray(capacity) * total).astype(int)
+    before = np.asarray(current)
+    after = np.bincount(np.asarray(new_lp), minlength=n_lp)
+    # sources above target may only shed down to (at worst) their target;
+    # never *below* target - shed (the symmetric core keeps pairs even).
+    for l in range(n_lp):
+        if before[l] > target[l]:
+            assert after[l] >= target[l] - 0  # drain is capped by surplus
+        # destinations below target must not be pushed above it by the
+        # extra one-way grants (pairwise swaps keep counts even).
+        if before[l] < target[l]:
+            assert after[l] <= target[l]
+
+
+def test_asymmetric_drains_toward_capacity():
+    """A 2-LP system with all SEs on LP0 and capacity 50/50: one-way
+    grants must move SEs to LP1 even with no reverse candidates."""
+    n = 20
+    lp = jnp.zeros((n,), jnp.int32)
+    dest = jnp.ones((n,), jnp.int32)
+    cand = jnp.ones((n,), bool)
+    alpha = jnp.arange(n, dtype=jnp.float32)
+    current = jnp.bincount(lp, length=2)
+    cap = jnp.array([0.5, 0.5], jnp.float32)
+    cmat = bal.candidate_matrix(cand, lp, dest, 2)
+    grants = bal.asymmetric_grants(cmat, current, cap)
+    admit = bal.select_migrations(cand, lp, dest, alpha, grants, 2)
+    moved = int(admit.sum())
+    assert 0 < moved <= 10  # drains toward the 10/10 target, never past

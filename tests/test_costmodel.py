@@ -1,0 +1,73 @@
+"""Cost-model tests (paper §3, Eqs. 1–6)."""
+import pytest
+
+from repro.core.costmodel import DISTRIBUTED, PARALLEL, amdahl, wct
+
+
+BASE = {"local_msgs": 1e6, "remote_msgs": 1e6, "migrations": 0.0,
+        "heu_evals": 0.0}
+
+
+def test_amdahl_bounds():
+    assert amdahl(1, 0.05) == pytest.approx(1.0)
+    for n in (2, 4, 16):
+        assert 1.0 < amdahl(n, 0.05) < n
+    # s -> 0 recovers linear speedup
+    assert amdahl(8, 0.0) == pytest.approx(8.0)
+
+
+def test_tec_decomposition_sums():
+    out = wct(dict(BASE, migrations=1e3, heu_evals=1e5), PARALLEL,
+              n_lp=4, timesteps=1200, interaction_bytes=100,
+              migration_bytes=20480)
+    parts = (out["MCC"] + out["LCC"] + out["RCC"] + out["SC"] + out["MMC"]
+             + out["MigCPU"] + out["MigComm"] + out["Heu"])
+    assert out["TEC"] == pytest.approx(parts)
+    assert out["MigC"] == pytest.approx(
+        out["MigCPU"] + out["MigComm"] + out["Heu"])
+
+
+def test_remote_messages_cost_more_than_local():
+    """Paper §3: remote interactions cost more than local ones, with the
+    separation growing from shared memory to the LAN (batched-delivery
+    calibration: marshaling + bandwidth, latency in the barrier)."""
+    for p, floor in ((PARALLEL, 1.0), (DISTRIBUTED, 5.0)):
+        local = wct(dict(BASE, remote_msgs=0.0), p, 4, 1200)["LCC"]
+        remote = wct(dict(BASE, local_msgs=0.0), p, 4, 1200)["RCC"]
+        assert remote > floor * local, (p.name, remote, local)
+    # LAN remote messages cost much more than shared-memory remote ones,
+    # and the per-byte separation is ~45x (GbE path vs memcpy)
+    kw = dict(interaction_bytes=1024)
+    r_par = wct(dict(BASE, local_msgs=0.0), PARALLEL, 4, 1200, **kw)["RCC"]
+    r_dis = wct(dict(BASE, local_msgs=0.0), DISTRIBUTED, 4, 1200, **kw)["RCC"]
+    assert r_dis > 10 * r_par
+
+
+def test_clustering_tradeoff_sign():
+    """Converting remote->local deliveries must lower TEC when MigC is
+    small, and a huge migration payload can flip the sign (Table 3's
+    negative rows)."""
+    before = wct(BASE, DISTRIBUTED, 4, 1200, interaction_bytes=1024)
+    clustered = dict(BASE, local_msgs=1.8e6, remote_msgs=0.2e6,
+                     migrations=5e3, heu_evals=1e6)
+    after_cheap = wct(clustered, DISTRIBUTED, 4, 1200,
+                      interaction_bytes=1024, migration_bytes=32)
+    assert after_cheap["TEC"] < before["TEC"]
+    # per-migration byte cost high enough to erase the gain
+    after_heavy = wct(dict(clustered, migrations=4e5), DISTRIBUTED, 4, 1200,
+                      interaction_bytes=1, migration_bytes=81920)
+    assert after_heavy["TEC"] > wct(BASE, DISTRIBUTED, 4, 1200,
+                                    interaction_bytes=1)["TEC"]
+
+
+def test_heuristic_cost_scales_with_evals():
+    a = wct(dict(BASE, heu_evals=1e6), PARALLEL, 4, 1200)
+    b = wct(dict(BASE, heu_evals=2e6), PARALLEL, 4, 1200)
+    assert b["Heu"] == pytest.approx(2 * a["Heu"])
+    assert b["TEC"] > a["TEC"]
+
+
+def test_more_lps_cut_compute_term():
+    t4 = wct(BASE, PARALLEL, 4, 1200)["MCC"]
+    t16 = wct(BASE, PARALLEL, 16, 1200)["MCC"]
+    assert t16 < t4

@@ -1,0 +1,46 @@
+"""Data-pipeline tests: determinism, restart replay, prefetch liveness."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM, make_pipeline
+
+CFG = DataConfig(vocab_size=64, seq_len=32, global_batch=4, seed=7)
+
+
+def test_batch_is_pure_function_of_seed_and_step():
+    a = SyntheticLM(CFG).batch_at(13)
+    b = SyntheticLM(CFG).batch_at(13)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(DataConfig(**{**CFG.__dict__, "seed": 8})).batch_at(13)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_restart_replays_identical_stream():
+    it = make_pipeline(CFG, start_step=0)
+    first = [next(it) for _ in range(6)]
+    it.close()
+    resumed = make_pipeline(CFG, start_step=3)
+    for want in first[3:]:
+        got = next(resumed)
+        np.testing.assert_array_equal(got["tokens"], want["tokens"])
+    resumed.close()
+
+
+def test_markov_structure_is_learnable_signal():
+    """Most next-tokens follow the deterministic rule — the synthetic task
+    has structure a model can learn (both orders)."""
+    for order, rule in ((1, lambda t: (t[:, 1:-1] * 31 + 7) % 64),
+                        (2, lambda t: (t[:, 1:-1] * 31 + t[:, :-2] * 17 + 7)
+                         % 64)):
+        b = SyntheticLM(DataConfig(vocab_size=64, seq_len=256, global_batch=8,
+                                   structure=0.9, order=order)).batch_at(0)
+        t = b["tokens"]
+        frac = float(np.mean(rule(t) == t[:, 2:]))
+        assert frac > 0.8, (order, frac)
+
+
+def test_tokens_in_vocab_range():
+    b = SyntheticLM(CFG).batch_at(2)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < CFG.vocab_size
+    assert b["tokens"].dtype == np.int32
+    assert b["loss_mask"].shape == b["tokens"].shape

@@ -1,0 +1,134 @@
+"""GAIA self-clustering adapted to MoE expert placement (beyond-paper).
+
+Key invariants:
+  * the symmetric balancer keeps exactly E/G experts per shard;
+  * skewed traffic drives placement changes that reduce all-to-all bytes;
+  * the physical migration (weights stored in segment order) is a
+    permutation: outputs are bit-identical before/after a migration —
+    the paper's transparency requirement at the expert level.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gaia_moe as gm
+
+
+def _skewed_traffic(key, cfg, hot_group=0):
+    """Traffic where each expert is hammered by one specific group."""
+    E, G = cfg.num_experts, cfg.num_groups
+    base = jax.random.uniform(key, (G, E)) * 5.0
+    hot = jnp.arange(E) % G  # expert e's hot group
+    boost = jnp.zeros((G, E)).at[hot, jnp.arange(E)].set(100.0)
+    return base + boost
+
+
+def test_placement_counts_invariant():
+    cfg = gm.GaiaMoEConfig(num_experts=16, num_groups=4, mf=1.1, mt=0,
+                           window=2, interval=1)
+    st = gm.init_state(cfg)
+    key = jax.random.key(0)
+    for i in range(6):
+        st = gm.observe(cfg, st, _skewed_traffic(jax.random.fold_in(key, i),
+                                                 cfg))
+        st, n = gm.evaluate(cfg, st)
+        counts = np.bincount(np.asarray(st["placement"]), minlength=4)
+        np.testing.assert_array_equal(counts, [4, 4, 4, 4])
+
+
+def test_migrations_reduce_a2a_bytes():
+    cfg = gm.GaiaMoEConfig(num_experts=16, num_groups=4, mf=1.05, mt=0,
+                           window=1, interval=1)
+    st = gm.init_state(cfg)
+    key = jax.random.key(1)
+    # adversarial start: expert e lives on shard e%G but its hot group is
+    # (e+1)%G  -> everything is remote
+    st["placement"] = (jnp.arange(16, dtype=jnp.int32) + 1) % 4
+    tr = _skewed_traffic(key, cfg)
+    before = float(gm.a2a_bytes(st["placement"], tr, token_bytes=2))
+    total_migs = 0
+    for _ in range(4):
+        st = gm.observe(cfg, st, tr)
+        st, n = gm.evaluate(cfg, st)
+        total_migs += int(n)
+    after = float(gm.a2a_bytes(st["placement"], tr, token_bytes=2))
+    assert total_migs > 0
+    assert after < before, (before, after)
+
+
+def test_mt_throttles_expert_moves():
+    cfg = gm.GaiaMoEConfig(num_experts=8, num_groups=2, mf=1.05, mt=1000,
+                           window=1, interval=1)
+    st = gm.init_state(cfg)
+    st["placement"] = (jnp.arange(8, dtype=jnp.int32) + 1) % 2
+    st["last_mig"] = jnp.zeros((8,), jnp.int32)  # all just moved
+    st = gm.observe(cfg, st, _skewed_traffic(jax.random.key(2),
+                                             gm.GaiaMoEConfig(8, 2)))
+    st, n = gm.evaluate(cfg, st)
+    assert int(n) == 0
+
+
+def test_placement_permutation_roundtrip():
+    placement_shard = jnp.array([1, 0, 1, 0], jnp.int32)  # expert -> shard
+    perm, order = gm.placement_permutation(placement_shard, 4)
+    # order: segment -> expert, shard-major: shard0 gets experts 1,3
+    np.testing.assert_array_equal(np.asarray(order), [1, 3, 0, 2])
+    np.testing.assert_array_equal(np.asarray(perm)[np.asarray(order)],
+                                  np.arange(4))
+    # with 2 segments per shard, segment s belongs to shard s // 2
+    seg_shard = np.asarray(perm) // 2
+    np.testing.assert_array_equal(seg_shard, np.asarray(placement_shard))
+
+
+def test_apply_migration_transparency():
+    """Permuting stored weights + routing ids leaves the MoE layer's
+    output unchanged (paper §4.2 transparency, expert edition)."""
+    from repro.models.moe import moe_fwd
+    from repro.configs.base import MoEConfig
+    from repro.parallel.ctx import make_ctx
+
+    m = MoEConfig(num_experts=8, top_k=2, d_expert=16, capacity_factor=8.0)
+    px = make_ctx(None)
+    key = jax.random.key(3)
+    from repro.models.moe import init_moe
+    p = init_moe(key, 12, m)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, 12),
+                          jnp.bfloat16)
+
+    ident = jnp.arange(8, dtype=jnp.int32)
+    out0, met0 = moe_fwd(p, x, m=m, px=px, batch_entry=None, placement=ident)
+
+    # migrate: new placement permutation (expert e -> segment perm[e])
+    perm = jnp.array([3, 0, 1, 2, 7, 4, 6, 5], jnp.int32)
+    order = jnp.argsort(perm)  # segment -> expert
+    idx = gm.migration_index(ident, order)
+    p2 = dict(p)
+    for k in ("w_gate", "w_up", "w_down"):
+        p2[k] = gm.apply_migration(p[k], idx)
+    out1, met1 = moe_fwd(p2, x, m=m, px=px, batch_entry=None, placement=perm)
+    np.testing.assert_array_equal(np.asarray(out0, np.float32),
+                                  np.asarray(out1, np.float32))
+    # traffic metrics are reported per *expert id*, so they match too
+    np.testing.assert_array_equal(np.asarray(met0["expert_counts"]),
+                                  np.asarray(met1["expert_counts"]))
+
+
+def test_count_moves():
+    idx = jnp.array([[0, 1, 2, 3], [1, 0, 2, 3]], jnp.int32)
+    assert int(gm.count_moves(idx)) == 2
+
+
+def test_maybe_update_interval():
+    cfg = gm.GaiaMoEConfig(num_experts=8, num_groups=2, mf=0.5, mt=0,
+                           window=1, interval=3)
+    st = gm.init_state(cfg)
+    st["placement"] = (jnp.arange(8, dtype=jnp.int32) + 1) % 2
+    tr = _skewed_traffic(jax.random.key(4), cfg)
+    moves = []
+    for _ in range(6):
+        st, n = gm.maybe_update(cfg, st, tr)
+        moves.append(int(n))
+    # evaluations fire only on steps 3 and 6
+    assert moves[0] == 0 and moves[1] == 0
+    assert sum(1 for mv in moves if mv > 0) <= 2
+    assert any(mv > 0 for mv in moves)

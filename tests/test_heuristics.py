@@ -1,0 +1,123 @@
+"""Unit tests for the self-clustering heuristics (paper §4.3).
+
+Hand-stepped traces verify the window semantics of #1/#2/#3 and the
+MF/MT gating exactly as specified.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.heuristics import HeuristicConfig, init_state, update_window, evaluate
+
+
+def _push(cfg, st, counts, senders, t):
+    return update_window(cfg, st, jnp.asarray(counts, jnp.int32),
+                         jnp.asarray(senders, bool), t)
+
+
+def test_h1_candidate_when_external_dominates():
+    # 2 SEs, 2 LPs. SE0 on LP0 talks mostly to LP1 -> candidate.
+    cfg = HeuristicConfig(kind=1, mf=1.5, mt=0, kappa=4)
+    st = init_state(cfg, n_se=2, n_lp=2)
+    lp = jnp.array([0, 0], jnp.int32)
+    for t in range(4):
+        st = _push(cfg, st, [[1, 4], [3, 1]], [True, True], t)
+    cand, dest, alpha, st, n_evals = evaluate(cfg, st, lp, 4)
+    np.testing.assert_array_equal(np.asarray(cand), [True, False])
+    assert int(dest[0]) == 1
+    # alpha = eps/iota = 16/4 for SE0; 4/12 for SE1
+    np.testing.assert_allclose(np.asarray(alpha), [4.0, 4 / 12], rtol=1e-6)
+    assert int(n_evals) == 2
+
+
+def test_h1_window_expires_old_events():
+    """#1's window covers the last kappa timesteps only."""
+    cfg = HeuristicConfig(kind=1, mf=1.0, mt=0, kappa=2)
+    st = init_state(cfg, n_se=1, n_lp=2)
+    lp = jnp.array([0], jnp.int32)
+    st = _push(cfg, st, [[0, 9]], [True], 0)  # heavy remote burst
+    # two silent steps: the burst leaves the 2-step window
+    st = _push(cfg, st, [[0, 0]], [True], 1)
+    st = _push(cfg, st, [[0, 0]], [True], 2)
+    cand, _, _, _, _ = evaluate(cfg, st, lp, 3)
+    assert not bool(cand[0])
+
+
+def test_h2_event_window_keeps_old_events_for_rare_senders():
+    """#2 retains the last omega *sending events* regardless of age —
+    the paper's stated difference from #1."""
+    cfg1 = HeuristicConfig(kind=1, mf=1.0, mt=0, kappa=2)
+    cfg2 = HeuristicConfig(kind=2, mf=1.0, mt=0, omega=2)
+    st1 = init_state(cfg1, 1, 2)
+    st2 = init_state(cfg2, 1, 2)
+    lp = jnp.array([0], jnp.int32)
+    st1 = _push(cfg1, st1, [[0, 5]], [True], 0)
+    st2 = _push(cfg2, st2, [[0, 5]], [True], 0)
+    for t in range(1, 6):  # five idle timesteps (not senders)
+        st1 = _push(cfg1, st1, [[0, 0]], [False], t)
+        st2 = _push(cfg2, st2, [[0, 0]], [False], t)
+    c1, *_ = evaluate(cfg1, st1, lp, 6)
+    c2, *_ = evaluate(cfg2, st2, lp, 6)
+    assert not bool(c1[0])  # timestep window forgot the burst...
+    assert bool(c2[0])  # ...the event window did not
+
+
+def test_h2_ring_overwrites_oldest():
+    cfg = HeuristicConfig(kind=2, mf=0.5, mt=0, omega=2)
+    st = init_state(cfg, 1, 2)
+    lp = jnp.array([0], jnp.int32)
+    st = _push(cfg, st, [[0, 8]], [True], 0)
+    st = _push(cfg, st, [[4, 0]], [True], 1)
+    st = _push(cfg, st, [[4, 0]], [True], 2)  # evicts the remote burst
+    cand, _, alpha, _, _ = evaluate(cfg, st, lp, 3)
+    assert not bool(cand[0])
+    assert float(alpha[0]) == 0.0
+
+
+def test_h3_evaluates_only_after_zeta_interactions():
+    cfg = HeuristicConfig(kind=3, mf=1.0, mt=0, omega=4, zeta=6)
+    st = init_state(cfg, 1, 2)
+    lp = jnp.array([0], jnp.int32)
+    st = _push(cfg, st, [[0, 4]], [True], 0)  # 4 interactions < zeta
+    cand, _, _, st, n = evaluate(cfg, st, lp, 1)
+    assert int(n) == 0 and not bool(cand[0])
+    st = _push(cfg, st, [[0, 4]], [True], 1)  # cumulative 8 >= zeta
+    cand, _, _, st, n = evaluate(cfg, st, lp, 2)
+    assert int(n) == 1 and bool(cand[0])
+    # counter reset after the evaluation
+    cand, _, _, st, n = evaluate(cfg, st, lp, 3)
+    assert int(n) == 0
+
+
+def test_mt_blocks_recent_migrants():
+    cfg = HeuristicConfig(kind=1, mf=1.0, mt=10, kappa=2)
+    st = init_state(cfg, 1, 2)
+    st["last_mig"] = jnp.array([5], jnp.int32)
+    lp = jnp.array([0], jnp.int32)
+    st = _push(cfg, st, [[1, 9]], [True], 6)
+    cand, *_ = evaluate(cfg, st, lp, 7)  # 7 - 5 < 10
+    assert not bool(cand[0])
+    cand, *_ = evaluate(cfg, st, lp, 15)  # 15 - 5 >= 10
+    assert bool(cand[0])
+
+
+def test_mf_threshold_is_strict():
+    cfg = HeuristicConfig(kind=1, mf=2.0, mt=0, kappa=1)
+    st = init_state(cfg, 2, 2)
+    lp = jnp.array([0, 0], jnp.int32)
+    # SE0: alpha = 2.0 exactly (not > MF); SE1: alpha = 2.5
+    st = _push(cfg, st, [[2, 4], [2, 5]], [True, True], 0)
+    cand, *_ = evaluate(cfg, st, lp, 1)
+    np.testing.assert_array_equal(np.asarray(cand), [False, True])
+
+
+def test_zero_local_traffic_uses_iota_floor():
+    """iota=0 must not divide by zero; any external traffic clears MF."""
+    cfg = HeuristicConfig(kind=1, mf=1.5, mt=0, kappa=1)
+    st = init_state(cfg, 1, 3)
+    lp = jnp.array([0], jnp.int32)
+    st = _push(cfg, st, [[0, 0, 2]], [True], 0)
+    cand, dest, alpha, _, _ = evaluate(cfg, st, lp, 1)
+    assert bool(cand[0]) and int(dest[0]) == 2
+    assert np.isfinite(float(alpha[0]))

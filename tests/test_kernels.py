@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode, which executes
+the kernel body on CPU) vs. the pure-jnp oracle in each kernel's ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.flash_decode import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.moe_gate.moe_gate import moe_gate
+from repro.kernels.moe_gate.ref import moe_gate_ref
+from repro.kernels.proximity.proximity import proximity_lp_counts
+from repro.kernels.proximity.ref import proximity_lp_counts_ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,s,d", [(2, 128, 64), (4, 256, 64), (1, 512, 128),
+                                    (3, 384, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(bh, s, d, causal, dtype):
+    k = jax.random.key(bh * s + d + causal)
+    q = _rand(jax.random.fold_in(k, 0), (bh, s, d), dtype)
+    kk = _rand(jax.random.fold_in(k, 1), (bh, s, d), dtype)
+    v = _rand(jax.random.fold_in(k, 2), (bh, s, d), dtype)
+    out = flash_attention(q, kk, v, causal=causal, interpret=True)
+    ref = attention_ref(q, kk, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_cross_lengths():
+    """Skv != Sq (cross-attention / enc-dec shapes)."""
+    k = jax.random.key(9)
+    q = _rand(jax.random.fold_in(k, 0), (2, 128, 64), jnp.float32)
+    kk = _rand(jax.random.fold_in(k, 1), (2, 384, 64), jnp.float32)
+    v = _rand(jax.random.fold_in(k, 2), (2, 384, 64), jnp.float32)
+    out = flash_attention(q, kk, v, causal=False, interpret=True)
+    ref = attention_ref(q, kk, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [(2, 8, 2, 512, 64), (1, 4, 4, 1024, 64),
+                                         (3, 8, 1, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(b, h, hkv, s, d, dtype):
+    k = jax.random.key(b + h + s)
+    q = _rand(jax.random.fold_in(k, 0), (b, h, d), dtype)
+    kc = _rand(jax.random.fold_in(k, 1), (b, s, hkv, d), dtype)
+    vc = _rand(jax.random.fold_in(k, 2), (b, s, hkv, d), dtype)
+    for pos in (0, s // 3, s - 1):
+        out = flash_decode(q, kc, vc, jnp.int32(pos), interpret=True)
+        ref = decode_ref(q, kc, vc, jnp.int32(pos))
+        tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# moe gate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,e,k", [(256, 16, 2), (512, 64, 8), (128, 8, 1)])
+@pytest.mark.parametrize("use_bias", [False, True])
+@pytest.mark.parametrize("norm_topk", [True, False])
+def test_moe_gate_sweep(t, e, k, use_bias, norm_topk):
+    key = jax.random.key(t + e + k)
+    logits = jax.random.normal(key, (t, e), jnp.float32) * 2.0
+    bias = (jax.random.normal(jax.random.fold_in(key, 1), (e,), jnp.float32)
+            * 0.1 if use_bias else None)
+    p1, e1, c1 = moe_gate(logits, k, bias=bias, norm_topk=norm_topk,
+                          interpret=True)
+    p0, e0, c0 = moe_gate_ref(logits, k, bias=bias, norm_topk=norm_topk)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p0), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c0))
+
+
+# ---------------------------------------------------------------------------
+# proximity (the ABM hot spot)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,n_lp,rng", [(128, 4, 60.0), (256, 8, 120.0),
+                                        (192, 3, 250.0)])
+def test_proximity_sweep(n, n_lp, rng):
+    key = jax.random.key(n + n_lp)
+    pos = jax.random.uniform(key, (n, 2), maxval=1000.0)
+    lp = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, n_lp)
+    sender = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.4, (n,))
+    got = proximity_lp_counts(pos, lp, sender, n_lp, 1000.0, rng,
+                              interpret=True)
+    ref = proximity_lp_counts_ref(pos, lp, sender, n_lp, 1000.0, rng)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_proximity_toroidal_edge():
+    """Pairs straddling the wrap line must count (distance via the torus)."""
+    pos = jnp.array([[2.0, 2.0], [998.0, 998.0], [500.0, 500.0]])
+    lp = jnp.array([0, 1, 1], jnp.int32)
+    sender = jnp.array([True, True, True])
+    got = np.asarray(proximity_lp_counts(pos, lp, sender, 2, 1000.0, 10.0,
+                                         interpret=True))
+    assert got[0, 1] == 1 and got[1, 0] == 1 and got[2].sum() == 0
+
+
+def test_proximity_nonsenders_zero():
+    key = jax.random.key(3)
+    pos = jax.random.uniform(key, (64, 2), maxval=100.0)
+    lp = jnp.zeros((64,), jnp.int32)
+    sender = jnp.zeros((64,), bool)
+    got = np.asarray(proximity_lp_counts(pos, lp, sender, 2, 100.0, 50.0,
+                                         interpret=True))
+    assert got.sum() == 0

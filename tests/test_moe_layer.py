@@ -1,0 +1,119 @@
+"""MoE layer semantics vs. a naive per-token oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import _capacity, init_moe, moe_fwd
+from repro.parallel.ctx import make_ctx
+
+PX = make_ctx(None)
+
+
+def _naive_moe(p, x, m):
+    """Per-token dense evaluation of the same routing (no capacity)."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D).astype(jnp.float32)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_e = jax.lax.top_k(probs, m.top_k)
+    top_p = jnp.take_along_axis(probs, top_e, axis=-1)
+    if m.norm_topk_prob:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros_like(xt)
+    wg = p["w_gate"].astype(jnp.float32)
+    wu = p["w_up"].astype(jnp.float32)
+    wd = p["w_down"].astype(jnp.float32)
+    for kslot in range(m.top_k):
+        e = top_e[:, kslot]
+        w = top_p[:, kslot]
+        g = jnp.einsum("td,tdf->tf", xt, wg[e])
+        u = jnp.einsum("td,tdf->tf", xt, wu[e])
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("tf,tfd->td", h, wd[e])
+        out = out + w[:, None] * y
+    if "shared" in p:
+        g = xt @ p["shared"]["w_gate"].astype(jnp.float32)
+        u = xt @ p["shared"]["w_up"].astype(jnp.float32)
+        out = out + (jax.nn.silu(g) * u) @ p["shared"]["w_down"].astype(
+            jnp.float32)
+    return out.reshape(B, S, D)
+
+
+@pytest.mark.parametrize("shared", [0, 1])
+def test_moe_matches_naive_when_capacity_ample(shared):
+    m = MoEConfig(num_experts=8, top_k=2, d_expert=16, capacity_factor=8.0,
+                  num_shared_experts=shared, d_shared=16 if shared else 0)
+    key = jax.random.key(0)
+    p = init_moe(key, 12, m)
+    x = (jax.random.normal(jax.random.fold_in(key, 1), (2, 16, 12))
+         * 0.5).astype(jnp.bfloat16)
+    got, metrics = moe_fwd(p, x, m=m, px=PX, batch_entry=None)
+    assert int(metrics["moe_dropped"]) == 0
+    want = _naive_moe(p, x, m)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=0.06, rtol=0.08)
+
+
+def test_capacity_drops_overflow_tokens():
+    m = MoEConfig(num_experts=4, top_k=1, d_expert=8, capacity_factor=0.25)
+    key = jax.random.key(2)
+    p = init_moe(key, 8, m)
+    # selection bias forces every token onto expert 0 (combine weights
+    # still from the unbiased probs — nonzero)
+    bias = jnp.array([100.0, 0.0, 0.0, 0.0], jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 8),
+                          jnp.bfloat16)
+    out, metrics = moe_fwd(p, x, m=m, px=PX, batch_entry=None,
+                           router_bias=bias)
+    assert int(metrics["moe_dropped"]) > 0
+    # dropped tokens contribute zero from routed experts
+    C = max(2 * m.top_k, _capacity(64, m))
+    kept = np.asarray(out, np.float32)
+    n_zero_rows = int((np.abs(kept.reshape(-1, 8)).sum(-1) < 1e-6).sum())
+    assert n_zero_rows == 64 - C
+
+
+def test_router_bias_changes_selection_not_weights():
+    """Aux-free bias shifts WHICH experts are picked, but the combine
+    weights still come from the unbiased probabilities (DeepSeek-V3)."""
+    m = MoEConfig(num_experts=4, top_k=1, d_expert=8, capacity_factor=4.0,
+                  norm_topk_prob=False)
+    key = jax.random.key(3)
+    p = init_moe(key, 8, m)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 8),
+                          jnp.bfloat16)
+    bias = jnp.array([0.0, 0.0, 0.0, 10.0], jnp.float32)
+    _, m0 = moe_fwd(p, x, m=m, px=PX, batch_entry=None)
+    _, m1 = moe_fwd(p, x, m=m, px=PX, batch_entry=None, router_bias=bias)
+    c0 = np.asarray(m0["expert_counts"])
+    c1 = np.asarray(m1["expert_counts"])
+    assert c1[3] == 32  # bias forces expert 3 for everyone
+    assert c0[3] < 32
+
+
+def test_expert_counts_and_group_counts_consistent():
+    m = MoEConfig(num_experts=8, top_k=2, d_expert=8, capacity_factor=4.0)
+    key = jax.random.key(4)
+    p = init_moe(key, 8, m)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 8),
+                          jnp.bfloat16)
+    _, met = moe_fwd(p, x, m=m, px=PX, batch_entry=None)
+    assert int(met["expert_counts"].sum()) == 4 * 8 * m.top_k
+    np.testing.assert_array_equal(
+        np.asarray(met["group_expert_counts"].sum(0)),
+        np.asarray(met["expert_counts"]))
+
+
+def test_aux_loss_penalizes_imbalance():
+    m = MoEConfig(num_experts=4, top_k=1, d_expert=8, capacity_factor=4.0)
+    key = jax.random.key(5)
+    p = init_moe(key, 8, m)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 8),
+                          jnp.bfloat16)
+    _, balanced = moe_fwd(p, x, m=m, px=PX, batch_entry=None)
+    p_skew = dict(p, router=jnp.zeros((8, 4), jnp.float32).at[:, 0].set(5.0))
+    _, skewed = moe_fwd(p_skew, x, m=m, px=PX, batch_entry=None)
+    assert float(skewed["moe_aux_loss"]) > float(balanced["moe_aux_loss"])

@@ -1,0 +1,145 @@
+"""Optimizer-layer tests: AdamW, Adafactor (+lean/stochastic rounding),
+q8 error-feedback compression, DiLoCo outer loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamWConfig, adamw_apply, adamw_init, lr_at
+from repro.optim.adafactor import (adafactor_apply, adafactor_init,
+                                   adafactor_lean_apply, adafactor_lean_init,
+                                   _stochastic_round_bf16)
+from repro.optim.compress import dequantize_q8, ef_q8_step, quantize_q8
+from repro.optim.diloco import DiLoCoConfig, diloco_init, outer_step
+
+
+OPT = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=10_000, weight_decay=0.0)
+
+
+def _quadratic_losses(apply_fn, init_fn, steps=60):
+    """Minimize ||w - target||^2 from w=0; returns loss trajectory."""
+    target = jnp.array([1.0, -2.0, 3.0], jnp.float32)
+    params = {"w": jnp.zeros(3, jnp.float32)}
+    state = init_fn(params)
+    losses = []
+    for _ in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = apply_fn(OPT, grads, state, params)
+        losses.append(float(jnp.sum((params["w"] - target) ** 2)))
+    return losses
+
+
+def test_adamw_converges_on_quadratic():
+    losses = _quadratic_losses(adamw_apply, adamw_init)
+    assert losses[-1] < 1e-2 * losses[0]
+
+
+def test_adafactor_converges_on_quadratic():
+    losses = _quadratic_losses(adafactor_apply, adafactor_init)
+    assert losses[-1] < 0.1 * losses[0]
+
+
+def test_adafactor_lean_converges_on_quadratic():
+    losses = _quadratic_losses(adafactor_lean_apply, adafactor_lean_init)
+    assert losses[-1] < 0.1 * losses[0]
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(4, jnp.float32)}
+    state = adamw_init(params)
+    huge = {"w": jnp.full(4, 1e9, jnp.float32)}
+    p2, _, m = adamw_apply(AdamWConfig(lr=0.1, warmup_steps=0, clip_norm=1.0),
+                           huge, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(2e9)
+    assert np.all(np.isfinite(np.asarray(p2["w"])))
+    assert np.abs(np.asarray(p2["w"])).max() < 1.0
+
+
+def test_lr_schedule_warmup_and_cosine():
+    c = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_at(c, 1)) < float(lr_at(c, 10))
+    assert float(lr_at(c, 10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr_at(c, 100)) == pytest.approx(0.1, rel=1e-3)  # floor 10%
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((20000,), 1.0 + 2 ** -10, jnp.float32)  # between bf16 grid
+    r = _stochastic_round_bf16(jax.random.key(0), x).astype(jnp.float32)
+    vals = np.unique(np.asarray(r))
+    assert len(vals) == 2  # rounds to the two neighbours only
+    mean = float(r.mean())
+    assert abs(mean - float(x[0])) < 2e-4  # unbiased in expectation
+
+
+def test_adafactor_lean_state_is_small():
+    params = {"w": jnp.zeros((64, 64), jnp.bfloat16)}
+    lean = adafactor_lean_init(params)
+    full = adafactor_init(params)
+    bytes_of = lambda t: sum(l.size * l.dtype.itemsize
+                             for l in jax.tree.leaves(t))
+    assert bytes_of(lean) < 0.05 * bytes_of(full)
+
+
+# ---------------------------------------------------------------------------
+# q8 compression
+# ---------------------------------------------------------------------------
+
+
+def test_q8_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.key(1), (1000,), jnp.float32) * 3
+    q, s = quantize_q8(x)
+    y = dequantize_q8(q, s, x.shape)
+    # error bounded by half a quantization step per block
+    step = np.asarray(s).max()
+    assert float(jnp.abs(x - y).max()) <= step / 2 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    """With a constant tiny gradient, plain q8 loses it entirely; EF
+    recovers it over steps (the residual accumulates until it crosses a
+    quantization step)."""
+    g = jnp.full((256,), 1e-4, jnp.float32)
+    # an outlier in the block makes the quantization step >> |g|: plain
+    # q8 transmits exactly 0 for the small entries every single step
+    g = g.at[0].set(0.1)
+    q0, s0 = quantize_q8(g)
+    assert float(dequantize_q8(q0, s0, g.shape)[1:].max()) == 0.0
+    e = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    steps = 200
+    for _ in range(steps):
+        target = g + e
+        q, s = quantize_q8(target)
+        deq = dequantize_q8(q, s, g.shape)
+        e = target - deq
+        total = total + deq
+    # EF: the mean transmitted value approaches the true gradient
+    np.testing.assert_allclose(np.asarray(total[1:]) / steps,
+                               np.asarray(g[1:]), rtol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# DiLoCo
+# ---------------------------------------------------------------------------
+
+
+def test_diloco_outer_moves_toward_pod_mean():
+    params = {"w": jnp.zeros(3, jnp.float32)}
+    st = diloco_init(params)
+    pod_mean = {"w": jnp.array([1.0, 1.0, 1.0])}  # pods agreed: move +1
+    cfg = DiLoCoConfig(outer_lr=0.7, outer_momentum=0.0)
+    st2, new_global = outer_step(cfg, st, pod_mean)
+    np.testing.assert_allclose(np.asarray(new_global["w"]),
+                               [0.7, 0.7, 0.7], rtol=1e-6)
+
+
+def test_diloco_momentum_accelerates():
+    params = {"w": jnp.zeros(1, jnp.float32)}
+    cfg_m = DiLoCoConfig(outer_lr=0.3, outer_momentum=0.9)
+    cfg_0 = DiLoCoConfig(outer_lr=0.3, outer_momentum=0.0)
+    sm, s0 = diloco_init(params), diloco_init(params)
+    gm, g0 = params, params
+    for _ in range(5):  # pods keep reporting +1 past the global
+        sm, gm = outer_step(cfg_m, sm, {"w": gm["w"] + 1})
+        s0, g0 = outer_step(cfg_0, s0, {"w": g0["w"] + 1})
+    assert float(gm["w"][0]) > float(g0["w"][0])

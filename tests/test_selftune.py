@@ -1,0 +1,51 @@
+"""Self-tuning adaptive partitioning tests (paper §5.5)."""
+import jax
+import pytest
+
+from repro.core.abm import ABMConfig
+from repro.core.engine import EngineConfig
+from repro.core.heuristics import HeuristicConfig
+from repro.core.selftune import SelfTuneConfig, inter_run_tune, intra_run_tune
+
+CFG = EngineConfig(
+    abm=ABMConfig(n_se=150, n_lp=4, area=1200.0, speed=4.0,
+                  interaction_range=90.0, p_interact=0.3),
+    heuristic=HeuristicConfig(mf=4.0, mt=5),
+    gaia_on=True, timesteps=400)
+
+
+def test_intra_run_tuner_descends_mf():
+    """In a clustering-friendly scenario the gain curve is monotone in
+    migrations (paper Fig. 8), so the tuner must walk MF down from a
+    too-conservative start and improve both LCR and priced TEC."""
+    tc = SelfTuneConfig(window=50, mf0=8.0, setup="distributed",
+                        interaction_bytes=1024, migration_bytes=32)
+    _, hist = intra_run_tune(jax.random.key(0), CFG, tc)
+    assert len(hist) == CFG.timesteps // tc.window
+    first_mf, last_mf = hist[0][1], hist[-1][1]
+    assert last_mf < first_mf * 0.7, hist
+    # priced per-step cost improved vs the first window
+    assert hist[-1][3] < hist[0][3], hist
+    # and clustering actually got better
+    assert hist[-1][2] > hist[0][2] + 0.05, hist
+
+
+def test_intra_run_tuner_respects_bounds():
+    tc = SelfTuneConfig(window=50, mf0=1.1, step0=0.9, min_mf=1.05,
+                        max_mf=19.0)
+    _, hist = intra_run_tune(jax.random.key(1), CFG, tc)
+    for _, mf, _, _ in hist:
+        assert 1.05 <= mf <= 19.0
+
+
+def test_inter_run_tuner_finds_low_mf_region():
+    """Full-run golden-section bracketing lands in the aggressive-MF
+    region where Figs. 8/9 put the optimum for cheap migrations."""
+    cfg = EngineConfig(abm=CFG.abm, heuristic=CFG.heuristic, gaia_on=True,
+                       timesteps=150)
+    tc = SelfTuneConfig(setup="distributed", interaction_bytes=1024,
+                        migration_bytes=32)
+    best_mf, trials = inter_run_tune(jax.random.key(2), cfg, tc,
+                                     n_probes=5)
+    assert len(trials) == 5
+    assert best_mf < 6.0, trials
