@@ -30,7 +30,8 @@ SCALES = {
 
 
 def engine_cfg(scale: str, *, n_lp=4, speed=11.0, rng=250.0, pi=0.2,
-               mf=1.2, mt=10, gaia=True, kind=1, timesteps=None):
+               mf=1.2, mt=10, gaia=True, kind=1, timesteps=None,
+               backend="grid"):
     """`speed` is in PAPER units (10000-side torus) and is scaled by
     side/10000 so the scaled-down world preserves the paper's *relative*
     dynamics (an SE crosses the world in the same number of timesteps —
@@ -42,7 +43,7 @@ def engine_cfg(scale: str, *, n_lp=4, speed=11.0, rng=250.0, pi=0.2,
     return EngineConfig(
         abm=ABMConfig(n_se=s["n_se"], n_lp=n_lp, area=s["area"],
                       speed=speed * f, interaction_range=rng,
-                      p_interact=pi),
+                      p_interact=pi, proximity_backend=backend),
         heuristic=HeuristicConfig(kind=kind, mf=mf, mt=mt),
         gaia_on=gaia,
         timesteps=timesteps or s["timesteps"],

@@ -1,0 +1,8 @@
+"""Reproduction of "The Simulation Model Partitioning Problem: an
+Adaptive Solution Based on Self-Clustering" (cs.DC 2016) in JAX/Pallas.
+
+Subpackages: core (GAIA engine + heuristics + neighbor search), kernels
+(Pallas TPU hot spots), plus the beyond-paper scaling stack (models,
+parallel, optim, runtime, launch, data, configs, checkpoint). See
+README.md for the paper -> module map.
+"""

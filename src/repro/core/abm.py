@@ -3,16 +3,31 @@
 as in Experiment 1) and interact by proximity: each sender's interaction
 reaches every agent within the threshold range.
 
-Vectorized over all SEs; the pairwise proximity/LP-histogram hot spot has
-a Pallas kernel (repro/kernels/proximity) — the jnp path here is its
-oracle and the CPU default.
+Vectorized over all SEs. The proximity/LP-histogram hot spot — the O(N^2)
+pairwise matching the paper names as the model's dominant cost — has four
+interchangeable backends selected by `ABMConfig.proximity_backend`:
+
+  "dense"        full O(N^2) jnp sweep; the exact-parity oracle
+  "grid"         cell-list neighbor search (core/neighbors.py), O(N*k);
+                 the default — bit-identical to dense
+  "pallas"       dense-sweep Pallas TPU kernel (kernels/proximity)
+  "pallas_grid"  grid-candidate Pallas TPU kernel (kernels/proximity)
+
+All four return bit-identical counts (tests/test_neighbors.py); "grid"
+and "pallas_grid" fall back to the dense math when the world is too
+small to tessellate (area / interaction_range < 3 cells per side).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import neighbors
+
+PROXIMITY_BACKENDS = ("dense", "grid", "pallas", "pallas_grid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,7 +38,38 @@ class ABMConfig:
     speed: float = 11.0  # spaceunits/timestep (min = max, Exp. 1)
     interaction_range: float = 250.0
     p_interact: float = 0.2  # pi: P(SE sends an interaction this timestep)
-    use_pallas: bool = False
+    proximity_backend: str = "grid"  # see PROXIMITY_BACKENDS
+    grid_capacity: int = 0  # per-cell member cap; 0 = auto from density
+    use_pallas: bool = False  # DEPRECATED: use proximity_backend="pallas"
+
+    def __post_init__(self):
+        if self.proximity_backend not in PROXIMITY_BACKENDS:
+            raise ValueError(
+                f"proximity_backend={self.proximity_backend!r} not in "
+                f"{PROXIMITY_BACKENDS}")
+        if self.use_pallas and self.proximity_backend != "grid":
+            # the shim must never silently override an explicit choice
+            raise ValueError(
+                "use_pallas=True (deprecated) conflicts with "
+                f"proximity_backend={self.proximity_backend!r}; drop "
+                "use_pallas and set proximity_backend only")
+
+    def resolved_backend(self) -> str:
+        """Backend after the `use_pallas` deprecation shim."""
+        if self.use_pallas:
+            warnings.warn(
+                "ABMConfig.use_pallas is deprecated; use "
+                "proximity_backend='pallas' (or 'pallas_grid').",
+                DeprecationWarning, stacklevel=2)
+            return "pallas"
+        return self.proximity_backend
+
+    def grid_spec(self):
+        """Cell-list geometry for this config, or None if the world is
+        too small to tessellate (grid backends then use dense math)."""
+        return neighbors.make_grid_spec(self.n_se, self.area,
+                                        self.interaction_range,
+                                        capacity=self.grid_capacity)
 
 
 def init_abm(key, cfg: ABMConfig):
@@ -61,6 +107,11 @@ def rwp_step(key, pos, waypoint, cfg: ABMConfig):
     return new_pos % cfg.area, new_wp
 
 
+def _dense_counts(pos, lp, sender_mask, cfg: ABMConfig):
+    return neighbors.dense_lp_counts(pos, lp, sender_mask, cfg.n_lp,
+                                     cfg.area, cfg.interaction_range)
+
+
 def interaction_counts(pos, lp, sender_mask, cfg: ABMConfig):
     """Per-sender histogram of recipient LPs.
 
@@ -68,19 +119,25 @@ def interaction_counts(pos, lp, sender_mask, cfg: ABMConfig):
     `interaction_range` of sender i currently allocated on LP l (self
     excluded). Rows of non-senders are zero.
 
-    O(N^2) pairwise — the paper's hot spot; see kernels/proximity for the
-    TPU tiling.
+    Dispatches on `cfg.proximity_backend`; every backend is bit-identical
+    (dense is the oracle — see tests/test_neighbors.py and DESIGN.md
+    §Adaptations for the trade-offs).
     """
-    if cfg.use_pallas:
+    backend = cfg.resolved_backend()
+    spec = cfg.grid_spec() if backend in ("grid", "pallas_grid") else None
+    if backend in ("grid", "pallas_grid") and spec is None:
+        backend = "dense"  # world too small to tessellate: exact fallback
+    if backend == "grid":
+        return neighbors.grid_lp_counts(pos, lp, sender_mask, cfg.n_lp,
+                                        cfg.area, cfg.interaction_range,
+                                        spec)
+    if backend == "pallas":
         from repro.kernels.proximity.ops import proximity_lp_counts
         return proximity_lp_counts(pos, lp, sender_mask, cfg.n_lp,
                                    cfg.area, cfg.interaction_range)
-    n = pos.shape[0]
-    dx = toroidal_delta(pos[:, None, 0], pos[None, :, 0], cfg.area)
-    dy = toroidal_delta(pos[:, None, 1], pos[None, :, 1], cfg.area)
-    in_range = (dx * dx + dy * dy) <= cfg.interaction_range ** 2
-    in_range = in_range & ~jnp.eye(n, dtype=bool)
-    in_range = in_range & sender_mask[:, None]
-    onehot = jax.nn.one_hot(lp, cfg.n_lp, dtype=jnp.float32)
-    counts = in_range.astype(jnp.float32) @ onehot
-    return counts.astype(jnp.int32)
+    if backend == "pallas_grid":
+        from repro.kernels.proximity.ops import proximity_lp_counts_grid
+        return proximity_lp_counts_grid(pos, lp, sender_mask, cfg.n_lp,
+                                        cfg.area, cfg.interaction_range,
+                                        spec)
+    return _dense_counts(pos, lp, sender_mask, cfg)

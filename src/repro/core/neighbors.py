@@ -1,0 +1,257 @@
+"""Spatial-grid (cell-list) neighbor search on the toroidal square.
+
+The paper's evaluation model (§5.1) is dominated by proximity interaction
+matching, which the dense path in `abm.interaction_counts` resolves as an
+O(N^2) pairwise sweep. This module provides the standard cell-list fix:
+bin SEs into a `ncell x ncell` grid of square cells whose side is at
+least `interaction_range`, so every in-range neighbor of an SE lies in
+the 3x3 block of cells around it — O(N*k) candidate tests instead of
+O(N^2), with k the mean cell occupancy.
+
+Layout (all shapes static so the whole thing JITs and runs under
+`lax.scan` inside the engine):
+
+  * SEs are sorted by cell id (`argsort`), giving contiguous per-cell
+    segments; `searchsorted` yields per-cell start offsets and counts.
+  * A fixed-capacity member table `table[c, k]` (padded with -1) is
+    scattered from the sorted order. `capacity` must bound the true max
+    cell occupancy for exact results; `build_grid` returns an `overflow`
+    flag so callers outside jit can verify. The auto capacity
+    (`default_capacity`) is sized many Poisson standard deviations above
+    the uniform-density mean, which covers RWP mobility comfortably.
+
+Exactness: candidate cells are distinct (requires `ncell >= 3`, see
+`make_grid_spec`) and the per-pair toroidal distance test is the same
+expression the dense oracle uses, so counts are bit-identical to the
+dense path — the parity contract tested in tests/test_neighbors.py.
+When the world is too small to tessellate (`area / range < 3`)
+`make_grid_spec` returns None and callers fall back to the dense sweep.
+
+See DESIGN.md §Adaptations for the grid-vs-dense trade-off discussion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+#: offsets of the 3x3 neighborhood, row-major
+_NEIGH_OFFSETS = [(di, dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)]
+
+#: auto-chunking target: max candidate-matrix entries resident at once
+_CHUNK_BUDGET = 1 << 22
+
+
+def toroidal_d2(a, b, area: float):
+    """Squared toroidal distance between (..., 2) position arrays.
+
+    THE canonical per-pair expression: every backend (dense oracle,
+    cell-list, Pallas kernels) must evaluate exactly this so the
+    bit-identical parity contract is meaningful."""
+    d = jnp.abs(a - b)
+    d = jnp.minimum(d, area - d)
+    return d[..., 0] ** 2 + d[..., 1] ** 2
+
+
+def dense_lp_counts(pos, lp, sender_mask, n_lp: int, area: float,
+                    rng: float):
+    """The dense O(N^2) oracle: counts[i, l] = #{j != i :
+    toroidal_dist(i, j) <= rng, lp[j] == l}, zeroed for non-senders.
+    Single source of truth — abm's dense backend and the kernel ref
+    both delegate here."""
+    n = pos.shape[0]
+    in_range = toroidal_d2(pos[:, None, :], pos[None, :, :],
+                           area) <= rng * rng
+    in_range = in_range & ~jnp.eye(n, dtype=bool) & sender_mask[:, None]
+    onehot = jax.nn.one_hot(lp, n_lp, dtype=jnp.float32)
+    return (in_range.astype(jnp.float32) @ onehot).astype(jnp.int32)
+
+
+def default_capacity(n: int, ncell: int) -> int:
+    """Static per-cell capacity bound for n uniform SEs on ncell^2 cells.
+
+    Mean occupancy plus 8 Poisson standard deviations plus slack: the
+    probability any of ncell^2 cells exceeds this under uniform placement
+    is negligible, and RWP mobility keeps the stationary distribution
+    close to uniform (it mildly favors the center on a bounded square,
+    but on the torus there is no boundary bias at all)."""
+    mean = n / float(ncell * ncell)
+    return int(math.ceil(mean + 8.0 * math.sqrt(mean) + 8.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Static geometry of the cell grid (hashable: safe as a jit static)."""
+    ncell: int  # cells per side
+    cell: float  # cell side length, >= interaction_range
+    capacity: int  # fixed member-table width (max SEs per cell)
+
+
+def make_grid_spec(n: int, area: float, rng: float,
+                   capacity: int = 0) -> Optional[GridSpec]:
+    """Largest grid whose cell side still covers `rng`, or None.
+
+    `ncell = floor(area / rng)` maximizes resolution subject to
+    `cell >= rng` (the 3x3-coverage requirement). Below ncell=3 the 3x3
+    sweep would alias cells through the torus wrap (the same cell would
+    be visited more than once, double-counting pairs), so we return None
+    and the caller uses the dense sweep — exact either way.
+    """
+    ncell = int(area // rng)
+    if ncell < 3:
+        return None
+    cap = capacity if capacity > 0 else default_capacity(n, ncell)
+    return GridSpec(ncell=ncell, cell=area / ncell, capacity=cap)
+
+
+def build_grid(pos, spec: GridSpec):
+    """Bin positions; returns dict with the sorted layout + member table.
+
+    Keys: cell (N,) i32 cell id per SE; order (N,) the sort permutation;
+    starts/counts (ncell^2,) segment offsets; table (ncell^2, capacity)
+    member indices padded with -1; overflow () bool — True iff some cell
+    holds more than `capacity` SEs (members beyond capacity are dropped
+    from the table, so exactness requires overflow == False).
+    """
+    n = pos.shape[0]
+    ncells = spec.ncell * spec.ncell
+    cxy = jnp.floor(pos / spec.cell).astype(jnp.int32)
+    # pos < area, but pos/cell can round up to ncell at the seam
+    cxy = jnp.clip(cxy, 0, spec.ncell - 1)
+    cell = cxy[:, 0] * spec.ncell + cxy[:, 1]
+    order = jnp.argsort(cell)
+    cell_sorted = cell[order]
+    cids = jnp.arange(ncells, dtype=cell_sorted.dtype)
+    starts = jnp.searchsorted(cell_sorted, cids)
+    counts = jnp.searchsorted(cell_sorted, cids, side="right") - starts
+    rank = jnp.arange(n) - starts[cell_sorted]
+    table = jnp.full((ncells, spec.capacity), -1, jnp.int32)
+    # ranks beyond capacity fall outside the table and are dropped
+    table = table.at[cell_sorted, rank].set(order.astype(jnp.int32),
+                                            mode="drop")
+    return {
+        "cell": cell,
+        "order": order,
+        "starts": starts,
+        "counts": counts,
+        "table": table,
+        "overflow": counts.max() > spec.capacity,
+    }
+
+
+def neighbor_cells(cell, spec: GridSpec):
+    """(N, 9) cell ids of the toroidal 3x3 neighborhood of each SE's cell."""
+    cx, cy = cell // spec.ncell, cell % spec.ncell
+    cols = [((cx + di) % spec.ncell) * spec.ncell + (cy + dj) % spec.ncell
+            for di, dj in _NEIGH_OFFSETS]
+    return jnp.stack(cols, axis=1)
+
+
+def candidate_table(pos, spec: GridSpec, grid=None):
+    """Per-SE candidate list: indices of every SE in the 3x3 neighborhood.
+
+    Returns (cand, grid): cand (N, 9*capacity) i32, padded with -1 (the
+    pad also covers the SE itself — self-exclusion is the caller's
+    mask `cand != i`). This is the gather the pallas_grid kernel tiles.
+
+    Overflowing `spec.capacity` would silently undercount (dropped
+    members never become candidates), so it is reported loudly at
+    runtime via jax.debug.print — it costs one comparison per call and
+    fires only when the exactness contract is actually broken.
+    """
+    grid = grid if grid is not None else build_grid(pos, spec)
+    jax.lax.cond(
+        grid["overflow"],
+        lambda mx: jax.debug.print(
+            "WARNING repro.core.neighbors: max cell occupancy {mx} exceeds "
+            "grid capacity %d — neighbor counts are UNDERCOUNTED; raise "
+            "ABMConfig.grid_capacity or use the dense backend" % spec.capacity,
+            mx=mx),
+        lambda mx: None,
+        grid["counts"].max())
+    neigh = neighbor_cells(grid["cell"], spec)  # (N, 9)
+    cand = grid["table"][neigh]  # (N, 9, capacity)
+    return cand.reshape(cand.shape[0], -1), grid
+
+
+def _counts_for_rows(pos, lp, n_lp: int, area: float, rng: float,
+                     row_pos, row_idx, row_sender, row_cand):
+    """Exact LP histogram for one chunk of senders given candidate lists.
+
+    The histogram is n_lp masked vector reductions rather than a
+    scatter-add: XLA lowers scatters serially on CPU, which would eat
+    the entire cell-list win (n_lp is single-digit, the reductions
+    vectorize)."""
+    valid = (row_cand >= 0) & (row_cand != row_idx[:, None])
+    j = jnp.clip(row_cand, 0, pos.shape[0] - 1)
+    in_range = toroidal_d2(row_pos[:, None, :], pos[j], area) <= rng * rng
+    mask = (in_range & valid & row_sender[:, None]).astype(jnp.int32)
+    lpj = lp[j]
+    cols = [jnp.sum(mask * (lpj == l), axis=1) for l in range(n_lp)]
+    return jnp.stack(cols, axis=1)
+
+
+def grid_lp_counts(pos, lp, sender_mask, n_lp: int, area: float, rng: float,
+                   spec: GridSpec):
+    """Cell-list version of the dense LP histogram — bit-identical output.
+
+    counts[i, l] = #{j != i : toroidal_dist(i, j) <= rng, lp[j] == l},
+    zeroed for non-senders. Peak memory is O(chunk * 9 * capacity)
+    rather than O(N^2): sender rows are processed in chunks sized so the
+    candidate matrix stays within a fixed budget, via `lax.map`.
+    """
+    n = pos.shape[0]
+    cand, _ = candidate_table(pos, spec)
+    width = cand.shape[1]  # 9 * capacity
+    chunk = max(1, _CHUNK_BUDGET // max(width, 1))
+    if n <= chunk:
+        return _counts_for_rows(pos, lp, n_lp, area, rng, pos,
+                                jnp.arange(n, dtype=jnp.int32),
+                                sender_mask, cand)
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    idx = jnp.arange(n + pad, dtype=jnp.int32)
+    row_pos = jnp.pad(pos, ((0, pad), (0, 0)))
+    row_sender = jnp.pad(sender_mask, (0, pad))  # padded rows: not senders
+    row_cand = jnp.pad(cand, ((0, pad), (0, 0)), constant_values=-1)
+
+    def one(args):
+        rp, ri, rs, rc = args
+        return _counts_for_rows(pos, lp, n_lp, area, rng, rp, ri, rs, rc)
+
+    out = jax.lax.map(one, (row_pos.reshape(n_chunks, chunk, 2),
+                            idx.reshape(n_chunks, chunk),
+                            row_sender.reshape(n_chunks, chunk),
+                            row_cand.reshape(n_chunks, chunk, width)))
+    return out.reshape(n_chunks * chunk, n_lp)[:n]
+
+
+def dense_lp_counts_chunked(pos, lp, sender_mask, n_lp: int, area: float,
+                            rng: float, chunk: int = 2048):
+    """Row-chunked O(N^2) sweep: the dense oracle's math with O(chunk*N)
+    peak memory instead of O(N^2), so it scales to N where materializing
+    the full pair matrix would not fit. Used as the honest dense baseline
+    in benchmarks/exp4_scaling.py (same flop count as the oracle)."""
+    n = pos.shape[0]
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    row_pos = jnp.pad(pos, ((0, pad), (0, 0)))
+    row_idx = jnp.arange(n + pad, dtype=jnp.int32)
+    row_sender = jnp.pad(sender_mask, (0, pad))
+    onehot = jax.nn.one_hot(lp, n_lp, dtype=jnp.float32)
+
+    def one(args):
+        rp, ri, rs = args
+        in_range = toroidal_d2(rp[:, None, :], pos[None, :, :],
+                               area) <= rng * rng
+        not_self = ri[:, None] != jnp.arange(n)[None, :]
+        mask = (in_range & not_self & rs[:, None]).astype(jnp.float32)
+        return (mask @ onehot).astype(jnp.int32)
+
+    out = jax.lax.map(one, (row_pos.reshape(n_chunks, chunk, 2),
+                            row_idx.reshape(n_chunks, chunk),
+                            row_sender.reshape(n_chunks, chunk)))
+    return out.reshape(n_chunks * chunk, n_lp)[:n]

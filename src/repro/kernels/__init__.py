@@ -1,3 +1,24 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the reproduction's compute hot spots.
+
+Each kernel lives in its own subpackage with three files:
+
+  <name>.py  the Pallas kernel (and its tiling/fusion rationale)
+  ops.py     the jit'd public entry points
+  ref.py     the pure-jnp oracle the kernel must match bit-for-bit or
+             within dtype tolerance (tests/test_kernels.py)
+
+Subpackages:
+
+- proximity: the paper's §5.1 hot spot — fused toroidal-distance +
+  range-test + per-sender LP histogram. Two variants: a dense O(N^2)
+  sweep (MXU histogram) and a cell-list candidate version (O(N*C),
+  fed by repro.core.neighbors). See DESIGN.md §Adaptations.
+- flash_attention: tiled online-softmax attention (beyond-paper stack)
+- flash_decode: single-token decode attention with GQA
+- moe_gate: fused top-k gating for the MoE layer
+
+All kernels accept `interpret=True` (the default used in tests and on
+CPU): the kernel body executes per tile on the host, which checks
+correctness everywhere but is slow — never benchmark interpret mode
+(DESIGN.md §Adaptations, interpret-mode caveat).
+"""

@@ -1,0 +1,4 @@
+"""Tiled online-softmax attention kernel (beyond-paper model stack)."""
+from repro.kernels.flash_attention.flash_attention import (  # noqa: F401
+    flash_attention)
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401

@@ -1,0 +1,3 @@
+"""Single-token decode attention kernel with GQA (beyond-paper stack)."""
+from repro.kernels.flash_decode.flash_decode import flash_decode  # noqa: F401
+from repro.kernels.flash_decode.ref import decode_ref  # noqa: F401

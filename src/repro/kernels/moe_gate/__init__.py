@@ -1,0 +1,3 @@
+"""Fused top-k MoE gating kernel (beyond-paper stack)."""
+from repro.kernels.moe_gate.moe_gate import moe_gate  # noqa: F401
+from repro.kernels.moe_gate.ref import moe_gate_ref  # noqa: F401

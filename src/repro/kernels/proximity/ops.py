@@ -1,3 +1,9 @@
-"""jit'd public wrapper for the proximity kernel."""
+"""jit'd public wrappers for the proximity kernels.
+
+proximity_lp_counts       dense-sweep kernel (O(N^2) pairs, MXU histogram)
+proximity_lp_counts_grid  cell-list kernel (O(N*C) candidate pairs)
+proximity_lp_counts_ref   pure-jnp oracle
+"""
+from repro.kernels.proximity.grid import proximity_lp_counts_grid  # noqa: F401
 from repro.kernels.proximity.proximity import proximity_lp_counts  # noqa: F401
 from repro.kernels.proximity.ref import proximity_lp_counts_ref  # noqa: F401

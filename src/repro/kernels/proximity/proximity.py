@@ -19,8 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BI = 256  # sender tile (rows)
-BJ = 256  # recipient tile (cols)
+BI = 256  # tile side: sender rows and recipient cols share it
 
 
 def _kernel(pos_i_ref, pos_j_ref, lp_onehot_ref, sender_ref, iota_i_ref,
@@ -51,16 +50,22 @@ def _kernel(pos_i_ref, pos_j_ref, lp_onehot_ref, sender_ref, iota_i_ref,
 def proximity_lp_counts(pos, lp, sender_mask, n_lp: int, area: float,
                         rng: float, interpret: bool = True):
     n = pos.shape[0]
-    bi, bj = min(BI, n), min(BJ, n)
-    assert n % bi == 0 and n % bj == 0, (n, bi, bj)
+    bi = bj = min(BI, n)
+    pad = -n % bi
+    # pad to a whole number of tiles: padded recipients get lp = -1 (an
+    # all-zero one-hot row, so they never count); padded senders are 0
+    pos = jnp.pad(pos, ((0, pad), (0, 0)))
+    lp = jnp.pad(lp, (0, pad), constant_values=-1)
+    sender_mask = jnp.pad(sender_mask, (0, pad))
+    np_ = n + pad
     lp_pad = max(n_lp, 8)
     onehot = jax.nn.one_hot(lp, lp_pad, dtype=jnp.float32)
-    iota = jnp.arange(n, dtype=jnp.int32)[:, None]
+    iota = jnp.arange(np_, dtype=jnp.int32)[:, None]
     sender = sender_mask.astype(jnp.int32)[:, None]
 
     out = pl.pallas_call(
         functools.partial(_kernel, area=float(area), rng2=float(rng) ** 2),
-        grid=(n // bi, n // bj),
+        grid=(np_ // bi, np_ // bj),
         in_specs=[
             pl.BlockSpec((bi, 2), lambda i, j: (i, 0)),
             pl.BlockSpec((bj, 2), lambda i, j: (j, 0)),
@@ -70,7 +75,7 @@ def proximity_lp_counts(pos, lp, sender_mask, n_lp: int, area: float,
             pl.BlockSpec((bj, 1), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((bi, lp_pad), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, lp_pad), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((np_, lp_pad), jnp.float32),
         interpret=interpret,
     )(pos, pos, onehot, sender, iota, iota)
-    return out[:, :n_lp].astype(jnp.int32)
+    return out[:n, :n_lp].astype(jnp.int32)

@@ -1,18 +1,16 @@
-"""Pure-jnp oracle for the proximity/LP-histogram kernel."""
+"""Pure-jnp oracle for the proximity/LP-histogram kernels.
+
+Delegates to the single canonical dense implementation in
+repro.core.neighbors so the parity contract has exactly one source of
+truth for the per-pair math.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.core.neighbors import dense_lp_counts
 
 
 def proximity_lp_counts_ref(pos, lp, sender_mask, n_lp: int, area: float,
                             rng: float):
     """counts[i, l] = #{j != i : toroidal_dist(i,j) <= rng, lp[j] == l},
     zeroed for non-senders. pos: (N,2) f32; lp: (N,) i32."""
-    n = pos.shape[0]
-    d = jnp.abs(pos[:, None, :] - pos[None, :, :])
-    d = jnp.minimum(d, area - d)
-    in_range = (d[..., 0] ** 2 + d[..., 1] ** 2) <= rng * rng
-    in_range = in_range & ~jnp.eye(n, dtype=bool) & sender_mask[:, None]
-    onehot = jax.nn.one_hot(lp, n_lp, dtype=jnp.float32)
-    return (in_range.astype(jnp.float32) @ onehot).astype(jnp.int32)
+    return dense_lp_counts(pos, lp, sender_mask, n_lp, area, rng)

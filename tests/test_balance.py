@@ -8,6 +8,11 @@ property tests of the core invariants:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional dev dependency "
+    "`hypothesis` (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import balance as bal

@@ -1,0 +1,151 @@
+"""Backend parity for the proximity hot spot (tentpole contract).
+
+Every `proximity_backend` must produce BIT-IDENTICAL counts to the dense
+jnp oracle — the engine's transparency invariant (§4.2) extends to the
+neighbor-search implementation: switching backends may change the speed,
+never the simulation. Cases deliberately include agents straddling the
+torus seam, a range larger than the grid cell side, worlds too small to
+tessellate (dense fallback), and clustered (non-uniform) positions that
+stress the fixed per-cell capacity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import neighbors
+from repro.core.abm import (ABMConfig, PROXIMITY_BACKENDS, _dense_counts,
+                            interaction_counts)
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+BACKENDS = [b for b in PROXIMITY_BACKENDS if b != "dense"]
+
+
+def _case(seed, n, n_lp, area, rng, seam=False):
+    k = jax.random.key(seed)
+    pos = jax.random.uniform(jax.random.fold_in(k, 0), (n, 2), maxval=area)
+    if seam:
+        # band of width area/10 straddling the wrap line on both axes
+        pos = (pos * 0.1 - area * 0.05) % area
+    lp = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, n_lp)
+    sender = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.4, (n,))
+    return pos, lp, sender
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n,n_lp,area,rng,seam", [
+    (200, 4, 1000.0, 80.0, False),
+    (300, 3, 1000.0, 60.0, True),  # seam-straddling cluster, odd N
+    (128, 8, 500.0, 90.0, False),
+    (96, 2, 100.0, 45.0, False),  # area/rng < 3: dense fallback path
+    (150, 4, 300.0, 40.0, True),  # seam + ncell >= 3
+    (64, 3, 1000.0, 400.0, False),  # range > cell side forces ncell=2 -> dense
+])
+def test_backend_parity_bit_identical(backend, n, n_lp, area, rng, seam):
+    pos, lp, sender = _case(n + int(seam), n, n_lp, area, rng, seam)
+    # seam cases pile every SE into ~1% of the area: give the grid an
+    # overflow-proof capacity there (auto capacity assumes ~uniform
+    # density; its adequacy is what the uniform cases exercise)
+    cfg = ABMConfig(n_se=n, n_lp=n_lp, area=area, interaction_range=rng,
+                    grid_capacity=n if seam else 0)
+    ref = _dense_counts(pos, lp, sender, cfg)
+    got = interaction_counts(
+        pos, lp, sender, dataclasses.replace(cfg, proximity_backend=backend))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("backend", ["grid", "pallas_grid"])
+def test_parity_under_clustering_with_explicit_capacity(backend):
+    """All SEs piled into one corner cell: auto capacity would overflow,
+    but an explicit grid_capacity=n keeps the grid exact."""
+    n, area, rng = 120, 1000.0, 100.0
+    k = jax.random.key(11)
+    pos = jax.random.uniform(k, (n, 2), maxval=40.0)  # one cell's worth
+    lp = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, 4)
+    sender = jnp.ones((n,), bool)
+    cfg = ABMConfig(n_se=n, n_lp=4, area=area, interaction_range=rng)
+    ref = _dense_counts(pos, lp, sender, cfg)
+    got = interaction_counts(pos, lp, sender, dataclasses.replace(
+        cfg, proximity_backend=backend, grid_capacity=n))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_grid_spec_geometry():
+    spec = neighbors.make_grid_spec(10_000, 10_000.0, 250.0)
+    assert spec.ncell == 40 and spec.cell >= 250.0
+    # too small to tessellate -> None (callers go dense)
+    assert neighbors.make_grid_spec(100, 100.0, 40.0) is None
+    assert neighbors.make_grid_spec(100, 300.0, 150.0) is None
+    # explicit capacity wins over the density heuristic
+    assert neighbors.make_grid_spec(1000, 1000.0, 100.0, capacity=7).capacity == 7
+
+
+def test_build_grid_overflow_flag():
+    n, area = 64, 1000.0
+    pos = jnp.full((n, 2), 5.0)  # everyone in cell (0, 0)
+    tight = neighbors.GridSpec(ncell=10, cell=100.0, capacity=8)
+    roomy = neighbors.GridSpec(ncell=10, cell=100.0, capacity=64)
+    assert bool(neighbors.build_grid(pos, tight)["overflow"])
+    assert not bool(neighbors.build_grid(pos, roomy)["overflow"])
+
+
+def test_build_grid_layout():
+    k = jax.random.key(3)
+    pos = jax.random.uniform(k, (200, 2), maxval=1000.0)
+    spec = neighbors.make_grid_spec(200, 1000.0, 100.0)
+    g = neighbors.build_grid(pos, spec)
+    counts = np.asarray(g["counts"])
+    assert counts.sum() == 200
+    # member table agrees with the per-cell counts and holds each SE once
+    table = np.asarray(g["table"])
+    members = table[table >= 0]
+    assert sorted(members.tolist()) == list(range(200))
+    for c in range(spec.ncell ** 2):
+        assert (table[c] >= 0).sum() == counts[c]
+
+
+def test_dense_chunked_matches_oracle():
+    pos, lp, sender = _case(5, 230, 4, 1000.0, 120.0)
+    cfg = ABMConfig(n_se=230, n_lp=4, area=1000.0, interaction_range=120.0)
+    ref = _dense_counts(pos, lp, sender, cfg)
+    got = neighbors.dense_lp_counts_chunked(pos, lp, sender, 4, 1000.0,
+                                            120.0, chunk=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_engine_evolution_identical_across_backends():
+    """Full engine runs (scan + self-clustering) must be bit-identical
+    under backend switch — speed knobs never touch the simulation."""
+    results = {}
+    for backend in ("dense", "grid"):
+        abm = ABMConfig(n_se=120, n_lp=4, area=1000.0, speed=5.0,
+                        interaction_range=80.0, p_interact=0.3,
+                        proximity_backend=backend)
+        cfg = EngineConfig(abm=abm, heuristic=HeuristicConfig(mf=1.2, mt=5),
+                           gaia_on=True, timesteps=50)
+        st, series, _ = run(jax.random.key(7), cfg)
+        results[backend] = (st, series)
+    st_d, series_d = results["dense"]
+    st_g, series_g = results["grid"]
+    np.testing.assert_array_equal(np.asarray(st_d["pos"]),
+                                  np.asarray(st_g["pos"]))
+    np.testing.assert_array_equal(np.asarray(st_d["lp"]),
+                                  np.asarray(st_g["lp"]))
+    for k in ("local_msgs", "remote_msgs", "migrations"):
+        np.testing.assert_array_equal(np.asarray(series_d[k]),
+                                      np.asarray(series_g[k]))
+
+
+def test_use_pallas_shim_warns_and_maps():
+    cfg = ABMConfig(n_se=64, n_lp=2, area=500.0, interaction_range=100.0,
+                    use_pallas=True)
+    with pytest.warns(DeprecationWarning):
+        assert cfg.resolved_backend() == "pallas"
+
+
+def test_invalid_backend_rejected():
+    with pytest.raises(ValueError):
+        ABMConfig(proximity_backend="voronoi")
