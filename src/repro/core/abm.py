@@ -88,9 +88,20 @@ def toroidal_delta(a, b, area):
     return jnp.minimum(d, area - d)
 
 
-def rwp_step(key, pos, waypoint, cfg: ABMConfig):
-    """One Random-Waypoint move: advance `speed` toward the waypoint
-    (torus-aware); on arrival draw a new waypoint (sleep time 0)."""
+def rwp_draws(key, n: int, cfg: ABMConfig):
+    """The fresh-waypoint draw for all n SEs, indexed by global SE id.
+
+    Factored out of `rwp_step` so the sharded engine can compute the
+    *same* (n, 2) array on every device and gather each shard's rows by
+    SE id — the draw for SE i must be identical no matter which device
+    currently hosts it (bit-identity with the single-device oracle)."""
+    return jax.random.uniform(key, (n, 2), maxval=cfg.area)
+
+
+def rwp_apply(pos, waypoint, new_wp, cfg: ABMConfig):
+    """The deterministic half of a Random-Waypoint move: advance `speed`
+    toward the waypoint (torus-aware); on arrival switch to the
+    pre-drawn fresh waypoint `new_wp` (sleep time 0)."""
     delta = waypoint - pos
     # shortest direction on the torus
     delta = jnp.where(delta > cfg.area / 2, delta - cfg.area, delta)
@@ -100,11 +111,13 @@ def rwp_step(key, pos, waypoint, cfg: ABMConfig):
     step = jnp.where(dist > 0, delta / jnp.maximum(dist, 1e-9), 0.0)
     new_pos = jnp.where(arrived[:, None], waypoint,
                         (pos + step * cfg.speed) % cfg.area)
-    new_wp = jnp.where(arrived[:, None],
-                       jax.random.uniform(key, waypoint.shape,
-                                          maxval=cfg.area),
-                       waypoint)
-    return new_pos % cfg.area, new_wp
+    next_wp = jnp.where(arrived[:, None], new_wp, waypoint)
+    return new_pos % cfg.area, next_wp
+
+
+def rwp_step(key, pos, waypoint, cfg: ABMConfig):
+    """One Random-Waypoint move (draw + apply; see rwp_draws/rwp_apply)."""
+    return rwp_apply(pos, waypoint, rwp_draws(key, pos.shape[0], cfg), cfg)
 
 
 def _dense_counts(pos, lp, sender_mask, cfg: ABMConfig):

@@ -77,16 +77,26 @@ def asymmetric_grants(cand, current, capacity):
     return g + extra * (1 - jnp.eye(n_lp, dtype=cand.dtype))
 
 
-def select_migrations(candidate, lp, dest, alpha, grants, n_lp: int):
+def select_migrations(candidate, lp, dest, alpha, grants, n_lp: int,
+                      tiebreak=None):
     """Admit the top-alpha candidates within each (src,dst) grant quota.
 
-    Returns a boolean (N,) mask of admitted migrations."""
+    Returns a boolean (N,) mask of admitted migrations. The order is a
+    total lexicographic one — (pair asc, alpha desc, tiebreak asc) — so
+    the admitted set is exactly determined. `tiebreak` defaults to the
+    array index; the sharded engine passes global SE ids so that each
+    shard, selecting only among the candidates of the LPs it owns,
+    admits exactly the set the single-device oracle would (every (s, d)
+    pair's candidates live wholly on the shard owning LP s, so per-pair
+    ranking is shard-local by construction).
+    """
     n = candidate.shape[0]
     pair = (lp * n_lp + dest).astype(jnp.int32)
     pair = jnp.where(candidate, pair, n_lp * n_lp)
-    # rank candidates within their pair by descending alpha
-    a = jnp.clip(alpha, 0.0, 1e6)
-    order = jnp.argsort(pair.astype(jnp.float32) * 2e6 - a, stable=True)
+    if tiebreak is None:
+        tiebreak = jnp.arange(n, dtype=jnp.int32)
+    # rank candidates within their pair by descending alpha, ties by id
+    order = jnp.lexsort((tiebreak, -alpha, pair))
     sp = pair[order]
     counts = jnp.bincount(pair, length=n_lp * n_lp + 1)
     starts = jnp.cumsum(counts) - counts

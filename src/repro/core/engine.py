@@ -16,10 +16,17 @@ Correctness invariant (tested): the model evolution (positions,
 interaction sets) is identical with GAIA ON and OFF — the partitioning
 layer only changes WHERE events are delivered, never WHAT happens, which
 is the paper's transparency requirement (§4.2).
+
+Execution layers (EngineConfig.sharding): "none" runs every LP inside
+one device's scan (this module); "lp_device" maps LPs onto a JAX device
+mesh where each device owns its LPs' SE rows and GAIA migrations
+physically reshard state (parallel/lp_shard.py) — bit-identical to
+"none" on the same seed (tests/test_sharding.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -31,6 +38,9 @@ from repro.core.heuristics import HeuristicConfig
 from repro.core import heuristics as heu
 
 
+SHARDINGS = ("none", "lp_device")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     abm: ABMConfig = ABMConfig()
@@ -40,9 +50,26 @@ class EngineConfig:
     migration_delay: int = 5  # 2 (LB negotiation) + 3 (protocol, Fig. 4)
     timesteps: int = 1200
     capacity: Optional[tuple] = None  # asymmetric LP capacity shares
+    # --- sharded execution (parallel/lp_shard.py) -----------------------
+    # "none": every LP inside one device's scan (the oracle).
+    # "lp_device": LPs mapped onto a device mesh; each device owns its
+    # LPs' SE rows, GAIA migrations physically reshard. Bit-identical
+    # to "none" on the same seed (tests/test_sharding.py).
+    sharding: str = "none"
+    n_devices: int = 0  # 0 = all visible devices (capped at n_lp)
+    shard_capacity: int = 0  # SE slots per device; 0 = auto (2x share)
+    mig_capacity: int = 0  # migration-buffer rows/device/step; 0 = auto
+
+    def __post_init__(self):
+        if self.sharding not in SHARDINGS:
+            raise ValueError(
+                f"sharding={self.sharding!r} not in {SHARDINGS}")
 
 
 def init_engine(key, cfg: EngineConfig):
+    if cfg.sharding == "lp_device":
+        from repro.parallel import lp_shard
+        return lp_shard.init_sharded(key, cfg, lp_shard.make_shard_spec(cfg))
     k1, k2 = jax.random.split(key)
     st = init_abm(k1, cfg.abm)
     n, L = cfg.abm.n_se, cfg.abm.n_lp
@@ -56,8 +83,9 @@ def init_engine(key, cfg: EngineConfig):
     return st
 
 
-def step(state, cfg: EngineConfig):
-    """One timestep. Returns (state, per-step metrics)."""
+def step(state, cfg: EngineConfig, mf=None):
+    """One timestep. Returns (state, per-step metrics). `mf` optionally
+    overrides cfg.heuristic.mf with a traced value (see run_window)."""
     n, L = cfg.abm.n_se, cfg.abm.n_lp
     t = state["t"]
     key, k_move, k_send = jax.random.split(state["key"], 3)
@@ -85,7 +113,7 @@ def step(state, cfg: EngineConfig):
     if cfg.gaia_on:
         hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
         cand, dest, alpha, hstate, n_evals = heu.evaluate(
-            cfg.heuristic, hstate, lp, t)
+            cfg.heuristic, hstate, lp, t, mf=mf)
         cand = cand & (pending_dst < 0)  # not already in flight
         cmat = bal.candidate_matrix(cand, lp, dest, L)
         if cfg.balance == "asymmetric":
@@ -115,33 +143,75 @@ def step(state, cfg: EngineConfig):
     return new_state, metrics
 
 
-def run_window(state, cfg: EngineConfig, n_steps: int):
-    """Advance an existing state by n_steps; returns (state, counters).
-
-    Used by the §5.5 intra-run self-tuner, which re-parameterizes the
-    heuristic between windows."""
-    def body(s, _):
-        return step(s, cfg)
-
-    state, series = jax.lax.scan(body, state, None, length=n_steps)
+def series_counters(series) -> dict:
+    """Aggregate a per-step metrics series into run counters — the one
+    place the counter/series key contract lives (the sharded runner
+    layers its extra metrics on top)."""
     counters = {k: float(series[k].sum()) for k in
                 ("local_msgs", "remote_msgs", "migrations", "heu_evals")}
     counters["mean_lcr"] = float(series["lcr"].mean())
-    return state, counters
+    return counters
+
+
+def window_key_cfg(cfg: EngineConfig) -> EngineConfig:
+    """Normalize a config to its compiled-scan cache key: MF is a
+    dynamic argument and the scan length comes from n_steps, so neither
+    may split the cache. Shared by the oracle and sharded runners."""
+    return dataclasses.replace(
+        cfg, timesteps=0,
+        heuristic=dataclasses.replace(cfg.heuristic, mf=0.0))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_window_cached(cfg: EngineConfig, n_steps: int):
+    def fn(state, mf):
+        def body(s, _):
+            return step(s, cfg, mf=mf)
+        return jax.lax.scan(body, state, None, length=n_steps)
+    return jax.jit(fn)
+
+
+def _compiled_window(cfg: EngineConfig, n_steps: int):
+    """One jitted n_steps-scan per config shape, with MF dynamic.
+
+    Eager `lax.scan` re-traces (and recompiles) on every call because
+    the body closure is fresh each time; memoizing the jitted scan by
+    the hashable config makes repeated runs — and the §5.5 tuner's
+    per-window MF re-parameterization — reuse one executable. An MF
+    sweep over otherwise-identical configs compiles exactly once (see
+    window_key_cfg)."""
+    return _compiled_window_cached(window_key_cfg(cfg), n_steps)
+
+
+def run_window(state, cfg: EngineConfig, n_steps: int, mf=None):
+    """Advance an existing state by n_steps; returns (state, counters).
+
+    Used by the §5.5 intra-run self-tuner, which re-parameterizes the
+    heuristic between windows — pass the window's MF via `mf` (a
+    dynamic argument: no recompilation between windows). Sharded states
+    (from a sharded init_engine) advance through the sharded step and
+    stay slot-major."""
+    if cfg.sharding == "lp_device":
+        from repro.parallel import lp_shard
+        return lp_shard.run_window_sharded(state, cfg, n_steps, mf=mf)
+
+    mf_val = jnp.float32(cfg.heuristic.mf if mf is None else mf)
+    state, series = _compiled_window(cfg, n_steps)(state, mf_val)
+    return state, series_counters(series)
 
 
 def run(key, cfg: EngineConfig):
     """Run the full simulation; returns (final_state, stacked metrics,
-    aggregate counters)."""
+    aggregate counters). With cfg.sharding="lp_device" the run executes
+    LP-per-device on the JAX mesh (bit-identical result; extra
+    halo_frac/shard_overflow metrics)."""
+    if cfg.sharding == "lp_device":
+        from repro.parallel import lp_shard
+        return lp_shard.run_sharded(key, cfg)
     st = init_engine(key, cfg)
-
-    def body(s, _):
-        return step(s, cfg)
-
-    st, series = jax.lax.scan(body, st, None, length=cfg.timesteps)
-    counters = {k: float(series[k].sum()) for k in
-                ("local_msgs", "remote_msgs", "migrations", "heu_evals")}
-    counters["mean_lcr"] = float(series["lcr"].mean())
+    st, series = _compiled_window(cfg, cfg.timesteps)(
+        st, jnp.float32(cfg.heuristic.mf))
+    counters = series_counters(series)
     counters["migration_ratio"] = (counters["migrations"] /
                                    (cfg.abm.n_se *
                                     (cfg.timesteps / 1000.0)))  # Eq. 8

@@ -64,29 +64,41 @@ def update_window(cfg: HeuristicConfig, state, counts, sender_mask, t):
     return dict(state, ring=ring, ptr=ptr, since_eval=since)
 
 
-def evaluate(cfg: HeuristicConfig, state, lp, t) -> Tuple[jax.Array,
-                                                          jax.Array,
-                                                          jax.Array,
-                                                          dict]:
-    """Returns (candidate (N,), dest_lp (N,), alpha (N,), new_state).
+def evaluate(cfg: HeuristicConfig, state, lp, t,
+             valid=None, mf=None) -> Tuple[jax.Array, jax.Array,
+                                           jax.Array, dict, jax.Array]:
+    """Returns (candidate (N,), dest_lp (N,), alpha (N,), new_state,
+    n_evals).
 
-    Also counts heuristic evaluations (the Heu term of Eq. 6)."""
+    Also counts heuristic evaluations (the Heu term of Eq. 6). `valid`
+    masks rows that hold no SE (empty slots in the sharded engine's
+    fixed-capacity buffers): they are never evaluated and never counted.
+    `mf` optionally overrides cfg.mf with a *traced* value — the §5.5
+    intra-run tuner re-parameterizes MF every window, and threading it
+    as a dynamic argument lets one compiled scan serve every window
+    instead of recompiling per MF value.
+    """
+    if mf is None:
+        mf = cfg.mf
     n, L = state["ring"].shape[1:]
     window = state["ring"].sum(axis=0)  # (N, L)
-    local = jnp.take_along_axis(window, lp[:, None], axis=1)[:, 0]
-    ext = window.at[jnp.arange(n), lp].set(0)
+    safe_lp = jnp.clip(lp, 0, L - 1)  # lp = -1 marks empty slots
+    local = jnp.take_along_axis(window, safe_lp[:, None], axis=1)[:, 0]
+    ext = window.at[jnp.arange(n), safe_lp].set(0)
     eps = ext.max(axis=-1)
     dest = ext.argmax(axis=-1).astype(jnp.int32)
     alpha = eps.astype(jnp.float32) / jnp.maximum(local, 1).astype(jnp.float32)
 
-    eligible = (t - state["last_mig"]) >= cfg.mt
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    eligible = valid & ((t - state["last_mig"]) >= cfg.mt)
     if cfg.kind == 3:
-        do_eval = state["since_eval"] >= cfg.zeta
+        do_eval = valid & (state["since_eval"] >= cfg.zeta)
         n_evals = do_eval.sum()
         state = dict(state, since_eval=jnp.where(do_eval, 0,
                                                  state["since_eval"]))
     else:
-        do_eval = jnp.ones((n,), bool)
-        n_evals = jnp.int32(n)
-    candidate = do_eval & eligible & (alpha > cfg.mf) & (eps > 0)
+        do_eval = valid
+        n_evals = valid.sum().astype(jnp.int32)
+    candidate = do_eval & eligible & (alpha > mf) & (eps > 0)
     return candidate, dest, alpha, dict(state), n_evals

@@ -107,6 +107,16 @@ def make_grid_spec(n: int, area: float, rng: float,
     return GridSpec(ncell=ncell, cell=area / ncell, capacity=cap)
 
 
+def cell_ids(pos, spec: GridSpec):
+    """(N,) i32 cell id per position. THE binning expression — every
+    consumer (grid build, sharded row queries) must use it so row cells
+    and table cells always agree."""
+    cxy = jnp.floor(pos / spec.cell).astype(jnp.int32)
+    # pos < area, but pos/cell can round up to ncell at the seam
+    cxy = jnp.clip(cxy, 0, spec.ncell - 1)
+    return cxy[:, 0] * spec.ncell + cxy[:, 1]
+
+
 def build_grid(pos, spec: GridSpec):
     """Bin positions; returns dict with the sorted layout + member table.
 
@@ -118,10 +128,7 @@ def build_grid(pos, spec: GridSpec):
     """
     n = pos.shape[0]
     ncells = spec.ncell * spec.ncell
-    cxy = jnp.floor(pos / spec.cell).astype(jnp.int32)
-    # pos < area, but pos/cell can round up to ncell at the seam
-    cxy = jnp.clip(cxy, 0, spec.ncell - 1)
-    cell = cxy[:, 0] * spec.ncell + cxy[:, 1]
+    cell = cell_ids(pos, spec)
     order = jnp.argsort(cell)
     cell_sorted = cell[order]
     cids = jnp.arange(ncells, dtype=cell_sorted.dtype)
@@ -194,39 +201,119 @@ def _counts_for_rows(pos, lp, n_lp: int, area: float, rng: float,
     return jnp.stack(cols, axis=1)
 
 
-def grid_lp_counts(pos, lp, sender_mask, n_lp: int, area: float, rng: float,
-                   spec: GridSpec):
-    """Cell-list version of the dense LP histogram — bit-identical output.
+def rows_counts_chunked(pos, lp, n_lp: int, area: float, rng: float,
+                        row_pos, row_idx, row_sender, row_cand):
+    """Exact LP histograms for an arbitrary *row set* of senders against
+    the global (pos, lp) reference arrays, given per-row candidate lists.
 
-    counts[i, l] = #{j != i : toroidal_dist(i, j) <= rng, lp[j] == l},
-    zeroed for non-senders. Peak memory is O(chunk * 9 * capacity)
-    rather than O(N^2): sender rows are processed in chunks sized so the
-    candidate matrix stays within a fixed budget, via `lax.map`.
+    `row_idx` holds each row's index into the reference arrays (for
+    self-exclusion). Rows are processed in chunks sized so the candidate
+    matrix stays within a fixed budget, via `lax.map` — peak memory is
+    O(chunk * width) rather than O(R * width). This is the query core
+    shared by the single-device grid backend and the per-shard (halo)
+    path in parallel/lp_shard.py.
     """
-    n = pos.shape[0]
-    cand, _ = candidate_table(pos, spec)
-    width = cand.shape[1]  # 9 * capacity
+    r = row_pos.shape[0]
+    width = row_cand.shape[1]
     chunk = max(1, _CHUNK_BUDGET // max(width, 1))
-    if n <= chunk:
-        return _counts_for_rows(pos, lp, n_lp, area, rng, pos,
-                                jnp.arange(n, dtype=jnp.int32),
-                                sender_mask, cand)
-    n_chunks = -(-n // chunk)
-    pad = n_chunks * chunk - n
-    idx = jnp.arange(n + pad, dtype=jnp.int32)
-    row_pos = jnp.pad(pos, ((0, pad), (0, 0)))
-    row_sender = jnp.pad(sender_mask, (0, pad))  # padded rows: not senders
-    row_cand = jnp.pad(cand, ((0, pad), (0, 0)), constant_values=-1)
+    if r <= chunk:
+        return _counts_for_rows(pos, lp, n_lp, area, rng, row_pos,
+                                row_idx, row_sender, row_cand)
+    n_chunks = -(-r // chunk)
+    pad = n_chunks * chunk - r
+    row_pos = jnp.pad(row_pos, ((0, pad), (0, 0)))
+    row_idx = jnp.pad(row_idx, (0, pad), constant_values=-1)
+    row_sender = jnp.pad(row_sender, (0, pad))  # padded rows: not senders
+    row_cand = jnp.pad(row_cand, ((0, pad), (0, 0)), constant_values=-1)
 
     def one(args):
         rp, ri, rs, rc = args
         return _counts_for_rows(pos, lp, n_lp, area, rng, rp, ri, rs, rc)
 
     out = jax.lax.map(one, (row_pos.reshape(n_chunks, chunk, 2),
-                            idx.reshape(n_chunks, chunk),
+                            row_idx.reshape(n_chunks, chunk),
                             row_sender.reshape(n_chunks, chunk),
                             row_cand.reshape(n_chunks, chunk, width)))
-    return out.reshape(n_chunks * chunk, n_lp)[:n]
+    return out.reshape(n_chunks * chunk, n_lp)[:r]
+
+
+def rows_grid_counts(pos, lp, n_lp: int, area: float, rng: float,
+                     spec: GridSpec, grid, row_pos, row_idx, row_sender):
+    """Cell-list counts for a row subset against a prebuilt global grid.
+
+    The shard-local query: each row gathers its 3x3 candidate block from
+    the (replicated) member table and tests only those — O(k) per row
+    regardless of how many agents other shards own."""
+    row_cell = cell_ids(row_pos, spec)
+    cand = grid["table"][neighbor_cells(row_cell, spec)]
+    cand = cand.reshape(cand.shape[0], -1)
+    return rows_counts_chunked(pos, lp, n_lp, area, rng, row_pos, row_idx,
+                               row_sender, cand)
+
+
+def grid_lp_counts(pos, lp, sender_mask, n_lp: int, area: float, rng: float,
+                   spec: GridSpec):
+    """Cell-list version of the dense LP histogram — bit-identical output.
+
+    counts[i, l] = #{j != i : toroidal_dist(i, j) <= rng, lp[j] == l},
+    zeroed for non-senders. Delegates to the chunked row-query core with
+    every agent as a row.
+    """
+    n = pos.shape[0]
+    cand, _ = candidate_table(pos, spec)
+    return rows_counts_chunked(pos, lp, n_lp, area, rng, pos,
+                               jnp.arange(n, dtype=jnp.int32),
+                               sender_mask, cand)
+
+
+def halo_mask(cell_ref, row_cell, row_valid, spec: GridSpec):
+    """Which reference agents lie in the halo of a row set?
+
+    Returns a boolean mask over `cell_ref` (global per-agent cell ids):
+    True for agents inside the 3x3 neighborhood of any cell occupied by
+    a valid row. This is the halo-exchange set of the sharded engine —
+    the agents a shard actually needs to resolve its own proximity
+    queries (the rest of the all-gathered buffer is dead weight, and the
+    `halo_frac` metric measures how much GAIA's clustering shrinks it).
+    """
+    occ = jnp.zeros((spec.ncell * spec.ncell,), bool)
+    safe_cell = jnp.where(row_valid, row_cell, spec.ncell * spec.ncell)
+    occ = occ.at[safe_cell].set(True, mode="drop")
+    occ2d = occ.reshape(spec.ncell, spec.ncell)
+    halo2d = jnp.zeros_like(occ2d)
+    for di, dj in _NEIGH_OFFSETS:
+        halo2d = halo2d | jnp.roll(occ2d, (di, dj), axis=(0, 1))
+    return halo2d.reshape(-1)[cell_ref]
+
+
+def rows_dense_counts(pos, lp, n_lp: int, area: float, rng: float,
+                      row_pos, row_idx, row_sender, chunk: int = 2048):
+    """Dense-sweep counts for a row subset against the global reference
+    arrays — the sharded engine's fallback when the world is too small to
+    tessellate. Reference entries with lp < 0 (empty shard slots) one-hot
+    to zero and so never contribute, exactly like the grid path's
+    candidate masking."""
+    r = row_pos.shape[0]
+    s = pos.shape[0]
+    n_chunks = -(-r // chunk)
+    pad = n_chunks * chunk - r
+    row_pos = jnp.pad(row_pos, ((0, pad), (0, 0)))
+    row_idx = jnp.pad(row_idx, (0, pad), constant_values=-1)
+    row_sender = jnp.pad(row_sender, (0, pad))
+    onehot = jax.nn.one_hot(lp, n_lp, dtype=jnp.float32)
+
+    def one(args):
+        rp, ri, rs = args
+        in_range = toroidal_d2(rp[:, None, :], pos[None, :, :],
+                               area) <= rng * rng
+        not_self = ri[:, None] != jnp.arange(s)[None, :]
+        mask = (in_range & not_self & rs[:, None]).astype(jnp.float32)
+        return (mask @ onehot).astype(jnp.int32)
+
+    out = jax.lax.map(one, (row_pos.reshape(n_chunks, chunk, 2),
+                            row_idx.reshape(n_chunks, chunk),
+                            row_sender.reshape(n_chunks, chunk)))
+    return out.reshape(n_chunks * chunk, n_lp)[:r]
 
 
 def dense_lp_counts_chunked(pos, lp, sender_mask, n_lp: int, area: float,

@@ -27,7 +27,7 @@ from typing import List, Optional, Tuple
 import jax
 
 from repro.core.costmodel import CostParams, SETUPS, wct
-from repro.core.engine import EngineConfig, init_engine, run, run_window
+from repro.core.engine import EngineConfig, init_engine, run_window
 from repro.core.heuristics import HeuristicConfig
 
 
@@ -68,9 +68,9 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
 
     n_windows = total // tc.window
     for w in range(n_windows):
-        cfg_w = dataclasses.replace(
-            cfg, heuristic=dataclasses.replace(cfg.heuristic, mf=mf))
-        state, counters = run_window(state, cfg_w, tc.window)
+        # mf rides as a dynamic argument: every window (and every MF the
+        # hill descent visits) reuses one compiled window scan
+        state, counters = run_window(state, cfg, tc.window, mf=mf)
         tec = _price(counters, params, n_lp, tc.window, tc) / tc.window
         history.append((w, mf, counters["mean_lcr"], tec))
         if prev is not None and tec > prev * 1.001:
@@ -79,6 +79,10 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
         prev = tec
         mf = float(min(max(mf * (1.0 + direction * step), tc.min_mf),
                        tc.max_mf))
+    if cfg.sharding == "lp_device":
+        # return the oracle's gid-order layout, like engine.run does
+        from repro.parallel import lp_shard
+        state = lp_shard.unshard_state(state, lp_shard.make_shard_spec(cfg))
     return state, history
 
 
@@ -99,9 +103,10 @@ def inter_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
 
     def probe(log_mf, i):
         mf = math.exp(log_mf)
-        cfg_p = dataclasses.replace(
-            cfg, heuristic=dataclasses.replace(cfg.heuristic, mf=mf))
-        _, _, counters = run(jax.random.fold_in(key, i), cfg_p)
+        # one full replica per probe, MF dynamic: all probes share one
+        # compiled scan (a fresh run() per probe would recompile each)
+        state = init_engine(jax.random.fold_in(key, i), cfg)
+        _, counters = run_window(state, cfg, cfg.timesteps, mf=mf)
         tec = _price(counters, params, n_lp, cfg.timesteps, tc)
         trials.append((mf, tec))
         return tec

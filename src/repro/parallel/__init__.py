@@ -1,1 +1,3 @@
 from repro.parallel.ctx import ParallelCtx, make_ctx  # noqa: F401
+from repro.parallel.lp_shard import (  # noqa: F401
+    ShardSpec, make_shard_spec, run_sharded)

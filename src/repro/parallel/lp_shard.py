@@ -1,0 +1,507 @@
+"""LP-per-device sharded execution of the GAIA engine (shard_map).
+
+The single-device engine (`core/engine.py`) vectorizes every LP inside
+one `lax.scan`, so "remote delivery" is purely an accounting fiction.
+This module makes the distribution physical: LPs are mapped onto a 1-D
+JAX device mesh (axis "lp"), and **each device owns the SE rows of its
+LPs** — positions, waypoints, heuristic windows, migration state all
+live in per-device slot buffers. Per step:
+
+  * proximity/interaction counts are computed per-shard: positions/LPs
+    are exchanged (`all_gather` — the fixed-size transport of the halo
+    exchange), the PR-1 cell-list grid is built over the gathered
+    buffer, and each shard resolves only its own rows against its 3x3
+    candidate blocks. `neighbors.halo_mask` measures the *actual* halo
+    (remote agents inside the shard's neighborhood cells) — the
+    `halo_frac` metric shows GAIA's clustering physically shrinking the
+    communication a smarter ragged transport would have to move.
+  * LCR numerators/denominators, the candidate matrix, and all Eq. 5/6
+    counters are accumulated across devices with `psum`.
+  * GAIA migrations are **actual resharding ops**: when a migration's
+    protocol delay elapses and the destination LP lives on another
+    device, the SE's full state row (including its heuristic window) is
+    packed into a fixed-capacity per-device migration buffer,
+    all-gathered, and scattered into a free slot on the destination
+    shard. The source slot is vacated (gid = lp = -1).
+
+Bit-identity with the single-device oracle (the §4.2 transparency
+invariant, extended to the execution layer): `sharding="lp_device"`
+produces byte-identical states, series, and migration sequences to
+`sharding="none"` on the same seed — see DESIGN.md §Adaptations for why
+each step phase preserves this exactly, and tests/test_sharding.py for
+the enforced contract. Two fixed capacities (slots per device,
+migration-buffer rows) must bound the true maxima for the contract to
+hold; overflow is surfaced per step in the `shard_overflow` metric
+(and asserted zero in the equivalence tests), mirroring the cell-list
+grid's capacity discipline.
+
+Static-shape honesty: JAX collectives move fixed-size buffers, so the
+position exchange always transports all S slots and the migration
+exchange always transports `mig_capacity` rows per device, regardless
+of how few are live. What GAIA reduces is the *required* exchange set
+(halo_frac, migrations/step); a ragged transport would realize those
+savings on the wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import balance as bal
+from repro.core import heuristics as heu
+from repro.core import neighbors
+from repro.core.abm import init_abm, rwp_apply, rwp_draws
+
+#: per-SE state rows that migrate with an SE between shards
+_ROW_FIELDS = ("pos", "waypoint", "last_mig", "ptr", "since_eval", "gid")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Static geometry of the LP-per-device layout."""
+    n_dev: int  # devices on the "lp" mesh axis
+    n_lp: int
+    n_se: int
+    cap: int  # SE slots per device (must bound max per-device population)
+    mig_cap: int  # migration-buffer rows per device per step
+    grid: Optional[neighbors.GridSpec]  # over all n_dev*cap slots
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_dev * self.cap
+
+
+def dev_of_lp(lp, spec: ShardSpec):
+    """Block LP->device map: device d owns a contiguous LP range."""
+    return (lp * spec.n_dev) // spec.n_lp
+
+
+def make_shard_spec(cfg) -> ShardSpec:
+    """Resolve the sharded layout for an EngineConfig (sharding="lp_device")."""
+    abm = cfg.abm
+    n, L = abm.n_se, abm.n_lp
+    avail = len(jax.devices())
+    d = cfg.n_devices if cfg.n_devices > 0 else avail
+    if d > avail:
+        raise ValueError(f"n_devices={d} but only {avail} JAX devices are "
+                         "visible (XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=... must be set before jax init)")
+    d = min(d, L)  # never more devices than LPs
+    backend = abm.resolved_backend()
+    if backend.startswith("pallas"):
+        raise NotImplementedError(
+            f"sharding='lp_device' supports proximity_backend 'grid' and "
+            f"'dense', not {backend!r} (the Pallas kernels are per-device "
+            "TPU kernels; run them under sharding='none')")
+    if cfg.shard_capacity > 0:
+        cap = cfg.shard_capacity
+    elif d == 1:
+        cap = n
+    else:
+        # 2x the balanced share: covers symmetric balance exactly and
+        # asymmetric drift up to a 2/d capacity share; override via
+        # EngineConfig.shard_capacity for more skewed profiles.
+        cap = min(n, -(-2 * n // d) + 8)
+    # a device can never have more than `cap` same-step leavers, so an
+    # explicit mig_capacity above that is clamped (not an error)
+    mig_cap = min(cap, cfg.mig_capacity) if cfg.mig_capacity > 0 \
+        else min(cap, max(32, cap // 2))
+    grid = None
+    if backend == "grid":
+        grid = neighbors.make_grid_spec(d * cap, abm.area,
+                                        abm.interaction_range,
+                                        capacity=abm.grid_capacity)
+    return ShardSpec(n_dev=d, n_lp=L, n_se=n, cap=cap, mig_cap=mig_cap,
+                     grid=grid)
+
+
+def make_mesh(spec: ShardSpec) -> Mesh:
+    return Mesh(np.array(jax.devices()[:spec.n_dev]), ("lp",))
+
+
+# ---------------------------------------------------------------------------
+# init / unshard
+# ---------------------------------------------------------------------------
+
+
+def init_sharded(key, cfg, spec: ShardSpec):
+    """Slot-major engine state: device d owns slots [d*cap, (d+1)*cap).
+
+    Consumes the PRNG exactly like `engine.init_engine` (same k1/k2
+    split), so SE i's initial position/waypoint/LP are bit-identical to
+    the oracle's row i. Empty slots get spread-out pad positions from an
+    independent stream (they must not pile into one grid cell) and
+    lp = gid = -1.
+    """
+    n, L, S = spec.n_se, spec.n_lp, spec.n_slots
+    k1, k2 = jax.random.split(key)
+    st = init_abm(k1, cfg.abm)
+    hst = heu.init_state(cfg.heuristic, n, L)
+
+    lp = np.asarray(st["lp"])
+    dev = np.asarray(dev_of_lp(jnp.asarray(lp), spec))
+    counts = np.bincount(dev, minlength=spec.n_dev)
+    if counts.max() > spec.cap:
+        raise ValueError(
+            f"initial per-device population {counts.max()} exceeds "
+            f"shard_capacity {spec.cap}; raise EngineConfig.shard_capacity")
+    order = np.argsort(dev, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    rank = np.arange(n) - starts[dev[order]]
+    slot_of_se = np.empty(n, np.int64)
+    slot_of_se[order] = dev[order] * spec.cap + rank
+
+    k_pad = jax.random.fold_in(key, 0x5107)
+    pad_pos = jax.random.uniform(k_pad, (S, 2), maxval=cfg.abm.area)
+
+    def scat(x, fill):
+        out = jnp.full((S,) + x.shape[1:], fill, x.dtype)
+        return out.at[slot_of_se].set(x)
+
+    ring = jnp.zeros((hst["ring"].shape[0], S, L), hst["ring"].dtype)
+    ring = ring.at[:, slot_of_se, :].set(hst["ring"])
+    return {
+        "pos": pad_pos.at[slot_of_se].set(st["pos"]),
+        "waypoint": pad_pos.at[slot_of_se].set(st["waypoint"]),
+        "lp": scat(st["lp"], -1),
+        "gid": scat(jnp.arange(n, dtype=jnp.int32), -1),
+        "pending_dst": jnp.full((S,), -1, jnp.int32),
+        "pending_eta": jnp.full((S,), -1, jnp.int32),
+        "ring": ring,
+        "ptr": scat(hst["ptr"], 0),
+        "since_eval": scat(hst["since_eval"], 0),
+        "last_mig": scat(hst["last_mig"], -10**6),
+        "key": k2,
+        "t": jnp.int32(0),
+    }
+
+
+def unshard_state(state, spec: ShardSpec):
+    """Scatter slot-major state back to gid-order — the oracle's layout,
+    so sharded and single-device final states compare byte-for-byte."""
+    n = spec.n_se
+    gid = state["gid"]
+    tgt = jnp.where(gid >= 0, gid, n)  # -1 -> out of bounds -> dropped
+
+    def scat(x):
+        out = jnp.zeros((n,) + x.shape[1:], x.dtype)
+        return out.at[tgt].set(x, mode="drop")
+
+    ring = jnp.zeros((state["ring"].shape[0], n, spec.n_lp),
+                     state["ring"].dtype)
+    ring = ring.at[:, tgt, :].set(state["ring"], mode="drop")
+    return {
+        "pos": scat(state["pos"]),
+        "waypoint": scat(state["waypoint"]),
+        "lp": scat(state["lp"]),
+        "pending_dst": scat(state["pending_dst"]),
+        "pending_eta": scat(state["pending_eta"]),
+        "ring": ring,
+        "ptr": scat(state["ptr"]),
+        "since_eval": scat(state["since_eval"]),
+        "last_mig": scat(state["last_mig"]),
+        "key": state["key"],
+        "t": state["t"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# one sharded timestep
+# ---------------------------------------------------------------------------
+
+
+def _apply_arrivals(f, t, cfg, spec: ShardSpec, me):
+    """Complete in-flight migrations: local ones flip `lp` in place;
+    cross-device ones are packed, all-gathered, and scattered into free
+    destination slots (the resharding op). Returns (fields, overflow).
+
+    Overflow never destroys SEs: a leaver that does not fit the
+    migration buffer, or whose destination has no free slot this step,
+    keeps its slot and its pending state and retries next step (the
+    arrival test is `eta <= t`). Every device computes the same
+    admission decision from the gathered buffer + gathered free counts,
+    so source vacates exactly the rows the destination inserts. The
+    deferral still diverges from the single-device oracle (which has no
+    capacity limits), so `shard_overflow` stays an equivalence alarm —
+    but the simulation remains population-preserving and valid."""
+    B = spec.mig_cap
+    due = ((f["pending_eta"] >= 0) & (f["pending_eta"] <= t)
+           & (f["gid"] >= 0))
+    dst = f["pending_dst"]
+    dst_dev = dev_of_lp(jnp.maximum(dst, 0), spec)
+    stay = due & (dst_dev == me)
+    leave = due & (dst_dev != me)
+
+    f = dict(f)
+    f["lp"] = jnp.where(stay, dst, f["lp"])
+    f["pending_dst"] = jnp.where(stay, -1, f["pending_dst"])
+    f["pending_eta"] = jnp.where(stay, -1, f["pending_eta"])
+
+    # pack leavers into the fixed migration buffer, gather-style (a
+    # scatter over all cap slots would serialize on CPU): stable argsort
+    # puts leaver slot ids first in ascending slot order
+    leaver_slots = jnp.argsort(~leave, stable=True)[:B]
+    n_leave = leave.sum()
+    is_row = jnp.arange(B) < n_leave
+    mig_overflow = n_leave > B
+
+    def pack(x, fill):
+        v = x[leaver_slots]
+        shape = (B,) + (1,) * (v.ndim - 1)
+        return jnp.where(is_row.reshape(shape), v, fill)
+
+    buf = {k: pack(f[k], 0) for k in _ROW_FIELDS if k != "gid"}
+    buf["gid"] = pack(f["gid"], -1)
+    buf["dst"] = pack(dst, -1)
+    # gather the leavers' ring rows on the slot axis (no full transpose)
+    buf["ring"] = jnp.where(is_row[:, None, None],
+                            jnp.moveaxis(f["ring"][:, leaver_slots, :], 1, 0),
+                            0)  # (B, w, L)
+
+    # exchange; admission is decided identically on every device
+    g = {k: jax.lax.all_gather(v, "lp", axis=0, tiled=True)
+         for k, v in buf.items()}  # (n_dev*B, ...)
+    free = f["gid"] < 0
+    free_counts = jax.lax.all_gather(free.sum(), "lp")  # (n_dev,)
+    g_dev = dev_of_lp(jnp.maximum(g["dst"], 0), spec)
+    g_valid = g["gid"] >= 0
+    # rank of each buffer row among rows bound for the same destination
+    per_dev = (g_valid[None, :]
+               & (g_dev[None, :] == jnp.arange(spec.n_dev)[:, None]))
+    rank = (jnp.cumsum(per_dev, axis=1) - 1)[g_dev, jnp.arange(g_dev.shape[0])]
+    admitted = g_valid & (rank < free_counts[g_dev])
+    cap_overflow = (g_valid & ~admitted).any()
+
+    # vacate exactly the admitted leavers (deferred rows keep slot +
+    # pending state); their ring rows go stale rather than zeroed —
+    # stale rows are inert: evaluate() masks by valid, and arrivals
+    # overwrite the whole row
+    adm_local = admitted[me * B + jnp.arange(B)]
+    vacate = jnp.zeros_like(leave).at[leaver_slots].set(
+        is_row & adm_local, mode="drop")
+    f["gid"] = jnp.where(vacate, -1, f["gid"])
+    f["lp"] = jnp.where(vacate, -1, f["lp"])
+    f["pending_dst"] = jnp.where(vacate, -1, f["pending_dst"])
+    f["pending_eta"] = jnp.where(vacate, -1, f["pending_eta"])
+    f["last_mig"] = jnp.where(vacate, -10**6, f["last_mig"])
+    f["ptr"] = jnp.where(vacate, 0, f["ptr"])
+    f["since_eval"] = jnp.where(vacate, 0, f["since_eval"])
+
+    # insert admitted rows bound for this device into its free slots.
+    # NOTE: free slots were counted before vacating, so a slot freed by
+    # this step's departures is never handed to this step's arrivals —
+    # both sides of the admission decision see the same free count.
+    mine = admitted & (g_dev == me)
+    free_order = jnp.argsort(~free, stable=True)  # free slots first, asc
+    arr_rank = jnp.cumsum(mine) - 1
+    target = jnp.where(
+        mine, free_order[jnp.clip(arr_rank, 0, spec.cap - 1)], spec.cap)
+
+    for k in _ROW_FIELDS:
+        f[k] = f[k].at[target].set(g[k], mode="drop")
+    f["lp"] = f["lp"].at[target].set(g["dst"], mode="drop")
+    f["pending_dst"] = f["pending_dst"].at[target].set(-1, mode="drop")
+    f["pending_eta"] = f["pending_eta"].at[target].set(-1, mode="drop")
+    f["ring"] = f["ring"].at[:, target, :].set(
+        jnp.moveaxis(g["ring"], 0, 1), mode="drop")
+    overflow = mig_overflow | cap_overflow
+    return f, overflow
+
+
+def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
+    """Per-device body of one timestep (runs under shard_map). `mf` is
+    the dynamic Migration Factor (see engine.run_window)."""
+    abm = cfg.abm
+    n, L, C, S = spec.n_se, spec.n_lp, spec.cap, spec.n_slots
+    me = jax.lax.axis_index("lp")
+    k_move = jax.random.wrap_key_data(k_move)
+    k_send = jax.random.wrap_key_data(k_send)
+
+    # 1. complete in-flight migrations (the resharding op)
+    f, reshard_overflow = _apply_arrivals(f, t, cfg, spec, me)
+    valid = f["gid"] >= 0
+    safe_gid = jnp.clip(f["gid"], 0, n - 1)
+
+    # 2. model evolution — full-array draws gathered by SE id, so every
+    # SE sees the same randomness wherever it is hosted (bit-identity)
+    my_wp_draw = rwp_draws(k_move, n, abm)[safe_gid]
+    new_pos, new_wp = rwp_apply(f["pos"], f["waypoint"], my_wp_draw, abm)
+    f["pos"] = jnp.where(valid[:, None], new_pos, f["pos"])
+    f["waypoint"] = jnp.where(valid[:, None], new_wp, f["waypoint"])
+    sender = valid & jax.random.bernoulli(k_send, abm.p_interact, (n,))[safe_gid]
+
+    # halo exchange: fixed-size transport of every shard's positions/LPs
+    pos_g = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)  # (S, 2)
+    lp_g = jax.lax.all_gather(f["lp"], "lp", axis=0, tiled=True)  # (S,)
+    my_idx = me * C + jnp.arange(C, dtype=jnp.int32)
+    remote_valid = (lp_g >= 0) & (jnp.arange(S, dtype=jnp.int32) // C != me)
+
+    grid_overflow = jnp.bool_(False)
+    if spec.grid is not None:
+        grid = neighbors.build_grid(pos_g, spec.grid)
+        counts = neighbors.rows_grid_counts(
+            pos_g, lp_g, L, abm.area, abm.interaction_range, spec.grid,
+            grid, f["pos"], my_idx, sender)
+        halo = neighbors.halo_mask(
+            grid["cell"], neighbors.cell_ids(f["pos"], spec.grid), valid,
+            spec.grid)
+        halo_n = (halo & remote_valid).sum()
+        grid_overflow = grid["overflow"]
+    else:
+        counts = neighbors.rows_dense_counts(
+            pos_g, lp_g, L, abm.area, abm.interaction_range,
+            f["pos"], my_idx, sender)
+        halo_n = remote_valid.sum()  # no grid: every remote agent needed
+
+    # 3. communication accounting (psum = the paper's LCR num/denom)
+    safe_lp = jnp.clip(f["lp"], 0, L - 1)
+    local = jnp.take_along_axis(counts, safe_lp[:, None], 1)[:, 0]
+    local = jnp.where(valid, local, 0)
+    local = jax.lax.psum(local.sum(), "lp")
+    total = jax.lax.psum(counts.sum(), "lp")
+    remote = total - local
+
+    # 4/5. self-clustering: window update + evaluation are row-local;
+    # the balancer's inputs are psum'd so every device sees the same
+    # grants and the per-pair selection stays shard-local (a pair's
+    # candidates all live on the shard owning the source LP)
+    migs = jnp.int32(0)
+    n_evals = jnp.int32(0)
+    if cfg.gaia_on:
+        hstate = {k: f[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
+        hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
+        cand, dest, alpha, hstate, n_eval_loc = heu.evaluate(
+            cfg.heuristic, hstate, f["lp"], t, valid=valid, mf=mf)
+        n_evals = jax.lax.psum(n_eval_loc, "lp")
+        cand = cand & (f["pending_dst"] < 0)
+        cmat = jax.lax.psum(bal.candidate_matrix(cand, safe_lp, dest, L),
+                            "lp")
+        if cfg.balance == "asymmetric":
+            cap_sh = jnp.asarray(cfg.capacity, jnp.float32)
+            current = jax.lax.psum(
+                jnp.bincount(jnp.where(valid, f["lp"], L), length=L + 1)[:L],
+                "lp")
+            grants = bal.asymmetric_grants(cmat, current, cap_sh)
+        else:
+            grants = bal.symmetric_grants(cmat)
+        admit = bal.select_migrations(cand, safe_lp, dest, alpha, grants,
+                                      L, tiebreak=f["gid"])
+        f["pending_dst"] = jnp.where(admit, dest, f["pending_dst"])
+        f["pending_eta"] = jnp.where(admit, t + cfg.migration_delay,
+                                     f["pending_eta"])
+        hstate = dict(hstate,
+                      last_mig=jnp.where(admit, t, hstate["last_mig"]))
+        f.update(hstate)
+        migs = jax.lax.psum(admit.sum(), "lp")
+
+    halo_total = jax.lax.psum(halo_n, "lp").astype(jnp.float32)
+    remote_slots = jax.lax.psum(remote_valid.sum(), "lp").astype(jnp.float32)
+    overflow = jax.lax.psum(
+        (reshard_overflow | grid_overflow).astype(jnp.int32), "lp")
+    metrics = {
+        "local_msgs": local.astype(jnp.float32),
+        "remote_msgs": remote.astype(jnp.float32),
+        "migrations": migs.astype(jnp.float32),
+        "heu_evals": n_evals.astype(jnp.float32),
+        "lcr": local.astype(jnp.float32)
+               / jnp.maximum(total.astype(jnp.float32), 1.0),
+        # mean remote agents a shard actually needs (its halo), as a
+        # fraction of all remote agents — GAIA's clustering drives this
+        # down; a ragged transport would realize the saving on the wire
+        "halo_frac": halo_total / jnp.maximum(remote_slots, 1.0),
+        "shard_overflow": (overflow > 0).astype(jnp.float32),
+    }
+    return f, metrics
+
+
+_FIELD_SPECS = {
+    "pos": P("lp"), "waypoint": P("lp"), "lp": P("lp"), "gid": P("lp"),
+    "pending_dst": P("lp"), "pending_eta": P("lp"), "ring": P(None, "lp"),
+    "ptr": P("lp"), "since_eval": P("lp"), "last_mig": P("lp"),
+}
+
+
+def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
+    """One sharded timestep. Same contract as `engine.step`, on
+    slot-major state; metrics additionally report halo_frac and
+    shard_overflow."""
+    if mf is None:
+        mf = jnp.float32(cfg.heuristic.mf)
+    key, k_move, k_send = jax.random.split(state["key"], 3)
+    fields = {k: state[k] for k in _FIELD_SPECS}
+    metric_specs = {k: P() for k in
+                    ("local_msgs", "remote_msgs", "migrations", "heu_evals",
+                     "lcr", "halo_frac", "shard_overflow")}
+    fn = shard_map(
+        partial(_shard_step, cfg=cfg, spec=spec),
+        mesh=mesh,
+        in_specs=(_FIELD_SPECS, P(), P(), P(), P()),
+        out_specs=(_FIELD_SPECS, metric_specs),
+        check_rep=False,  # psum'd outputs are replicated by construction
+    )
+    new_fields, metrics = fn(fields, jax.random.key_data(k_move),
+                             jax.random.key_data(k_send), state["t"], mf)
+    new_state = dict(new_fields, key=key, t=state["t"] + 1)
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# runners (mirror engine.run / engine.run_window)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_window_sharded(key_cfg, n_steps: int):
+    # mirror of engine._compiled_window: one jitted scan per config
+    # shape, MF dynamic (key_cfg comes pre-normalized via
+    # engine.window_key_cfg, so MF sweeps share one executable)
+    spec = make_shard_spec(key_cfg)
+    mesh = make_mesh(spec)
+
+    def fn(state, mf):
+        def body(s, _):
+            return step_sharded(s, key_cfg, spec, mesh, mf=mf)
+        return jax.lax.scan(body, state, None, length=n_steps)
+    return jax.jit(fn)
+
+
+def _scan_sharded(state, cfg, n_steps: int, mf=None):
+    from repro.core.engine import window_key_cfg
+    mf_val = jnp.float32(cfg.heuristic.mf if mf is None else mf)
+    return _compiled_window_sharded(window_key_cfg(cfg), n_steps)(
+        state, mf_val)
+
+
+def _series_counters(series):
+    from repro.core.engine import series_counters
+    counters = series_counters(series)
+    counters["mean_halo_frac"] = float(series["halo_frac"].mean())
+    counters["shard_overflow"] = float(series["shard_overflow"].sum())
+    return counters
+
+
+def run_window_sharded(state, cfg, n_steps: int, mf=None):
+    state, series = _scan_sharded(state, cfg, n_steps, mf=mf)
+    return state, _series_counters(series)
+
+
+def run_sharded(key, cfg):
+    """Sharded mirror of `engine.run`: returns (final_state, series,
+    counters) with the final state unsharded back to gid-order, so
+    callers (and the equivalence tests) see the oracle's layout."""
+    spec = make_shard_spec(cfg)
+    st = init_sharded(key, cfg, spec)
+    st, series = _scan_sharded(st, cfg, cfg.timesteps)
+    counters = _series_counters(series)
+    counters["migration_ratio"] = (counters["migrations"] /
+                                   (cfg.abm.n_se *
+                                    (cfg.timesteps / 1000.0)))  # Eq. 8
+    return unshard_state(st, spec), series, counters

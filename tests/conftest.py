@@ -1,9 +1,27 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single
-real CPU device; only the dry-run subprocesses fake a 512-chip mesh."""
+"""Shared fixtures.
+
+The main test process forces FOUR host-platform devices (before the
+first jax import) so tests/test_sharding.py can exercise the
+LP-per-device engine on real 1/2/4-device meshes in-process. Engine
+math is device-count-independent for every other test (sharding="none"
+runs on device 0 regardless). The launch dry-run subprocesses still set
+their own XLA_FLAGS (512 fake chips) — they override this value.
+"""
 import os
 
 # Determinism + keep XLA from grabbing all RAM for test workers.
 os.environ.setdefault("XLA_PYTHON_CLIENT_PREALLOCATE", "false")
+# respect an explicit device count from the caller (e.g. 8-device runs)
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=4")
+# Persistent compilation cache: the suite is compile-dominated, so warm
+# reruns (the common local dev loop) skip straight to execution. The
+# env var propagates to the subprocess-mesh tests too.
+os.environ.setdefault(
+    "JAX_COMPILATION_CACHE_DIR",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 ".jax_cache"))
 
 import jax
 import pytest
@@ -15,4 +33,5 @@ def key():
 
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line("markers", "slow: long-running integration test "
+                            "(excluded from tier-1; nightly CI job)")

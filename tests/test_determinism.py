@@ -1,0 +1,57 @@
+"""Determinism regression (standalone, quick — was a side-assert inside
+long engine tests).
+
+Two contracts:
+  * same seed + config => byte-identical final engine state and series
+    across two independent runs;
+  * the §4.2 transparency invariant: the model-evolution fields
+    (positions, waypoints, total interaction volume) are byte-identical
+    with GAIA ON and OFF — partitioning decides WHERE events land,
+    never WHAT happens.
+
+The configs deliberately match tests/test_engine.py's SMALL scenario so
+both modules share one memoized compiled scan per gaia flag
+(engine._compiled_window) instead of compiling private variants.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.abm import ABMConfig
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+CFG = EngineConfig(
+    abm=ABMConfig(n_se=120, n_lp=4, area=1000.0, speed=5.0,
+                  interaction_range=80.0, p_interact=0.3),
+    heuristic=HeuristicConfig(mf=1.2, mt=5), gaia_on=True, timesteps=60)
+
+
+def _bytes(x):
+    return np.ascontiguousarray(np.asarray(x)).tobytes()
+
+
+def test_same_seed_same_config_is_byte_identical():
+    st1, s1, c1 = run(jax.random.key(11), CFG)
+    st2, s2, c2 = run(jax.random.key(11), CFG)
+    for k in ("pos", "waypoint", "lp", "pending_dst", "pending_eta",
+              "ring", "ptr", "since_eval", "last_mig"):
+        assert _bytes(st1[k]) == _bytes(st2[k]), k
+    assert _bytes(jax.random.key_data(st1["key"])) == \
+           _bytes(jax.random.key_data(st2["key"]))
+    for k in s1:
+        assert _bytes(s1[k]) == _bytes(s2[k]), k
+    assert c1 == c2
+
+
+def test_gaia_transparency_on_model_evolution_fields():
+    st_on, s_on, _ = run(jax.random.key(5), CFG)
+    st_off, s_off, _ = run(jax.random.key(5),
+                           dataclasses.replace(CFG, gaia_on=False))
+    for k in ("pos", "waypoint"):
+        assert _bytes(st_on[k]) == _bytes(st_off[k]), k
+    tot_on = np.asarray(s_on["local_msgs"]) + np.asarray(s_on["remote_msgs"])
+    tot_off = (np.asarray(s_off["local_msgs"])
+               + np.asarray(s_off["remote_msgs"]))
+    np.testing.assert_array_equal(tot_on, tot_off)

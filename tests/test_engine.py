@@ -2,11 +2,17 @@
 
 The headline invariant is *transparency* (§4.2): adaptive partitioning
 must not change the simulation results — only where deliveries land.
+
+Speed discipline (tier-1 budget): engine runs are memoized via
+`_run(...)` (EngineConfig is frozen/hashable), so tests share scans
+instead of recompiling them, and every scenario uses the smallest
+(n_se, timesteps) that still exercises its logic.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.abm import ABMConfig, init_abm, interaction_counts, rwp_step
 from repro.core.engine import EngineConfig, init_engine, run, step
@@ -16,11 +22,16 @@ SMALL = ABMConfig(n_se=120, n_lp=4, area=1000.0, speed=5.0,
                   interaction_range=80.0, p_interact=0.3)
 
 
+@functools.lru_cache(maxsize=None)
+def _run_cfg(cfg: EngineConfig):
+    return run(jax.random.key(7), cfg)
+
+
 def _run(gaia_on, ts=60, heuristic=None, **abm_kw):
     cfg = EngineConfig(abm=ABMConfig(**{**SMALL.__dict__, **abm_kw}),
                        heuristic=heuristic or HeuristicConfig(mf=1.2, mt=5),
                        gaia_on=gaia_on, timesteps=ts)
-    return run(jax.random.key(7), cfg)
+    return _run_cfg(cfg)
 
 
 def test_transparency_gaia_does_not_change_model_evolution():
@@ -36,8 +47,8 @@ def test_transparency_gaia_does_not_change_model_evolution():
 
 
 def test_gaia_improves_lcr():
-    _, _, c_on = _run(True, ts=80)
-    _, _, c_off = _run(False, ts=80)
+    _, _, c_on = _run(True)
+    _, _, c_off = _run(False)
     assert c_on["migrations"] > 0
     assert c_on["mean_lcr"] > c_off["mean_lcr"] + 0.05, (c_on, c_off)
 
@@ -45,7 +56,7 @@ def test_gaia_improves_lcr():
 def test_static_lcr_matches_random_assignment():
     """With GAIA OFF and random equal assignment, LCR ~= 1/n_lp (paper
     §5.2: '25% with 4 LPs')."""
-    _, _, c = _run(False, ts=40)
+    _, _, c = _run(False)
     assert abs(c["mean_lcr"] - 0.25) < 0.05
 
 
@@ -55,13 +66,14 @@ def test_migration_protocol_delay():
     cfg = EngineConfig(abm=SMALL, heuristic=HeuristicConfig(mf=0.5, mt=0),
                        gaia_on=True, migration_delay=5, timesteps=1)
     st = init_engine(jax.random.key(0), cfg)
+    jstep = jax.jit(lambda s: step(s, cfg))
     # run steps manually; track a pending migration
     for _ in range(30):
         prev_lp = st["lp"]
         pend_prev = st["pending_dst"] >= 0
         eta_prev = st["pending_eta"]
         t_prev = st["t"]
-        st, _ = step(st, cfg)
+        st, _ = jstep(st)
         newly_admitted = (st["pending_dst"] >= 0) & ~pend_prev
         if bool(newly_admitted.any()):
             idx = int(jnp.argmax(newly_admitted))
@@ -75,7 +87,7 @@ def test_migration_protocol_delay():
 
 
 def test_symmetric_balance_preserves_counts_through_run():
-    st, _, c = _run(True, ts=60)
+    st, _, c = _run(True)
     counts = np.bincount(np.asarray(st["lp"]), minlength=SMALL.n_lp)
     assert c["migrations"] > 0
     np.testing.assert_array_equal(counts, [SMALL.n_se // SMALL.n_lp] * SMALL.n_lp)
@@ -85,7 +97,7 @@ def test_asymmetric_balance_drifts_to_capacity():
     cfg = EngineConfig(
         abm=SMALL, heuristic=HeuristicConfig(mf=0.8, mt=2),
         gaia_on=True, balance="asymmetric",
-        capacity=(0.4, 0.3, 0.2, 0.1), timesteps=120)
+        capacity=(0.4, 0.3, 0.2, 0.1), timesteps=100)
     st, _, _ = run(jax.random.key(3), cfg)
     counts = np.bincount(np.asarray(st["lp"]), minlength=4) / SMALL.n_se
     # allocation drifted toward the capacity profile (LP0 > LP3)
@@ -95,21 +107,21 @@ def test_asymmetric_balance_drifts_to_capacity():
 def test_faster_movement_needs_more_migrations():
     """Paper Fig. 5 trend: higher speed -> more migrations for the same
     clustering level."""
-    _, _, slow = _run(True, ts=80, speed=2.0)
-    _, _, fast = _run(True, ts=80, speed=40.0)
+    _, _, slow = _run(True, speed=2.0)
+    _, _, fast = _run(True, speed=40.0)
     assert fast["migrations"] > slow["migrations"]
 
 
 def test_heuristics_2_and_3_also_cluster():
-    _, _, c_off = _run(False, ts=80)
+    _, _, c_off = _run(False)
     for kind, kw in ((2, dict(omega=8)), (3, dict(omega=8, zeta=8))):
-        _, _, c = _run(True, ts=80,
+        _, _, c = _run(True,
                        heuristic=HeuristicConfig(kind=kind, mf=1.2, mt=5, **kw))
         assert c["mean_lcr"] > c_off["mean_lcr"] + 0.02, (kind, c, c_off)
     # h3 evaluates strictly fewer SEs than h2
-    _, _, c2 = _run(True, ts=80,
+    _, _, c2 = _run(True,
                     heuristic=HeuristicConfig(kind=2, mf=1.2, mt=5, omega=8))
-    _, _, c3 = _run(True, ts=80,
+    _, _, c3 = _run(True,
                     heuristic=HeuristicConfig(kind=3, mf=1.2, mt=5, omega=8,
                                               zeta=16))
     assert c3["heu_evals"] < c2["heu_evals"]
@@ -118,8 +130,8 @@ def test_heuristics_2_and_3_also_cluster():
 def test_mf_sweep_monotone_migrations():
     """Higher MF -> fewer migrations (Fig. 8/9 x-axis mechanics)."""
     migs = []
-    for mf in (0.8, 1.5, 3.0, 8.0):
-        _, _, c = _run(True, ts=60, heuristic=HeuristicConfig(mf=mf, mt=5))
+    for mf in (0.8, 3.0, 8.0):
+        _, _, c = _run(True, heuristic=HeuristicConfig(mf=mf, mt=5))
         migs.append(c["migrations"])
     assert migs == sorted(migs, reverse=True), migs
     assert migs[-1] < migs[0]
@@ -148,17 +160,13 @@ def test_interaction_counts_match_bruteforce():
     sender = jax.random.bernoulli(jax.random.key(7), 0.5, (64,))
     got = np.asarray(interaction_counts(pos, lp, sender, cfg))
     p = np.asarray(pos)
-    want = np.zeros((64, 3), np.int32)
-    for i in range(64):
-        if not bool(sender[i]):
-            continue
-        for j in range(64):
-            if i == j:
-                continue
-            d = np.abs(p[i] - p[j])
-            d = np.minimum(d, 500.0 - d)
-            if (d ** 2).sum() <= 90.0 ** 2:
-                want[i, int(lp[j])] += 1
+    d = np.abs(p[:, None, :] - p[None, :, :])
+    d = np.minimum(d, 500.0 - d)
+    mask = (d ** 2).sum(-1) <= 90.0 ** 2
+    np.fill_diagonal(mask, False)
+    mask &= np.asarray(sender)[:, None]
+    onehot = np.asarray(lp)[:, None] == np.arange(3)[None, :]
+    want = (mask.astype(np.int64) @ onehot.astype(np.int64)).astype(np.int32)
     np.testing.assert_array_equal(got, want)
 
 

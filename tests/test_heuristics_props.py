@@ -1,0 +1,110 @@
+"""Property-based tests for the §4.3 self-clustering heuristics.
+
+Randomized traces pin the window semantics the hand-stepped unit tests
+(test_heuristics.py) only spot-check:
+
+  * #2 with omega = kappa degenerates to #1 on one-event-per-step
+    traces (every SE sends every timestep — the windows hold exactly
+    the same kappa histograms);
+  * the alpha > MF gate is monotone: raising MF never admits a new
+    candidate;
+  * MT is never violated: an emitted candidate always has
+    t - last_mig >= mt.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional dev dependency "
+    "`hypothesis` (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heuristics import (HeuristicConfig, evaluate, init_state,
+                                   update_window)
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+
+def _trace(draw, n_se_max=6, n_lp_max=4, t_max=8, all_senders=False):
+    n_lp = draw(st.integers(2, n_lp_max))
+    n_se = draw(st.integers(1, n_se_max))
+    steps = draw(st.integers(1, t_max))
+    counts = draw(st.lists(
+        st.lists(st.lists(st.integers(0, 5), min_size=n_lp, max_size=n_lp),
+                 min_size=n_se, max_size=n_se),
+        min_size=steps, max_size=steps))
+    if all_senders:
+        senders = [[True] * n_se] * steps
+    else:
+        senders = draw(st.lists(
+            st.lists(st.booleans(), min_size=n_se, max_size=n_se),
+            min_size=steps, max_size=steps))
+    lp = draw(st.lists(st.integers(0, n_lp - 1), min_size=n_se,
+                       max_size=n_se))
+    return (n_se, n_lp, jnp.asarray(counts, jnp.int32),
+            jnp.asarray(senders, bool), jnp.asarray(lp, jnp.int32))
+
+
+def _push_trace(cfg, n_se, n_lp, counts, senders):
+    s = init_state(cfg, n_se, n_lp)
+    for t in range(counts.shape[0]):
+        s = update_window(cfg, s, counts[t], senders[t], t)
+    return s
+
+
+@given(st.data())
+def test_h2_equals_h1_on_one_event_per_step_traces(data):
+    """omega = kappa and every SE sends every step: the event window IS
+    the timestep window, so #1 and #2 agree on candidates/dest/alpha."""
+    n_se, n_lp, counts, senders, lp = _trace(data.draw, all_senders=True)
+    w = data.draw(st.integers(1, 5))
+    cfg1 = HeuristicConfig(kind=1, mf=1.2, mt=0, kappa=w)
+    cfg2 = HeuristicConfig(kind=2, mf=1.2, mt=0, omega=w)
+    s1 = _push_trace(cfg1, n_se, n_lp, counts, senders)
+    s2 = _push_trace(cfg2, n_se, n_lp, counts, senders)
+    t = counts.shape[0]
+    c1, d1, a1, _, _ = evaluate(cfg1, s1, lp, t)
+    c2, d2, a2, _, _ = evaluate(cfg2, s2, lp, t)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    # dest only meaningful where some external traffic exists
+    ext = np.asarray(a1) > 0
+    np.testing.assert_array_equal(np.asarray(d1)[ext], np.asarray(d2)[ext])
+
+
+@given(st.data())
+def test_alpha_threshold_monotone_in_mf(data):
+    """Candidates at a higher MF are a subset of those at a lower MF."""
+    n_se, n_lp, counts, senders, lp = _trace(data.draw)
+    mf_lo = data.draw(st.floats(0.1, 5.0, allow_nan=False))
+    mf_hi = mf_lo + data.draw(st.floats(0.1, 5.0, allow_nan=False))
+    kind = data.draw(st.sampled_from([1, 2]))
+    base = dict(kind=kind, mt=0, kappa=4, omega=4)
+    s = _push_trace(HeuristicConfig(mf=mf_lo, **base), n_se, n_lp,
+                    counts, senders)
+    t = counts.shape[0]
+    c_lo, *_ = evaluate(HeuristicConfig(mf=mf_lo, **base), s, lp, t)
+    c_hi, *_ = evaluate(HeuristicConfig(mf=mf_hi, **base), s, lp, t)
+    assert not np.any(np.asarray(c_hi) & ~np.asarray(c_lo))
+
+
+@given(st.data())
+def test_mt_never_violated_by_candidates(data):
+    """No emitted candidate migrated fewer than mt steps ago."""
+    n_se, n_lp, counts, senders, lp = _trace(data.draw)
+    mt = data.draw(st.integers(0, 12))
+    t_eval = counts.shape[0]
+    last_mig = jnp.asarray(
+        data.draw(st.lists(st.integers(-5, t_eval), min_size=n_se,
+                           max_size=n_se)), jnp.int32)
+    kind = data.draw(st.sampled_from([1, 2, 3]))
+    cfg = HeuristicConfig(kind=kind, mf=0.0, mt=mt, kappa=4, omega=4,
+                          zeta=1)
+    s = _push_trace(cfg, n_se, n_lp, counts, senders)
+    s = dict(s, last_mig=last_mig)
+    cand, *_ = evaluate(cfg, s, lp, t_eval)
+    cand = np.asarray(cand)
+    ok = (t_eval - np.asarray(last_mig)) >= mt
+    assert not np.any(cand & ~ok)

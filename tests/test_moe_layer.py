@@ -57,6 +57,7 @@ def test_moe_matches_naive_when_capacity_ample(shared):
                                atol=0.06, rtol=0.08)
 
 
+@pytest.mark.slow
 def test_capacity_drops_overflow_tokens():
     m = MoEConfig(num_experts=4, top_k=1, d_expert=8, capacity_factor=0.25)
     key = jax.random.key(2)

@@ -38,8 +38,9 @@ def _case(seed, n, n_lp, area, rng, seam=False):
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("n,n_lp,area,rng,seam", [
     (200, 4, 1000.0, 80.0, False),
-    (300, 3, 1000.0, 60.0, True),  # seam-straddling cluster, odd N
-    (128, 8, 500.0, 90.0, False),
+    pytest.param(300, 3, 1000.0, 60.0, True,
+                 marks=pytest.mark.slow),  # seam cluster, odd N (nightly)
+    pytest.param(128, 8, 500.0, 90.0, False, marks=pytest.mark.slow),
     (96, 2, 100.0, 45.0, False),  # area/rng < 3: dense fallback path
     (150, 4, 300.0, 40.0, True),  # seam + ncell >= 3
     (64, 3, 1000.0, 400.0, False),  # range > cell side forces ncell=2 -> dense

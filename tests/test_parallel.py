@@ -41,6 +41,7 @@ def _mesh_like():
     return None
 
 
+@pytest.mark.slow
 def test_dense_mlp_is_tensor_parallel_not_expert_sharded():
     """Regression: stacked dense (L, d, f) must never be treated as MoE
     experts (L-dim sharding) — w_gate shards f, w_down shards its f dim."""
@@ -100,6 +101,7 @@ def test_zero1_adds_data_axis():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """The same smoke train step gives identical loss on a (2,2) mesh and
     on one device — GSPMD partitioning is semantics-preserving."""
@@ -140,6 +142,7 @@ def test_sharded_train_step_matches_single_device():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_gpipe_matches_sequential():
     out = run_with_devices("""
         import jax, jax.numpy as jnp
@@ -167,6 +170,7 @@ def test_gpipe_matches_sequential():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_q8_cross_pod_mean_matches_uncompressed_within_tol():
     out = run_with_devices("""
         import jax, jax.numpy as jnp
@@ -189,6 +193,7 @@ def test_q8_cross_pod_mean_matches_uncompressed_within_tol():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_ep2d_matches_grouped_ep():
     """2-D expert parallelism is semantics-preserving: the MoE layer
     gives the same output with ep2d on/off on a (2,2) mesh."""
@@ -220,6 +225,7 @@ def test_ep2d_matches_grouped_ep():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_mini_dryrun_multipod_mesh():
     """End-to-end miniature of the production dry-run: 2x2x2 pod mesh,
     lower+compile the smoke arch, memory analysis returns sane numbers."""

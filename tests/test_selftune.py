@@ -1,4 +1,10 @@
-"""Self-tuning adaptive partitioning tests (paper §5.5)."""
+"""Self-tuning adaptive partitioning tests (paper §5.5).
+
+Tier-1 runs the smallest configs that still show real tuner descent
+(6 windows x 40 steps); the paper-sized 400-step run is `slow` (nightly).
+"""
+import dataclasses
+
 import jax
 import pytest
 
@@ -8,17 +14,17 @@ from repro.core.heuristics import HeuristicConfig
 from repro.core.selftune import SelfTuneConfig, inter_run_tune, intra_run_tune
 
 CFG = EngineConfig(
-    abm=ABMConfig(n_se=150, n_lp=4, area=1200.0, speed=4.0,
+    abm=ABMConfig(n_se=100, n_lp=4, area=1000.0, speed=4.0,
                   interaction_range=90.0, p_interact=0.3),
     heuristic=HeuristicConfig(mf=4.0, mt=5),
-    gaia_on=True, timesteps=400)
+    gaia_on=True, timesteps=180)
 
 
 def test_intra_run_tuner_descends_mf():
     """In a clustering-friendly scenario the gain curve is monotone in
     migrations (paper Fig. 8), so the tuner must walk MF down from a
     too-conservative start and improve both LCR and priced TEC."""
-    tc = SelfTuneConfig(window=50, mf0=8.0, setup="distributed",
+    tc = SelfTuneConfig(window=30, mf0=8.0, setup="distributed",
                         interaction_bytes=1024, migration_bytes=32)
     _, hist = intra_run_tune(jax.random.key(0), CFG, tc)
     assert len(hist) == CFG.timesteps // tc.window
@@ -31,9 +37,9 @@ def test_intra_run_tuner_descends_mf():
 
 
 def test_intra_run_tuner_respects_bounds():
-    tc = SelfTuneConfig(window=50, mf0=1.1, step0=0.9, min_mf=1.05,
+    tc = SelfTuneConfig(window=30, mf0=1.1, step0=0.9, min_mf=1.05,
                         max_mf=19.0)
-    _, hist = intra_run_tune(jax.random.key(1), CFG, tc)
+    _, hist = intra_run_tune(jax.random.key(1), CFG, tc, total_steps=120)
     for _, mf, _, _ in hist:
         assert 1.05 <= mf <= 19.0
 
@@ -41,11 +47,27 @@ def test_intra_run_tuner_respects_bounds():
 def test_inter_run_tuner_finds_low_mf_region():
     """Full-run golden-section bracketing lands in the aggressive-MF
     region where Figs. 8/9 put the optimum for cheap migrations."""
-    cfg = EngineConfig(abm=CFG.abm, heuristic=CFG.heuristic, gaia_on=True,
-                       timesteps=150)
+    cfg = dataclasses.replace(CFG, timesteps=90)
     tc = SelfTuneConfig(setup="distributed", interaction_bytes=1024,
                         migration_bytes=32)
     best_mf, trials = inter_run_tune(jax.random.key(2), cfg, tc,
-                                     n_probes=5)
-    assert len(trials) == 5
+                                     n_probes=4)
+    assert len(trials) == 4
     assert best_mf < 6.0, trials
+
+
+@pytest.mark.slow
+def test_intra_run_tuner_descends_mf_full_scale():
+    """The original 400-step, 50-step-window descent (nightly tier)."""
+    cfg = EngineConfig(
+        abm=ABMConfig(n_se=150, n_lp=4, area=1200.0, speed=4.0,
+                      interaction_range=90.0, p_interact=0.3),
+        heuristic=HeuristicConfig(mf=4.0, mt=5),
+        gaia_on=True, timesteps=400)
+    tc = SelfTuneConfig(window=50, mf0=8.0, setup="distributed",
+                        interaction_bytes=1024, migration_bytes=32)
+    _, hist = intra_run_tune(jax.random.key(0), cfg, tc)
+    assert len(hist) == 8
+    assert hist[-1][1] < hist[0][1] * 0.7, hist
+    assert hist[-1][3] < hist[0][3], hist
+    assert hist[-1][2] > hist[0][2] + 0.05, hist

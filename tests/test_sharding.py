@@ -1,0 +1,137 @@
+"""Sharded-execution equivalence (parallel/lp_shard.py tentpole contract).
+
+`sharding="lp_device"` must be *bit-identical* to the single-device
+oracle on the same seed: positions, interaction accounting, LCR,
+migration sequence, heuristic windows — the §4.2 transparency invariant
+extended to the execution layer. conftest forces 4 host-platform
+devices, so 1/2/4-device meshes run in-process.
+"""
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.abm import ABMConfig
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+from repro.parallel import lp_shard
+
+ABM = ABMConfig(n_se=96, n_lp=4, area=1000.0, speed=5.0,
+                interaction_range=80.0, p_interact=0.3)
+SYM = EngineConfig(abm=ABM, heuristic=HeuristicConfig(mf=1.2, mt=5),
+                   gaia_on=True, timesteps=24)
+ASYM = EngineConfig(abm=ABM, heuristic=HeuristicConfig(mf=0.8, mt=2),
+                    gaia_on=True, balance="asymmetric",
+                    capacity=(0.4, 0.3, 0.2, 0.1), timesteps=24)
+
+STATE_KEYS = ("pos", "waypoint", "lp", "pending_dst", "pending_eta",
+              "ring", "ptr", "since_eval", "last_mig")
+SERIES_KEYS = ("local_msgs", "remote_msgs", "migrations", "heu_evals", "lcr")
+
+
+@functools.lru_cache(maxsize=None)
+def _run(cfg: EngineConfig, seed=7):
+    return run(jax.random.key(seed), cfg)
+
+
+def _assert_equivalent(cfg, n_devices):
+    st0, s0, c0 = _run(cfg)
+    st1, s1, c1 = _run(dataclasses.replace(cfg, sharding="lp_device",
+                                           n_devices=n_devices))
+    assert c1["shard_overflow"] == 0.0
+    for k in STATE_KEYS:
+        np.testing.assert_array_equal(np.asarray(st0[k]), np.asarray(st1[k]),
+                                      err_msg=k)
+    # per-step series equality pins the whole trajectory, including the
+    # migration sequence (admissions per step + final lp/last_mig above)
+    for k in SERIES_KEYS:
+        np.testing.assert_array_equal(np.asarray(s0[k]), np.asarray(s1[k]),
+                                      err_msg=k)
+    assert c0["mean_lcr"] == c1["mean_lcr"]
+    assert c1["migrations"] > 0  # both non-trivial runs
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_symmetric_equivalence(n_devices):
+    _assert_equivalent(SYM, n_devices)
+
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_asymmetric_equivalence(n_devices):
+    _assert_equivalent(ASYM, n_devices)
+
+
+def test_dense_backend_equivalence():
+    cfg = dataclasses.replace(
+        SYM, abm=dataclasses.replace(ABM, proximity_backend="dense"),
+        timesteps=20)
+    _assert_equivalent(cfg, 4)
+
+
+def test_event_window_heuristic_equivalence():
+    """#2's per-SE ring pointers must travel with migrating SEs."""
+    cfg = dataclasses.replace(
+        SYM, heuristic=HeuristicConfig(kind=2, mf=1.2, mt=5, omega=8),
+        timesteps=20)
+    _assert_equivalent(cfg, 4)
+
+
+def test_halo_shrinks_as_gaia_clusters():
+    """The physically-real communication story: GAIA's migrations make
+    each shard's LPs spatially coherent, so the halo (remote agents a
+    shard actually needs) shrinks relative to the static partitioning."""
+    _, s_on, c_on = _run(dataclasses.replace(SYM, sharding="lp_device",
+                                             n_devices=4, timesteps=48))
+    _, s_off, c_off = _run(dataclasses.replace(SYM, sharding="lp_device",
+                                               n_devices=4, timesteps=48,
+                                               gaia_on=False))
+    late_on = float(np.asarray(s_on["halo_frac"])[-8:].mean())
+    late_off = float(np.asarray(s_off["halo_frac"])[-8:].mean())
+    assert late_on < late_off - 0.05, (late_on, late_off)
+
+
+def test_overflow_defers_instead_of_destroying_ses():
+    """A migration burst past mig_capacity (or past the destination's
+    free slots) must defer the move to a later step, never delete the
+    SE: the population stays n_se every step even while the
+    shard_overflow alarm fires (the alarm still marks divergence from
+    the capacity-free oracle)."""
+    cfg = dataclasses.replace(
+        SYM, heuristic=HeuristicConfig(mf=0.5, mt=0), timesteps=25,
+        sharding="lp_device", n_devices=4, mig_capacity=1)
+    _, series, c = _run(cfg)
+    assert c["shard_overflow"] > 0  # the burst really overflowed
+    # heu_evals counts valid SEs across shards each step: pop intact
+    np.testing.assert_array_equal(np.asarray(series["heu_evals"]),
+                                  np.full(cfg.timesteps, ABM.n_se, np.float32))
+
+
+def test_shard_spec_validation():
+    spec = lp_shard.make_shard_spec(
+        dataclasses.replace(SYM, sharding="lp_device", n_devices=4))
+    assert spec.n_dev == 4 and spec.n_dev * spec.cap >= ABM.n_se
+    # more devices than visible -> error
+    with pytest.raises(ValueError):
+        lp_shard.make_shard_spec(
+            dataclasses.replace(SYM, sharding="lp_device", n_devices=64))
+    # pallas proximity backends are single-device kernels
+    with pytest.raises(NotImplementedError):
+        lp_shard.make_shard_spec(dataclasses.replace(
+            SYM, sharding="lp_device",
+            abm=dataclasses.replace(ABM, proximity_backend="pallas")))
+    with pytest.raises(ValueError):
+        dataclasses.replace(SYM, sharding="rowwise")
+
+
+def test_selftune_runs_sharded():
+    """run_window dispatches on cfg.sharding: the §5.5 intra-run tuner
+    drives the sharded engine transparently."""
+    from repro.core.engine import init_engine, run_window
+    cfg = dataclasses.replace(SYM, sharding="lp_device", n_devices=2,
+                              timesteps=10)
+    st = init_engine(jax.random.key(1), cfg)
+    st, counters = run_window(st, cfg, 10)
+    assert counters["shard_overflow"] == 0.0
+    assert counters["local_msgs"] + counters["remote_msgs"] > 0
