@@ -1,0 +1,153 @@
+"""Bench-regression gate: compare current BENCH_*.json against the
+committed BENCH_baseline/ snapshots.
+
+Tracked metrics are deliberately *machine-independent ratios* (speedup
+over a same-machine oracle, overhead factors, halo fractions, TEC gain
+fractions) rather than absolute seconds: the baselines were recorded on
+one box and the nightly job runs on whatever runner GitHub hands out,
+so wall-clock numbers would flap while ratios only move when the code's
+behavior moves. A tracked metric may regress at most its tolerance
+relative to its baseline before the gate fails: REL_TOL (20%) for the
+counter-derived metrics, which are deterministic given the code, and
+TIMING_TOL (60%) for the two ratios that divide one *measured time* by
+another — same-machine ratios still shift with CPU generation and rep
+noise, so their gate only catches structural regressions (e.g. the
+grid path degenerating toward dense), not jitter.
+
+Used by the nightly CI job after the quick-mode exp4/exp5/exp6 runs,
+and runnable locally:
+
+    PYTHONPATH=src python -m benchmarks.run --scale quick \
+        --only exp4,exp5,exp6
+    python benchmarks/compare.py
+
+Refreshing baselines after an intentional change:
+
+    cp BENCH_proximity.json BENCH_sharded.json BENCH_scenarios.json \
+        BENCH_baseline/
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REL_TOL = 0.20  # counter-derived metrics: deterministic given the code
+TIMING_TOL = 0.60  # time/time ratios: structural regressions only
+ABS_TOL = 0.05  # slack when the baseline is ~zero
+
+#: file -> {dotted.metric.path: (direction, tolerance)} with direction
+#: "higher" | "lower" ("higher" = larger is better; the gate fires on
+#: the *worsening* direction only)
+TRACKED = {
+    "BENCH_proximity.json": {
+        "grid_speedup_over_dense.10000": ("higher", TIMING_TOL),
+        "grid_speedup_over_dense.50000": ("higher", TIMING_TOL),
+    },
+    "BENCH_sharded.json": {
+        "sharded_overhead_at_d1": ("lower", TIMING_TOL),
+        "halo_shrink_d4.gaia_on.halo_frac_last10": ("lower", REL_TOL),
+    },
+    # note: exp6's own >=2-of-3 win-count gate is asserted by the bench
+    # itself; tracking the per-scenario gains here (rather than the win
+    # count) keeps one consistent threshold per scenario
+    "BENCH_scenarios.json": {
+        "gate.tec_gain_by_scenario.hotspot": ("higher", REL_TOL),
+        "gate.tec_gain_by_scenario.group": ("higher", REL_TOL),
+        "gate.tec_gain_by_scenario.flock": ("higher", REL_TOL),
+    },
+}
+
+
+def dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def check_metric(direction: str, tol: float, cur: float, base: float):
+    """Returns (ok, bound) for cur against base in the given direction."""
+    if abs(base) < 1e-9:
+        bound = -ABS_TOL if direction == "higher" else ABS_TOL
+    elif direction == "higher":
+        bound = base - abs(base) * tol
+    else:
+        bound = base + abs(base) * tol
+    ok = cur >= bound if direction == "higher" else cur <= bound
+    return ok, bound
+
+
+def compare_file(cur_path: str, base_path: str, metrics: dict):
+    """Yields (metric, status, message) rows for one benchmark file.
+
+    A missing baseline (file or metric) is a FAILURE, not a skip: it
+    would otherwise silently disarm the gate — add the snapshot (or
+    refresh BENCH_baseline/) in the PR that changes the benchmark."""
+    name = os.path.basename(cur_path)
+    if not os.path.exists(base_path):
+        yield name, "fail", f"no baseline snapshot at {base_path}"
+        return
+    if not os.path.exists(cur_path):
+        yield name, "fail", "current result missing (bench did not run?)"
+        return
+    with open(cur_path) as f:
+        cur_doc = json.load(f)
+    with open(base_path) as f:
+        base_doc = json.load(f)
+    for path, (direction, tol) in metrics.items():
+        base = dig(base_doc, path)
+        cur = dig(cur_doc, path)
+        if base is None:
+            yield f"{name}:{path}", "fail", \
+                "metric missing from baseline (refresh BENCH_baseline/)"
+            continue
+        if cur is None:
+            yield f"{name}:{path}", "fail", "metric missing from current run"
+            continue
+        ok, bound = check_metric(direction, tol, float(cur), float(base))
+        word = ">=" if direction == "higher" else "<="
+        msg = (f"{float(cur):.4g} (baseline {float(base):.4g}, "
+               f"needs {word} {bound:.4g})")
+        yield f"{name}:{path}", "ok" if ok else "fail", msg
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if any tracked benchmark metric regressed "
+                    f">{REL_TOL:.0%} (counters) / >{TIMING_TOL:.0%} "
+                    "(timing ratios) vs the committed baseline")
+    ap.add_argument("--baseline-dir",
+                    default=os.path.join(REPO, "BENCH_baseline"))
+    ap.add_argument("--current-dir", default=REPO)
+    ap.add_argument("files", nargs="*", default=[],
+                    help="restrict to these BENCH_*.json names")
+    args = ap.parse_args(argv)
+
+    names = args.files or sorted(TRACKED)
+    failures = 0
+    for fname in names:
+        metrics = TRACKED.get(os.path.basename(fname))
+        if metrics is None:
+            print(f"[compare] {fname}: not a tracked benchmark "
+                  f"(known: {sorted(TRACKED)})")
+            failures += 1
+            continue
+        for metric, status, msg in compare_file(
+                os.path.join(args.current_dir, os.path.basename(fname)),
+                os.path.join(args.baseline_dir, os.path.basename(fname)),
+                metrics):
+            print(f"[compare] {status.upper():4s} {metric}: {msg}")
+            failures += status == "fail"
+    if failures:
+        print(f"[compare] {failures} regression(s) vs baseline")
+        return 1
+    print("[compare] all tracked metrics within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,6 @@ CPU core). full: adds 100k dense and small-N pallas backends.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time

@@ -1,0 +1,156 @@
+"""Experiment 6 (beyond-paper): scenario x environment sweep.
+
+The paper claims self-clustering pays off across "various configurations
+of the simulation model and the execution environment"; the earlier
+experiments only exercise uniform RWP on homogeneous devices — the
+friendliest case. This sweep runs the non-uniform mobility workloads
+(hotspot attractors, RPGM-style groups, emergent flocking) with GAIA on
+and off, prices each run on every ExecutionEnvironment preset
+(shared-memory / LAN / two-site WAN / heterogeneous speeds) with the
+per-LP-pair cost layer, and records everything in BENCH_scenarios.json
+at the repo root (uploaded as a CI artifact and tracked by the
+bench-regression gate, benchmarks/compare.py).
+
+One engine run per (scenario, gaia) serves all environments: counters
+are environment-independent; only the *pricing* changes (that is the
+point of the §3 cost layer).
+
+Acceptance gate: on the LAN environment GAIA must reduce TEC vs static
+partitioning on >= 2 of the 3 non-uniform scenarios, and no run may
+overflow the proximity grid (the clustered auto-capacity must hold).
+
+    PYTHONPATH=src python benchmarks/exp6_scenarios.py [quick|full]
+
+quick: N=1000, 300 steps (CI-sized). full: N=10000, 1200 steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core.abm import ABMConfig
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_scenarios.json")
+
+SCALES = {
+    # n_se, timesteps, area: paper density 1e-4 SE/unit^2, like common.py
+    "quick": dict(n_se=1_000, timesteps=300, area=3162.0),
+    "full": dict(n_se=10_000, timesteps=1200, area=10_000.0),
+}
+SCENARIOS = ("rwp", "hotspot", "group", "flock")  # rwp = reference row
+NEW_SCENARIOS = ("hotspot", "group", "flock")
+ENVS = ("shm", "lan", "wan2", "hetero")
+GATE_ENV = "lan"
+N_LP = 4
+INTERACTION_BYTES = 100
+MIGRATION_BYTES = 256
+
+
+def scenario_cfg(scale: str, mobility: str, gaia: bool) -> EngineConfig:
+    s = SCALES[scale]
+    f = s["area"] / 10_000.0  # speed scaling, as in benchmarks/common.py
+    return EngineConfig(
+        abm=ABMConfig(n_se=s["n_se"], n_lp=N_LP, area=s["area"],
+                      speed=11.0 * f, interaction_range=250.0,
+                      p_interact=0.2, mobility=mobility, n_groups=8,
+                      group_radius=250.0),
+        heuristic=HeuristicConfig(mf=1.2, mt=10),
+        gaia_on=gaia, timesteps=s["timesteps"])
+
+
+def density_stats(state, cfg: EngineConfig) -> dict:
+    """How non-uniform did the workload actually get? Peak cell
+    occupancy over the uniform mean (1.0 = perfectly uniform)."""
+    spec = cfg.abm.grid_spec()
+    if spec is None:
+        return {}
+    pos = np.asarray(state["pos"])
+    cell = (np.floor(pos[:, 0] / spec.cell).astype(int)
+            % spec.ncell) * spec.ncell + \
+        (np.floor(pos[:, 1] / spec.cell).astype(int) % spec.ncell)
+    occ = np.bincount(cell, minlength=spec.ncell ** 2)
+    mean = cfg.abm.n_se / spec.ncell ** 2
+    return {"peak_cell_over_uniform": round(float(occ.max() / mean), 2),
+            "grid_capacity": spec.capacity}
+
+
+def main(scale: str = "quick"):
+    s = SCALES[scale]
+    envs = {kind: cm.make_env(kind, N_LP) for kind in ENVS}
+    rows = []
+    for scen in SCENARIOS:
+        row = {"scenario": scen}
+        counters = {}
+        for gaia in (True, False):
+            cfg = scenario_cfg(scale, scen, gaia)
+            t0 = time.time()
+            st, _, c = run(jax.random.key(0), cfg)
+            c["wall_s"] = round(time.time() - t0, 1)
+            counters[gaia] = c
+            tag = "on" if gaia else "off"
+            row[f"lcr_{tag}"] = round(c["mean_lcr"], 4)
+            row[f"grid_overflow_{tag}"] = c["grid_overflow"]
+            if gaia:
+                row["migrations"] = c["migrations"]
+                row.update(density_stats(st, cfg))
+        row["tec"] = {}
+        for kind, env in envs.items():
+            tec = {}
+            for gaia in (True, False):
+                tec["on" if gaia else "off"] = cm.wct_env(
+                    counters[gaia], cm.DISTRIBUTED, env, s["timesteps"],
+                    interaction_bytes=INTERACTION_BYTES,
+                    migration_bytes=MIGRATION_BYTES)["TEC"]
+            row["tec"][kind] = {
+                "on": round(tec["on"], 3), "off": round(tec["off"], 3),
+                "gain": round((tec["off"] - tec["on"]) / tec["off"], 4),
+            }
+        rows.append(row)
+        g = row["tec"][GATE_ENV]["gain"]
+        print(f"[exp6] {scen:8s} lcr {row['lcr_off']:.3f} -> "
+              f"{row['lcr_on']:.3f}  peak-density "
+              f"{row.get('peak_cell_over_uniform', '-')}x  "
+              f"TEC({GATE_ENV}) gain {g:+.1%}")
+
+    wins = [r["scenario"] for r in rows
+            if r["scenario"] in NEW_SCENARIOS
+            and r["tec"][GATE_ENV]["gain"] > 0]
+    result = {
+        "experiment": "exp6_scenarios",
+        "config": dict(SCALES[scale], n_lp=N_LP, scale=scale,
+                       interaction_bytes=INTERACTION_BYTES,
+                       migration_bytes=MIGRATION_BYTES,
+                       gate_env=GATE_ENV),
+        "results": rows,
+        "gate": {
+            "gaia_wins_on": wins,
+            "n_new_scenarios_gaia_wins": len(wins),
+            # machine-independent gains tracked by benchmarks/compare.py
+            "tec_gain_by_scenario": {
+                r["scenario"]: r["tec"][GATE_ENV]["gain"] for r in rows},
+        },
+    }
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+
+    for r in rows:
+        assert r["grid_overflow_on"] == 0.0 and r["grid_overflow_off"] == 0.0, \
+            f"grid overflow on {r['scenario']}: clustered capacity too tight"
+    assert len(wins) >= 2, \
+        f"GAIA won TEC({GATE_ENV}) only on {wins}; need >= 2 of " \
+        f"{NEW_SCENARIOS}"
+    print(f"[exp6] OK (GAIA wins on {wins}) -> {OUT}")
+    return result
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "quick")

@@ -21,8 +21,9 @@ def main(scale: str = "quick"):
     cfg = engine_cfg(scale, speed=5.0, mf=0.0)  # mf set per variant
     ts = cfg.timesteps
     params = SETUPS["distributed"]
-    price = lambda c: wct(c, params, cfg.abm.n_lp, ts,
-                          interaction_bytes=1024, migration_bytes=32)["TEC"]
+    def price(c):
+        return wct(c, params, cfg.abm.n_lp, ts,
+                   interaction_bytes=1024, migration_bytes=32)["TEC"]
     key = jax.random.key(0)
 
     # (a) offline sweep (the paper's method)

@@ -188,7 +188,8 @@ class ArchConfig:
             return p
         if self.family == "ssm" and self.rwkv is not None:
             # rwkv6 time-mix: r,k,v,g,o projections + decay loras
-            return 5 * d * d + d * self.rwkv.decay_lora * 2 + 5 * d * self.rwkv.mix_lora * 2
+            return (5 * d * d + d * self.rwkv.decay_lora * 2
+                    + 5 * d * self.rwkv.mix_lora * 2)
         if self.ssm is not None:
             di = self.ssm.expand * d
             return d * (2 * di + 2 * self.n_heads * self.ssm.d_state) + di * d
@@ -204,7 +205,8 @@ class ArchConfig:
             return self._attn_params() + 2 * d * self.d_ff + d * self.d_ff
         if self.moe is not None:
             m = self.moe
-            ff = 3 * d * m.d_expert * m.num_experts + 3 * d * m.d_shared * m.num_shared_experts
+            ff = (3 * d * m.d_expert * m.num_experts
+                  + 3 * d * m.d_shared * m.num_shared_experts)
             ff += d * m.num_experts
             return self._attn_params() + ff
         return self._attn_params() + 3 * d * self.d_ff

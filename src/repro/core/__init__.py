@@ -2,20 +2,25 @@
 
 Paper -> module map (see README.md for the full table):
 
-- abm: the evaluation model, §5.1 (RWP mobility + proximity interactions,
-  with selectable proximity backends)
+- abm: the evaluation model, §5.1 (pluggable mobility scenarios: RWP /
+  hotspot / group / flock + proximity interactions, with selectable
+  proximity backends)
 - neighbors: spatial-grid (cell-list) neighbor search — the O(N*k)
   backend behind the §5.1 proximity hot spot
 - heuristics: self-clustering heuristics #1/#2/#3, §4.3
 - balance: symmetric/asymmetric load balancing, §4.4
 - engine: the timestepped adaptive-partitioning engine, §4
-- costmodel: the paper's TEC/MigC cost analysis, §3 Eqs. 1-6
+- costmodel: the paper's TEC/MigC cost analysis, §3 Eqs. 1-6, plus the
+  heterogeneous ExecutionEnvironment pricing layer (per-LP speeds +
+  pairwise shm/lan/wan link classes)
 - selftune: intra-run heuristic re-parameterization, §5.5
 - gaia_moe: the technique adapted to MoE expert placement (beyond-paper)
 """
-from repro.core.abm import ABMConfig, PROXIMITY_BACKENDS  # noqa: F401
+from repro.core.abm import (ABMConfig, MOBILITY_MODELS,  # noqa: F401
+                            PROXIMITY_BACKENDS)
 from repro.core.costmodel import (DISTRIBUTED, PARALLEL, SETUPS,  # noqa: F401
-                                  CostParams, wct)
+                                  CostParams, ExecutionEnvironment,
+                                  make_env, wct, wct_env)
 from repro.core.engine import EngineConfig, run  # noqa: F401
 from repro.core.heuristics import HeuristicConfig  # noqa: F401
 from repro.core.neighbors import (GridSpec, build_grid,  # noqa: F401

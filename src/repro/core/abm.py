@@ -1,7 +1,30 @@
 """The paper's evaluation model (§5.1): an agent-based model on a toroidal
-2-D space. Agents move by Random Waypoint (min speed = max speed, sleep 0,
-as in Experiment 1) and interact by proximity: each sender's interaction
+2-D space. Agents interact by proximity: each sender's interaction
 reaches every agent within the threshold range.
+
+Mobility is pluggable (`ABMConfig.mobility` — the paper's claim is that
+self-clustering pays off across "various configurations of the
+simulation model", so the workloads must go beyond uniform RWP):
+
+  "rwp"      Random Waypoint (min speed = max speed, sleep 0, Exp. 1).
+             Near-uniform stationary density — the friendliest case.
+  "hotspot"  K moving attractors (themselves doing RWP); SEs are pulled
+             toward their attractor with per-step noise. Sustained
+             non-uniform density: K dense blobs wandering the torus.
+  "group"    RPGM-style group mobility: K leader points do RWP, each SE
+             chases (leader + its fixed member offset). Groups migrate
+             coherently across the space.
+  "flock"    flocking-lite: each SE steers by alignment + cohesion
+             toward the centroid/mean-heading of its 3x3 cell-list
+             neighborhood (reusing the proximity grid geometry), plus
+             noise. Clusters *emerge* instead of being imposed.
+
+Every model is a pure function of (key, state) in global-SE-id order, so
+the sharded engine reproduces it bit-exactly wherever an SE is hosted
+(see parallel/lp_shard.py). Per-SE mobility state lives in two fields
+that travel with the SE: `waypoint` (rwp target) and `mob` (member
+offset for "group", unit heading for "flock"); global mobility state
+(attractor/leader rows) lives in `mob_g`, replicated everywhere.
 
 Vectorized over all SEs. The proximity/LP-histogram hot spot — the O(N^2)
 pairwise matching the paper names as the model's dominant cost — has four
@@ -16,6 +39,10 @@ interchangeable backends selected by `ABMConfig.proximity_backend`:
 All four return bit-identical counts (tests/test_neighbors.py); "grid"
 and "pallas_grid" fall back to the dense math when the world is too
 small to tessellate (area / interaction_range < 3 cells per side).
+Non-uniform mobility breaks the grid's uniform-density auto-capacity:
+`grid_spec()` switches to a clustered-density bound for the non-RWP
+models (see neighbors.clustered_capacity), and the engine surfaces the
+per-step `grid_overflow` metric so runs can assert exactness.
 """
 from __future__ import annotations
 
@@ -28,6 +55,11 @@ import jax.numpy as jnp
 from repro.core import neighbors
 
 PROXIMITY_BACKENDS = ("dense", "grid", "pallas", "pallas_grid")
+MOBILITY_MODELS = ("rwp", "hotspot", "group", "flock")
+
+#: attractor ("hotspot") / leader ("group") speed relative to SE speed —
+#: slower than the SEs chasing them, so clusters stay coherent in motion
+_GLOBAL_SPEED_FACTOR = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,12 +73,21 @@ class ABMConfig:
     proximity_backend: str = "grid"  # see PROXIMITY_BACKENDS
     grid_capacity: int = 0  # per-cell member cap; 0 = auto from density
     use_pallas: bool = False  # DEPRECATED: use proximity_backend="pallas"
+    # --- mobility scenario (see module docstring) -----------------------
+    mobility: str = "rwp"  # see MOBILITY_MODELS
+    n_groups: int = 8  # K attractors ("hotspot") / groups ("group")
+    group_radius: float = 250.0  # cluster spatial scale (spaceunits)
 
     def __post_init__(self):
         if self.proximity_backend not in PROXIMITY_BACKENDS:
             raise ValueError(
                 f"proximity_backend={self.proximity_backend!r} not in "
                 f"{PROXIMITY_BACKENDS}")
+        if self.mobility not in MOBILITY_MODELS:
+            raise ValueError(
+                f"mobility={self.mobility!r} not in {MOBILITY_MODELS}")
+        if self.mobility in ("hotspot", "group") and self.n_groups < 1:
+            raise ValueError("n_groups must be >= 1 for clustered mobility")
         if self.use_pallas and self.proximity_backend != "grid":
             # the shim must never silently override an explicit choice
             raise ValueError(
@@ -66,26 +107,91 @@ class ABMConfig:
 
     def grid_spec(self):
         """Cell-list geometry for this config, or None if the world is
-        too small to tessellate (grid backends then use dense math)."""
-        return neighbors.make_grid_spec(self.n_se, self.area,
+        too small to tessellate (grid backends then use dense math).
+
+        An explicit `grid_capacity` always wins. Otherwise the auto
+        capacity depends on the mobility model: RWP keeps the uniform
+        Poisson bound; the clustered models size for K blobs of n/K SEs
+        at the model's spatial scale (attractor dwell radius / member
+        offset radius / a cell for emergent flocks) — the uniform bound
+        would overflow and silently undercount there."""
+        spec = neighbors.make_grid_spec(self.n_se, self.area,
                                         self.interaction_range,
                                         capacity=self.grid_capacity)
+        if spec is None or self.grid_capacity > 0 or self.mobility == "rwp":
+            return spec
+        radius = {"hotspot": 0.5 * self.group_radius,
+                  "group": self.group_radius,
+                  "flock": spec.cell}[self.mobility]
+        cap = neighbors.clustered_capacity(self.n_se, spec.ncell, spec.cell,
+                                           self.n_groups, radius)
+        return dataclasses.replace(spec, capacity=max(spec.capacity, cap))
+
+
+def mobility_globals(cfg: ABMConfig) -> int:
+    """Rows of the replicated global mobility state `mob_g` (attractors
+    for "hotspot", leaders for "group"; 1 inert row otherwise so shapes
+    stay static)."""
+    return cfg.n_groups if cfg.mobility in ("hotspot", "group") else 1
 
 
 def init_abm(key, cfg: ABMConfig):
+    """Initial model state, in global-SE-id order.
+
+    Besides pos/waypoint/lp this now carries the mobility state: `mob`
+    (N, 2) per-SE (member offsets / headings; zeros when unused) and
+    `mob_g` (G, 4) global rows [pos | waypoint] for attractors/leaders.
+    The k1/k2/k3 consumption is unchanged from the RWP-only version, so
+    existing RWP seeds reproduce bit-identically; clustered models remap
+    the same k1 uniforms into their blob offsets (initial density is
+    non-uniform from step 0, which is the point of those scenarios).
+    """
+    n, G = cfg.n_se, mobility_globals(cfg)
     k1, k2, k3 = jax.random.split(key, 3)
-    pos = jax.random.uniform(k1, (cfg.n_se, 2), maxval=cfg.area)
-    wp = jax.random.uniform(k2, (cfg.n_se, 2), maxval=cfg.area)
+    pos = jax.random.uniform(k1, (n, 2), maxval=cfg.area)
+    wp = jax.random.uniform(k2, (n, 2), maxval=cfg.area)
     # round-robin random assignment: equal SEs per LP (paper: random but
     # equal-sized)
     lp = jax.random.permutation(k3, jnp.arange(cfg.n_se) % cfg.n_lp)
-    return {"pos": pos, "waypoint": wp, "lp": lp.astype(jnp.int32)}
+    mob = jnp.zeros((n, 2), jnp.float32)
+    mob_g = jnp.zeros((G, 4), jnp.float32)
+    if cfg.mobility in ("hotspot", "group"):
+        kg = jax.random.fold_in(key, 0x6b0a)
+        mob_g = jax.random.uniform(kg, (G, 4), maxval=cfg.area)
+        anchor = mob_g[jnp.arange(n) % G, :2]
+        # remap the uniform k1 draw into a per-blob square of side
+        # 2 * group_radius around each SE's anchor
+        jitter = (pos / cfg.area - 0.5) * (2.0 * cfg.group_radius)
+        if cfg.mobility == "group":
+            ko = jax.random.fold_in(key, 0x6b0b)
+            mob = (jax.random.uniform(ko, (n, 2)) - 0.5) * \
+                (2.0 * cfg.group_radius)
+            anchor = anchor + mob
+            jitter = jitter * 0.1  # members start tight on their slot
+        pos = (anchor + jitter) % cfg.area
+    elif cfg.mobility == "flock":
+        kh = jax.random.fold_in(key, 0x6b0c)
+        theta = jax.random.uniform(kh, (n,), maxval=2.0 * jnp.pi)
+        mob = jnp.stack([jnp.cos(theta), jnp.sin(theta)], axis=1)
+    return {"pos": pos, "waypoint": wp, "lp": lp.astype(jnp.int32),
+            "mob": mob.astype(jnp.float32), "mob_g": mob_g}
 
 
 def toroidal_delta(a, b, area):
     """Shortest per-axis displacement on the torus."""
     d = jnp.abs(a - b)
     return jnp.minimum(d, area - d)
+
+
+def toroidal_signed_delta(frm, to, area):
+    """Signed shortest per-axis displacement frm -> to on the torus."""
+    return (to - frm + area / 2.0) % area - area / 2.0
+
+
+def _unit(v, eps=1e-9):
+    """Row-wise unit vector (zero rows stay zero)."""
+    norm = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    return v / jnp.maximum(norm, eps)
 
 
 def rwp_draws(key, n: int, cfg: ABMConfig):
@@ -98,19 +204,21 @@ def rwp_draws(key, n: int, cfg: ABMConfig):
     return jax.random.uniform(key, (n, 2), maxval=cfg.area)
 
 
-def rwp_apply(pos, waypoint, new_wp, cfg: ABMConfig):
+def rwp_apply(pos, waypoint, new_wp, cfg: ABMConfig, speed=None):
     """The deterministic half of a Random-Waypoint move: advance `speed`
     toward the waypoint (torus-aware); on arrival switch to the
-    pre-drawn fresh waypoint `new_wp` (sleep time 0)."""
+    pre-drawn fresh waypoint `new_wp` (sleep time 0). `speed` overrides
+    cfg.speed (attractor/leader rows move slower than their SEs)."""
+    speed = cfg.speed if speed is None else speed
     delta = waypoint - pos
     # shortest direction on the torus
     delta = jnp.where(delta > cfg.area / 2, delta - cfg.area, delta)
     delta = jnp.where(delta < -cfg.area / 2, delta + cfg.area, delta)
     dist = jnp.linalg.norm(delta, axis=-1, keepdims=True)
-    arrived = dist[:, 0] <= cfg.speed
+    arrived = dist[:, 0] <= speed
     step = jnp.where(dist > 0, delta / jnp.maximum(dist, 1e-9), 0.0)
     new_pos = jnp.where(arrived[:, None], waypoint,
-                        (pos + step * cfg.speed) % cfg.area)
+                        (pos + step * speed) % cfg.area)
     next_wp = jnp.where(arrived[:, None], new_wp, waypoint)
     return new_pos % cfg.area, next_wp
 
@@ -120,17 +228,113 @@ def rwp_step(key, pos, waypoint, cfg: ABMConfig):
     return rwp_apply(pos, waypoint, rwp_draws(key, pos.shape[0], cfg), cfg)
 
 
+def _globals_step(key, mob_g, cfg: ABMConfig):
+    """Advance attractor/leader rows by RWP at a fraction of SE speed.
+    Pure in (key, mob_g): every device computes the identical update."""
+    g = mob_g.shape[0]
+    draw = jax.random.uniform(key, (g, 2), maxval=cfg.area)
+    gpos, gwp = rwp_apply(mob_g[:, :2], mob_g[:, 2:], draw, cfg,
+                          speed=cfg.speed * _GLOBAL_SPEED_FACTOR)
+    return jnp.concatenate([gpos, gwp], axis=1)
+
+
+def _hotspot_step(k_glob, k_noise, pos, mob_g, cfg: ABMConfig):
+    """Pull toward the SE's attractor, saturating at `speed` beyond the
+    dwell radius; uniform noise keeps the blob from collapsing. The
+    stationary blob radius is ~0.4 * group_radius."""
+    n = pos.shape[0]
+    mob_g = _globals_step(k_glob, mob_g, cfg)
+    target = mob_g[jnp.arange(n) % mob_g.shape[0], :2]
+    delta = toroidal_signed_delta(pos, target, cfg.area)
+    dist = jnp.linalg.norm(delta, axis=-1, keepdims=True)
+    pull = _unit(delta) * cfg.speed * jnp.minimum(
+        1.0, dist / jnp.float32(cfg.group_radius))
+    noise = (jax.random.uniform(k_noise, (n, 2)) - 0.5) * cfg.speed
+    return (pos + pull + noise) % cfg.area, mob_g
+
+
+def _group_step(k_glob, k_noise, pos, mob, mob_g, cfg: ABMConfig):
+    """RPGM-lite: chase (leader + fixed member offset) at up to `speed`,
+    with small jitter. Groups migrate coherently behind their leader."""
+    n = pos.shape[0]
+    mob_g = _globals_step(k_glob, mob_g, cfg)
+    target = (mob_g[jnp.arange(n) % mob_g.shape[0], :2] + mob) % cfg.area
+    delta = toroidal_signed_delta(pos, target, cfg.area)
+    dist = jnp.linalg.norm(delta, axis=-1, keepdims=True)
+    step = _unit(delta) * jnp.minimum(dist, cfg.speed)
+    noise = (jax.random.uniform(k_noise, (n, 2)) - 0.5) * (0.5 * cfg.speed)
+    return (pos + step + noise) % cfg.area, mob_g
+
+
+def _flock_step(k_noise, pos, mob, cfg: ABMConfig):
+    """Flocking-lite over the cell-list grid: steer by inertia +
+    alignment with the 3x3-neighborhood mean heading + cohesion toward
+    its centroid + noise; move at constant `speed` along the heading.
+    Degenerate worlds (no grid) flock against the global mean."""
+    n = pos.shape[0]
+    spec = cfg.grid_spec()
+    if spec is not None:
+        (cdelta, hmean) = neighbors.cell_block_mean(pos, mob, spec, cfg.area)
+    else:  # un-tessellatable world: one global "cell" (non-toroidal mean)
+        csum = pos.sum(0) - pos
+        hsum = mob.sum(0) - mob
+        cnt = jnp.maximum(n - 1, 1)
+        cdelta = csum / cnt - pos
+        hmean = hsum / cnt
+    cohere = _unit(cdelta) * jnp.minimum(
+        1.0, jnp.linalg.norm(cdelta, axis=-1, keepdims=True)
+        / jnp.float32(cfg.interaction_range))
+    noise = (jax.random.uniform(k_noise, (n, 2)) - 0.5) * 2.0
+    heading = _unit(mob + 0.8 * _unit(hmean) + 0.6 * cohere + 0.4 * noise)
+    # a fully cancelled steer (zero vector) keeps the old heading
+    heading = jnp.where(jnp.linalg.norm(heading, axis=-1,
+                                        keepdims=True) > 0.5, heading, mob)
+    return (pos + heading * cfg.speed) % cfg.area, heading
+
+
+def mobility_step(key, pos, waypoint, mob, mob_g, cfg: ABMConfig):
+    """One mobility timestep for all N SEs, in global-SE-id order.
+
+    Returns (pos, waypoint, mob, mob_g). Pure in (key, state): the
+    sharded engine reconstructs id-order state, calls this very
+    function, and scatters rows back to its slots, so trajectories are
+    bit-identical to the single-device oracle by construction (see
+    parallel/lp_shard.py). Fields a model does not use pass through
+    untouched.
+    """
+    if cfg.mobility == "rwp":
+        pos, waypoint = rwp_apply(pos, waypoint,
+                                  rwp_draws(key, pos.shape[0], cfg), cfg)
+        return pos, waypoint, mob, mob_g
+    k_glob = jax.random.fold_in(key, 1)
+    k_noise = jax.random.fold_in(key, 2)
+    if cfg.mobility == "hotspot":
+        pos, mob_g = _hotspot_step(k_glob, k_noise, pos, mob_g, cfg)
+    elif cfg.mobility == "group":
+        pos, mob_g = _group_step(k_glob, k_noise, pos, mob, mob_g, cfg)
+    else:  # flock
+        pos, mob = _flock_step(k_noise, pos, mob, cfg)
+    return pos, waypoint, mob, mob_g
+
+
 def _dense_counts(pos, lp, sender_mask, cfg: ABMConfig):
     return neighbors.dense_lp_counts(pos, lp, sender_mask, cfg.n_lp,
                                      cfg.area, cfg.interaction_range)
 
 
-def interaction_counts(pos, lp, sender_mask, cfg: ABMConfig):
-    """Per-sender histogram of recipient LPs.
+def interaction_counts_overflow(pos, lp, sender_mask, cfg: ABMConfig):
+    """Per-sender histogram of recipient LPs, plus the grid's overflow
+    alarm.
 
-    Returns counts (N, n_lp) int32: counts[i, l] = number of SEs within
-    `interaction_range` of sender i currently allocated on LP l (self
-    excluded). Rows of non-senders are zero.
+    Returns (counts, overflow): counts (N, n_lp) int32 with
+    counts[i, l] = number of SEs within `interaction_range` of sender i
+    currently allocated on LP l (self excluded; non-sender rows zero),
+    and overflow () bool — True iff a grid cell exceeded its capacity
+    this call, which silently undercounts neighbors (the non-uniform
+    mobility models are exactly the workloads that can trip it; the
+    engine surfaces it as the per-step `grid_overflow` metric). The
+    default grid backend reads the flag off the grid build it performs
+    anyway; dense backends are always exact (False).
 
     Dispatches on `cfg.proximity_backend`; every backend is bit-identical
     (dense is the oracle — see tests/test_neighbors.py and DESIGN.md
@@ -140,17 +344,30 @@ def interaction_counts(pos, lp, sender_mask, cfg: ABMConfig):
     spec = cfg.grid_spec() if backend in ("grid", "pallas_grid") else None
     if backend in ("grid", "pallas_grid") and spec is None:
         backend = "dense"  # world too small to tessellate: exact fallback
+    n = pos.shape[0]
     if backend == "grid":
-        return neighbors.grid_lp_counts(pos, lp, sender_mask, cfg.n_lp,
-                                        cfg.area, cfg.interaction_range,
-                                        spec)
+        grid = neighbors.build_grid(pos, spec)
+        counts = neighbors.rows_grid_counts(
+            pos, lp, cfg.n_lp, cfg.area, cfg.interaction_range, spec, grid,
+            pos, jnp.arange(n, dtype=jnp.int32), sender_mask)
+        return counts, grid["overflow"]
     if backend == "pallas":
         from repro.kernels.proximity.ops import proximity_lp_counts
         return proximity_lp_counts(pos, lp, sender_mask, cfg.n_lp,
-                                   cfg.area, cfg.interaction_range)
+                                   cfg.area, cfg.interaction_range), \
+            jnp.bool_(False)
     if backend == "pallas_grid":
         from repro.kernels.proximity.ops import proximity_lp_counts_grid
+        # the kernel builds its own table; one O(N) bincount yields the
+        # same occupancy flag the grid build would have reported
+        occ = jnp.zeros((spec.ncell * spec.ncell,), jnp.int32).at[
+            neighbors.cell_ids(pos, spec)].add(1)
         return proximity_lp_counts_grid(pos, lp, sender_mask, cfg.n_lp,
                                         cfg.area, cfg.interaction_range,
-                                        spec)
-    return _dense_counts(pos, lp, sender_mask, cfg)
+                                        spec), occ.max() > spec.capacity
+    return _dense_counts(pos, lp, sender_mask, cfg), jnp.bool_(False)
+
+
+def interaction_counts(pos, lp, sender_mask, cfg: ABMConfig):
+    """`interaction_counts_overflow` without the alarm (same contract)."""
+    return interaction_counts_overflow(pos, lp, sender_mask, cfg)[0]

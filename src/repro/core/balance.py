@@ -18,9 +18,7 @@ SEs first.
 """
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 

@@ -14,13 +14,21 @@ Two calibrated parameter sets model the paper's testbeds: PARALLEL
 Table 3). Calibration targets the OFF-row wall-clock structure of the
 paper's tables (latency-dominated remote messages on the LAN; memory-
 bandwidth-bound local delivery in shared memory).
+
+Beyond the scalar model, `ExecutionEnvironment` + `wct_env` price a
+*heterogeneous* cluster: per-LP speed factors and a pairwise link-class
+matrix (shared-memory / LAN / WAN, the §3 distinctions made
+load-bearing), fed by the engine's per-LP-pair flow counters
+(`lp_flows` / `mig_flows`). The scalar `wct` stays as the calibrated
+homogeneous fast path; `wct_env` reduces to it on a homogeneous
+environment with balanced flows (tested).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
-import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,4 +125,193 @@ def wct(counters: Dict[str, float], p: CostParams, n_lp: int,
         "MigCPU": mig_cpu, "MigComm": mig_comm, "Heu": heu,
         "MigC": mig_cpu + mig_comm + heu,
         "TEC": total,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous execution environments (per-LP speeds + pairwise links)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkClass:
+    """One §3 interconnect class: per-message marshaling cost plus
+    per-payload-byte bandwidth cost (the per-message *latency* rides in
+    the per-timestep barrier — see the calibration note above)."""
+    name: str
+    t_msg: float
+    t_byte: float
+
+
+#: "shm"/"lan" reuse the PARALLEL/DISTRIBUTED remote-path calibration;
+#: "wan" models an inter-site path: heavier marshaling (TLS/tunneling)
+#: and ~1/3 of the GbE effective bandwidth. WAN *latency* belongs in the
+#: barrier — see ExecutionEnvironment.t_sync and the two_site preset.
+LINK_CLASSES: Dict[str, LinkClass] = {
+    "shm": LinkClass("shm", t_msg=5.0e-7, t_byte=1.0e-9),
+    "lan": LinkClass("lan", t_msg=3.0e-6, t_byte=4.5e-8),
+    "wan": LinkClass("wan", t_msg=6.0e-6, t_byte=1.5e-7),
+}
+
+#: per-timestep barrier cost of a WAN-crossing synchronization (RTT-
+#: dominated; ~order 10 ms round trips per timestepped barrier)
+WAN_SYNC_S = 2.0e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionEnvironment:
+    """A heterogeneous cluster: per-LP speed factors and a pairwise
+    link-class matrix. Frozen + tuple-typed so it is hashable and can
+    ride inside EngineConfig (the engine uses `speed` as the default
+    asymmetric-balance capacity profile; `wct_env` prices flows with
+    the link matrix)."""
+    name: str
+    speed: Tuple[float, ...]  # relative PEU speed per LP (1.0 = calibrated)
+    link: Tuple[Tuple[str, ...], ...]  # link-class name per (src, dst) pair
+    t_sync: Optional[float] = None  # per-timestep barrier override
+
+    def __post_init__(self):
+        L = len(self.speed)
+        if any(s <= 0 for s in self.speed):
+            raise ValueError(f"speed factors must be > 0: {self.speed}")
+        if len(self.link) != L or any(len(row) != L for row in self.link):
+            raise ValueError(f"link matrix must be {L}x{L}")
+        for s in range(L):
+            for d in range(L):
+                if s != d and self.link[s][d] not in LINK_CLASSES:
+                    raise ValueError(
+                        f"unknown link class {self.link[s][d]!r} at "
+                        f"({s}, {d}); known: {sorted(LINK_CLASSES)}")
+
+    @property
+    def n_lp(self) -> int:
+        return len(self.speed)
+
+    def capacity_shares(self) -> Tuple[float, ...]:
+        """speed factors normalized to sum 1 — the asymmetric-balance
+        capacity profile this environment implies (paper §4.4: capacity
+        = relative PEU speed)."""
+        tot = sum(self.speed)
+        return tuple(s / tot for s in self.speed)
+
+
+def homogeneous_env(n_lp: int, link: str = "shm",
+                    name: Optional[str] = None) -> ExecutionEnvironment:
+    """All LPs equal, one link class everywhere (diag is intra-LP)."""
+    row = (link,) * n_lp
+    return ExecutionEnvironment(name=name or f"homog-{link}",
+                                speed=(1.0,) * n_lp,
+                                link=(row,) * n_lp)
+
+
+def two_site_env(n_lp: int, intra: str = "lan", cross: str = "wan",
+                 split: Optional[int] = None,
+                 speed: Optional[Tuple[float, ...]] = None,
+                 name: Optional[str] = None) -> ExecutionEnvironment:
+    """LPs [0, split) on site A, the rest on site B: `intra` links
+    within a site, `cross` links between sites, WAN barrier cost when
+    the cross link is WAN."""
+    split = n_lp // 2 if split is None else split
+    site = [0 if l < split else 1 for l in range(n_lp)]
+    link = tuple(tuple(intra if site[s] == site[d] else cross
+                       for d in range(n_lp)) for s in range(n_lp))
+    return ExecutionEnvironment(
+        name=name or f"two-site-{intra}-{cross}",
+        speed=speed or (1.0,) * n_lp, link=link,
+        t_sync=WAN_SYNC_S if cross == "wan" else None)
+
+
+def hetero_speed_env(n_lp: int, link: str = "lan",
+                     name: Optional[str] = None) -> ExecutionEnvironment:
+    """One link class, but PEU speeds spanning 4x (fast half, slow
+    tail) — the pure compute-heterogeneity case for the asymmetric
+    balancer."""
+    pattern = (2.0, 1.0, 1.0, 0.5)
+    speed = tuple(pattern[l % len(pattern)] for l in range(n_lp))
+    row = (link,) * n_lp
+    return ExecutionEnvironment(name=name or f"hetero-{link}", speed=speed,
+                                link=(row,) * n_lp)
+
+
+ENV_PRESETS = {
+    "shm": homogeneous_env,
+    "lan": lambda n_lp: homogeneous_env(n_lp, link="lan", name="lan"),
+    "wan2": lambda n_lp: two_site_env(n_lp, name="wan2"),
+    "hetero": hetero_speed_env,
+}
+
+
+def make_env(kind: str, n_lp: int) -> ExecutionEnvironment:
+    """Build a preset environment ("shm" | "lan" | "wan2" | "hetero")."""
+    if kind not in ENV_PRESETS:
+        raise ValueError(f"env kind {kind!r} not in {sorted(ENV_PRESETS)}")
+    return ENV_PRESETS[kind](n_lp)
+
+
+def wct_env(counters: Dict, p: CostParams, env: ExecutionEnvironment,
+            timesteps: int, interaction_bytes: int = 1,
+            migration_bytes: int = 32) -> Dict[str, float]:
+    """Heterogeneous Eq. 5/6: price engine counters on `env`.
+
+    Requires the engine's per-pair counters: `lp_flows` (L, L) delivered
+    interactions src->dst and (optionally) `mig_flows` (L, L) migrations
+    src->dst; the scalar keys are as in `wct`. Differences from the
+    scalar model:
+
+      * LCC/RCC price each (s, d) flow with that pair's link class;
+      * MCC is the per-LP bottleneck: each LP's delivered events cost
+        t_event_cpu / speed[l], the serial fraction of the total work is
+        unparallelizable, the rest finishes when the slowest LP does
+        (reduces to Amdahl on balanced, equal-speed LPs);
+      * MigComm prices each migration on its pair's link (falling back
+        to the most expensive link present if only the scalar
+        `migrations` counter is available);
+      * SC uses env.t_sync when set (WAN barriers are RTT-dominated).
+    """
+    L = env.n_lp
+    flows = np.asarray(counters["lp_flows"], dtype=np.float64)
+    if flows.shape != (L, L):
+        raise ValueError(f"lp_flows shape {flows.shape} != ({L}, {L})")
+    links = [[None if s == d else LINK_CLASSES[env.link[s][d]]
+              for d in range(L)] for s in range(L)]
+
+    lcc = float(np.trace(flows)) * (p.t_local_msg
+                                    + interaction_bytes * p.t_local_byte)
+    rcc = sum(flows[s, d] * (links[s][d].t_msg
+                             + interaction_bytes * links[s][d].t_byte)
+              for s in range(L) for d in range(L) if s != d)
+
+    per_lp = flows.sum(axis=0) * p.t_event_cpu / np.asarray(env.speed)
+    work = float(per_lp.sum())
+    mcc = p.serial_frac * work + (1.0 - p.serial_frac) * float(per_lp.max())
+
+    sc = timesteps * (p.t_sync if env.t_sync is None else env.t_sync)
+    mmc = timesteps * p.t_mmc
+
+    if "mig_flows" in counters:
+        mf = np.asarray(counters["mig_flows"], dtype=np.float64)
+        migs = float(mf.sum())
+        mig_comm = sum(
+            mf[s, d] * (links[s][d].t_msg + migration_bytes
+                        * links[s][d].t_byte)
+            for s in range(L) for d in range(L) if s != d)
+    else:
+        migs = float(counters["migrations"])
+        remote_links = [links[s][d] for s in range(L) for d in range(L)
+                        if s != d]
+        if migs and remote_links:
+            worst = max(remote_links, key=lambda c: c.t_msg)
+            mig_comm = migs * (worst.t_msg + migration_bytes * worst.t_byte)
+        else:  # no migrations, or a 1-LP env with nowhere to migrate
+            mig_comm = 0.0
+    mig_cpu = migs * p.t_mig_cpu
+    heu = float(counters["heu_evals"]) * p.t_heu
+
+    total = mcc + lcc + rcc + sc + mmc + mig_cpu + mig_comm + heu
+    return {
+        "MCC": mcc, "LCC": lcc, "RCC": float(rcc), "SC": sc, "MMC": mmc,
+        "MigCPU": mig_cpu, "MigComm": float(mig_comm), "Heu": heu,
+        "MigC": mig_cpu + float(mig_comm) + heu,
+        "TEC": total,
+        "per_lp_compute_s": per_lp.tolist(),
     }

@@ -31,9 +31,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import balance as bal
-from repro.core.abm import ABMConfig, init_abm, interaction_counts, rwp_step
+from repro.core.abm import (ABMConfig, init_abm,
+                            interaction_counts_overflow, mobility_step)
+from repro.core.costmodel import ExecutionEnvironment
 from repro.core.heuristics import HeuristicConfig
 from repro.core import heuristics as heu
 
@@ -50,6 +53,11 @@ class EngineConfig:
     migration_delay: int = 5  # 2 (LB negotiation) + 3 (protocol, Fig. 4)
     timesteps: int = 1200
     capacity: Optional[tuple] = None  # asymmetric LP capacity shares
+    # execution environment (costmodel.ExecutionEnvironment): prices the
+    # run's flows offline (wct_env) and, when `capacity` is unset,
+    # supplies the asymmetric balancer's capacity profile (per-LP
+    # relative speed, paper §4.4)
+    env: Optional[ExecutionEnvironment] = None
     # --- sharded execution (parallel/lp_shard.py) -----------------------
     # "none": every LP inside one device's scan (the oracle).
     # "lp_device": LPs mapped onto a device mesh; each device owns its
@@ -64,6 +72,22 @@ class EngineConfig:
         if self.sharding not in SHARDINGS:
             raise ValueError(
                 f"sharding={self.sharding!r} not in {SHARDINGS}")
+        if self.env is not None and self.env.n_lp != self.abm.n_lp:
+            raise ValueError(
+                f"env {self.env.name!r} has {self.env.n_lp} LPs but "
+                f"abm.n_lp={self.abm.n_lp}")
+        if self.balance == "asymmetric" and self.effective_capacity() is None:
+            raise ValueError("asymmetric balance needs `capacity` or an "
+                             "`env` to derive it from")
+
+    def effective_capacity(self) -> Optional[tuple]:
+        """Asymmetric capacity shares: explicit `capacity` wins, else the
+        environment's relative LP speeds (normalized), else None."""
+        if self.capacity is not None:
+            return tuple(self.capacity)
+        if self.env is not None:
+            return self.env.capacity_shares()
+        return None
 
 
 def init_engine(key, cfg: EngineConfig):
@@ -97,19 +121,27 @@ def step(state, cfg: EngineConfig, mf=None):
     pending_eta = jnp.where(arrive, -1, state["pending_eta"])
 
     # 2. model evolution (identical regardless of partitioning)
-    pos, wp = rwp_step(k_move, state["pos"], state["waypoint"], cfg.abm)
+    pos, wp, mob, mob_g = mobility_step(
+        k_move, state["pos"], state["waypoint"], state["mob"],
+        state["mob_g"], cfg.abm)
     sender = jax.random.bernoulli(k_send, cfg.abm.p_interact, (n,))
-    counts = interaction_counts(pos, lp, sender, cfg.abm)  # (N, L)
+    counts, grid_ovf = interaction_counts_overflow(
+        pos, lp, sender, cfg.abm)  # (N, L), () bool
 
-    # 3. communication accounting
-    local = jnp.take_along_axis(counts, lp[:, None], 1)[:, 0].sum()
-    total = counts.sum()
+    # 3. communication accounting: the per-pair flow matrix (src LP ->
+    # dst LP; integer scatter-add, so sharded psum reproduces it
+    # exactly) is the single source of truth — the scalar LCR terms are
+    # its trace and total
+    flows = jnp.zeros((L, L), jnp.int32).at[lp].add(counts)
+    local = jnp.trace(flows)
+    total = flows.sum()
     remote = total - local
 
     # 4/5. self-clustering
     hstate = {k: state[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
     migs = jnp.int32(0)
     n_evals = jnp.int32(0)
+    mig_flows = jnp.zeros((L, L), jnp.int32)
     if cfg.gaia_on:
         hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
         cand, dest, alpha, hstate, n_evals = heu.evaluate(
@@ -117,7 +149,7 @@ def step(state, cfg: EngineConfig, mf=None):
         cand = cand & (pending_dst < 0)  # not already in flight
         cmat = bal.candidate_matrix(cand, lp, dest, L)
         if cfg.balance == "asymmetric":
-            cap = jnp.asarray(cfg.capacity, jnp.float32)
+            cap = jnp.asarray(cfg.effective_capacity(), jnp.float32)
             current = jnp.bincount(lp, length=L)
             grants = bal.asymmetric_grants(cmat, current, cap)
         else:
@@ -128,8 +160,10 @@ def step(state, cfg: EngineConfig, mf=None):
         hstate = dict(hstate, last_mig=jnp.where(admit, t,
                                                  hstate["last_mig"]))
         migs = admit.sum()
+        mig_flows = mig_flows.at[lp, dest].add(admit.astype(jnp.int32))
 
     new_state = dict(state, key=key, t=t + 1, pos=pos, waypoint=wp, lp=lp,
+                     mob=mob, mob_g=mob_g,
                      pending_dst=pending_dst, pending_eta=pending_eta,
                      **hstate)
     metrics = {
@@ -139,6 +173,11 @@ def step(state, cfg: EngineConfig, mf=None):
         "heu_evals": n_evals.astype(jnp.float32),
         "lcr": local.astype(jnp.float32)
                / jnp.maximum(total.astype(jnp.float32), 1.0),
+        "lp_flows": flows,
+        "mig_flows": mig_flows,
+        # exactness alarm: a grid cell over capacity silently undercounts
+        # neighbors — the clustered mobility models are what can trip it
+        "grid_overflow": grid_ovf.astype(jnp.float32),
     }
     return new_state, metrics
 
@@ -146,10 +185,18 @@ def step(state, cfg: EngineConfig, mf=None):
 def series_counters(series) -> dict:
     """Aggregate a per-step metrics series into run counters — the one
     place the counter/series key contract lives (the sharded runner
-    layers its extra metrics on top)."""
+    layers its extra metrics on top). Matrix-valued series (the per-pair
+    flow counters) aggregate to nested lists in int64 so long runs
+    cannot wrap int32."""
     counters = {k: float(series[k].sum()) for k in
                 ("local_msgs", "remote_msgs", "migrations", "heu_evals")}
     counters["mean_lcr"] = float(series["lcr"].mean())
+    if "grid_overflow" in series:
+        counters["grid_overflow"] = float(series["grid_overflow"].sum())
+    for k in ("lp_flows", "mig_flows"):
+        if k in series:
+            counters[k] = np.asarray(series[k]).sum(
+                axis=0, dtype=np.int64).tolist()
     return counters
 
 

@@ -82,6 +82,26 @@ def default_capacity(n: int, ncell: int) -> int:
     return int(math.ceil(mean + 8.0 * math.sqrt(mean) + 8.0))
 
 
+def clustered_capacity(n: int, ncell: int, cell: float, n_clusters: int,
+                       radius: float) -> int:
+    """Static per-cell capacity bound for K-blob clustered placement.
+
+    The uniform bound (`default_capacity`) assumes RWP's near-uniform
+    stationary density; the hotspot/group/flock mobility models
+    concentrate ~n/K SEs into blobs of the given radius, so the peak
+    cell occupancy is the blob population times the fraction of the blob
+    one cell covers. Factor 3 absorbs two blobs overlapping one cell
+    plus center-peaking (blob density is not uniform either), and the
+    uniform-background terms ride on top. Runs surface the
+    `grid_overflow` metric, so an underestimate is loud, not silent."""
+    per_blob = -(-n // max(n_clusters, 1))
+    blob_area = math.pi * max(radius, cell / 2.0) ** 2
+    peak = 3.0 * per_blob * min(1.0, cell * cell / blob_area)
+    mean = n / float(ncell * ncell)
+    return min(n, int(math.ceil(peak + mean + 8.0 * math.sqrt(max(mean, 1.0))
+                                + 16.0)))
+
+
 @dataclasses.dataclass(frozen=True)
 class GridSpec:
     """Static geometry of the cell grid (hashable: safe as a jit static)."""
@@ -284,6 +304,65 @@ def halo_mask(cell_ref, row_cell, row_valid, spec: GridSpec):
     for di, dj in _NEIGH_OFFSETS:
         halo2d = halo2d | jnp.roll(occ2d, (di, dj), axis=(0, 1))
     return halo2d.reshape(-1)[cell_ref]
+
+
+def cell_block_mean(pos, vec, spec: GridSpec, area: float):
+    """Per-SE mean of positions and of `vec` over the 3x3 cell block.
+
+    The flocking-lite sensing kernel: returns (cdelta, vmean) where
+    cdelta (N, 2) is the displacement from each SE to the centroid of
+    the *other* SEs in its 3x3 neighborhood (zero when alone) and vmean
+    (N, 2) is their mean `vec` (e.g. heading). O(N + ncell^2): one
+    scatter-add binning pass plus nine rolled-grid accumulations — no
+    member table, so grid capacity is irrelevant here.
+
+    Torus correctness: position sums from cells rolled across the seam
+    are shifted by ±area on the wrapped axis, so every block is summed
+    in its center cell's locally-contiguous frame and `centroid - pos`
+    is the true shortest displacement (needs ncell >= 3, which GridSpec
+    guarantees). Determinism: the scatter-add consumes the same id-
+    ordered arrays in the oracle and in the sharded engine's
+    reconstructed state, so both reduce in the same order — the sharded
+    bit-identity tests enforce this.
+    """
+    n, nc = pos.shape[0], spec.ncell
+    cell = cell_ids(pos, spec)
+
+    def bin2d(vals):
+        return jnp.zeros((nc * nc,), jnp.float32).at[cell].add(vals) \
+            .reshape(nc, nc)
+
+    cnt = bin2d(jnp.ones((n,), jnp.float32))
+    sx, sy = bin2d(pos[:, 0]), bin2d(pos[:, 1])
+    vx, vy = bin2d(vec[:, 0]), bin2d(vec[:, 1])
+
+    acc = [jnp.zeros((nc, nc), jnp.float32) for _ in range(5)]
+    for di, dj in _NEIGH_OFFSETS:
+        rc = jnp.roll(cnt, (di, dj), (0, 1))
+        rsx = jnp.roll(sx, (di, dj), (0, 1))
+        rsy = jnp.roll(sy, (di, dj), (0, 1))
+        # unwrap the seam: cells rolled across it contribute coordinates
+        # shifted by +-area on the rolled axis
+        if di == 1:
+            rsx = rsx.at[0, :].add(-area * rc[0, :])
+        elif di == -1:
+            rsx = rsx.at[-1, :].add(area * rc[-1, :])
+        if dj == 1:
+            rsy = rsy.at[:, 0].add(-area * rc[:, 0])
+        elif dj == -1:
+            rsy = rsy.at[:, -1].add(area * rc[:, -1])
+        parts = (rc, rsx, rsy, jnp.roll(vx, (di, dj), (0, 1)),
+                 jnp.roll(vy, (di, dj), (0, 1)))
+        acc = [a + p for a, p in zip(acc, parts)]
+
+    flat = [a.reshape(-1)[cell] for a in acc]
+    others = jnp.maximum(flat[0] - 1.0, 1.0)  # exclude self; guard alone
+    alone = (flat[0] - 1.0) <= 0.0
+    csum = jnp.stack([flat[1], flat[2]], axis=1) - pos
+    vsum = jnp.stack([flat[3], flat[4]], axis=1) - vec
+    cdelta = jnp.where(alone[:, None], 0.0, csum / others[:, None] - pos)
+    vmean = jnp.where(alone[:, None], 0.0, vsum / others[:, None])
+    return cdelta, vmean
 
 
 def rows_dense_counts(pos, lp, n_lp: int, area: float, rng: float,

@@ -28,7 +28,6 @@ import jax
 
 from repro.core.costmodel import CostParams, SETUPS, wct
 from repro.core.engine import EngineConfig, init_engine, run_window
-from repro.core.heuristics import HeuristicConfig
 
 
 @dataclasses.dataclass(frozen=True)

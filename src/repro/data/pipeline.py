@@ -21,8 +21,6 @@ import queue
 import threading
 from typing import Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -1,7 +1,6 @@
 """Public wrapper: model-facing layout adapters for the flash kernel."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401

@@ -14,7 +14,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(logits_ref, bias_ref, top_p_ref, top_e_ref, counts_ref, *,

@@ -16,7 +16,6 @@ HLO) are exact; the multipliers are the known trip counts.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Tuple
 
 import jax

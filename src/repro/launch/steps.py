@@ -9,8 +9,7 @@ dry-run / trainer needs to jit with explicit shardings.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

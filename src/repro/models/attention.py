@@ -20,7 +20,6 @@ the masked single-scan baseline (§Perf iteration 1).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ f32 buffers — softmax stats, norms — are small). See dryrun.py.
 from __future__ import annotations
 
 import os
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@ repro/models/encdec.py.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 from repro.models import blocks
 from repro.models import mamba2 as m2
 from repro.models import rwkv6 as r6
-from repro.models.layers import (COMPUTE_DT, PARAM_DT, _init, chunked_xent,
+from repro.models.layers import (COMPUTE_DT, _init, chunked_xent,
                                  embed_fwd, init_embed, init_rmsnorm,
                                  lm_head_fwd, rmsnorm, softmax_xent)
 from repro.parallel.ctx import ParallelCtx

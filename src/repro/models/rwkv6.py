@@ -187,7 +187,8 @@ def rwkv_decode_step(p, x, carry, *, cfg, px: ParallelCtx, batch_entry):
     k = (xk @ p["t_k"].astype(COMPUTE_DT)).reshape(B, H, N).astype(jnp.float32)
     v = (xv @ p["t_v"].astype(COMPUTE_DT)).reshape(B, H, N).astype(jnp.float32)
     g = xg @ p["t_g"].astype(COMPUTE_DT)
-    wl = jnp.tanh(xw @ p["decay_a"].astype(COMPUTE_DT)) @ p["decay_b"].astype(COMPUTE_DT)
+    wl = jnp.tanh(xw @ p["decay_a"].astype(COMPUTE_DT)) \
+        @ p["decay_b"].astype(COMPUTE_DT)
     w = jnp.exp(-jnp.exp(p["w_base"][None, None, :] + wl.astype(jnp.float32)))
     w = w.reshape(B, H, N)
     S0 = carry["state"].astype(jnp.float32)

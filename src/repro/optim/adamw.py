@@ -7,12 +7,10 @@ reduce-scatter/all-gather around the update IS the ZeRO-1 schedule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import PARAM_DT
 
 
 @dataclasses.dataclass(frozen=True)

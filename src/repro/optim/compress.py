@@ -14,7 +14,6 @@ explicit cross-pod collective being compressed.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

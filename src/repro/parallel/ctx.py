@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -72,7 +72,9 @@ class ParallelCtx:
     def data_size(self) -> int:
         if self.mesh is None:
             return 1
-        return math.prod(self.mesh.shape[a] for a in self.batch_axes) if self.batch_axes else 1
+        if not self.batch_axes:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.batch_axes)
 
     @property
     def model_size(self) -> int:

@@ -58,10 +58,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import balance as bal
 from repro.core import heuristics as heu
 from repro.core import neighbors
-from repro.core.abm import init_abm, rwp_apply, rwp_draws
+from repro.core.abm import init_abm, mobility_step, rwp_apply, rwp_draws
 
-#: per-SE state rows that migrate with an SE between shards
-_ROW_FIELDS = ("pos", "waypoint", "last_mig", "ptr", "since_eval", "gid")
+#: per-SE state rows that migrate with an SE between shards ("mob" is
+#: the per-SE mobility state: member offset / heading — full-row packed)
+_ROW_FIELDS = ("pos", "waypoint", "mob", "last_mig", "ptr", "since_eval",
+               "gid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +121,16 @@ def make_shard_spec(cfg) -> ShardSpec:
         grid = neighbors.make_grid_spec(d * cap, abm.area,
                                         abm.interaction_range,
                                         capacity=abm.grid_capacity)
+        if (grid is not None and abm.grid_capacity == 0
+                and abm.mobility != "rwp"):
+            # clustered mobility: take the ABM's clustered-density bound
+            # for the n live SEs, plus a uniform allowance for the
+            # spread-out pad positions of the empty slots
+            pads = neighbors.default_capacity(max(d * cap - n, 1),
+                                              grid.ncell)
+            grid = dataclasses.replace(
+                grid, capacity=min(d * cap,
+                                   abm.grid_spec().capacity + pads))
     return ShardSpec(n_dev=d, n_lp=L, n_se=n, cap=cap, mig_cap=mig_cap,
                      grid=grid)
 
@@ -171,6 +183,8 @@ def init_sharded(key, cfg, spec: ShardSpec):
     return {
         "pos": pad_pos.at[slot_of_se].set(st["pos"]),
         "waypoint": pad_pos.at[slot_of_se].set(st["waypoint"]),
+        "mob": jnp.zeros((S, 2), jnp.float32).at[slot_of_se].set(st["mob"]),
+        "mob_g": st["mob_g"],  # global mobility rows: replicated
         "lp": scat(st["lp"], -1),
         "gid": scat(jnp.arange(n, dtype=jnp.int32), -1),
         "pending_dst": jnp.full((S,), -1, jnp.int32),
@@ -201,6 +215,8 @@ def unshard_state(state, spec: ShardSpec):
     return {
         "pos": scat(state["pos"]),
         "waypoint": scat(state["waypoint"]),
+        "mob": scat(state["mob"]),
+        "mob_g": state["mob_g"],
         "lp": scat(state["lp"]),
         "pending_dst": scat(state["pending_dst"]),
         "pending_eta": scat(state["pending_eta"]),
@@ -330,12 +346,33 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
     valid = f["gid"] >= 0
     safe_gid = jnp.clip(f["gid"], 0, n - 1)
 
-    # 2. model evolution — full-array draws gathered by SE id, so every
-    # SE sees the same randomness wherever it is hosted (bit-identity)
-    my_wp_draw = rwp_draws(k_move, n, abm)[safe_gid]
-    new_pos, new_wp = rwp_apply(f["pos"], f["waypoint"], my_wp_draw, abm)
-    f["pos"] = jnp.where(valid[:, None], new_pos, f["pos"])
-    f["waypoint"] = jnp.where(valid[:, None], new_wp, f["waypoint"])
+    # 2. model evolution. RWP is row-local: full-array draws gathered by
+    # SE id, so every SE sees the same randomness wherever it is hosted
+    # (bit-identity). The other mobility models read global state (blob
+    # anchors, the flock's cell aggregates), so each device reconstructs
+    # the id-order arrays from an all-gather, advances them with the
+    # *same* `mobility_step` the oracle runs, and takes its own rows
+    # back — bit-identity by construction (see DESIGN.md).
+    if abm.mobility == "rwp":
+        my_wp_draw = rwp_draws(k_move, n, abm)[safe_gid]
+        new_pos, new_wp = rwp_apply(f["pos"], f["waypoint"], my_wp_draw, abm)
+        f["pos"] = jnp.where(valid[:, None], new_pos, f["pos"])
+        f["waypoint"] = jnp.where(valid[:, None], new_wp, f["waypoint"])
+    else:
+        pos_all = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
+        mob_all = jax.lax.all_gather(f["mob"], "lp", axis=0, tiled=True)
+        gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
+        tgt = jnp.where(gid_all >= 0, gid_all, n)  # pads -> dropped
+        pos_n = jnp.zeros((n, 2), f["pos"].dtype).at[tgt].set(
+            pos_all, mode="drop")
+        mob_n = jnp.zeros((n, 2), f["mob"].dtype).at[tgt].set(
+            mob_all, mode="drop")
+        wp_n = jnp.zeros((n, 2), jnp.float32)  # unused by non-RWP models
+        pos_n, _, mob_n, mob_g = mobility_step(k_move, pos_n, wp_n, mob_n,
+                                               f["mob_g"], abm)
+        f["pos"] = jnp.where(valid[:, None], pos_n[safe_gid], f["pos"])
+        f["mob"] = jnp.where(valid[:, None], mob_n[safe_gid], f["mob"])
+        f["mob_g"] = mob_g
     sender = valid & jax.random.bernoulli(k_send, abm.p_interact, (n,))[safe_gid]
 
     # halo exchange: fixed-size transport of every shard's positions/LPs
@@ -361,12 +398,16 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
             f["pos"], my_idx, sender)
         halo_n = remote_valid.sum()  # no grid: every remote agent needed
 
-    # 3. communication accounting (psum = the paper's LCR num/denom)
+    # 3. communication accounting: the per-pair flow matrix is integer,
+    # so the cross-shard psum is exactly the oracle's id-order
+    # scatter-add, and the scalar LCR terms derive from it (single
+    # source of truth, same as engine.step). Rows of invalid slots are
+    # zero (non-senders), and their safe_lp=0 rows add nothing.
     safe_lp = jnp.clip(f["lp"], 0, L - 1)
-    local = jnp.take_along_axis(counts, safe_lp[:, None], 1)[:, 0]
-    local = jnp.where(valid, local, 0)
-    local = jax.lax.psum(local.sum(), "lp")
-    total = jax.lax.psum(counts.sum(), "lp")
+    flows = jax.lax.psum(
+        jnp.zeros((L, L), jnp.int32).at[safe_lp].add(counts), "lp")
+    local = jnp.trace(flows)
+    total = flows.sum()
     remote = total - local
 
     # 4/5. self-clustering: window update + evaluation are row-local;
@@ -375,6 +416,7 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
     # candidates all live on the shard owning the source LP)
     migs = jnp.int32(0)
     n_evals = jnp.int32(0)
+    mig_flows = jnp.zeros((L, L), jnp.int32)
     if cfg.gaia_on:
         hstate = {k: f[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
         hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
@@ -385,7 +427,7 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         cmat = jax.lax.psum(bal.candidate_matrix(cand, safe_lp, dest, L),
                             "lp")
         if cfg.balance == "asymmetric":
-            cap_sh = jnp.asarray(cfg.capacity, jnp.float32)
+            cap_sh = jnp.asarray(cfg.effective_capacity(), jnp.float32)
             current = jax.lax.psum(
                 jnp.bincount(jnp.where(valid, f["lp"], L), length=L + 1)[:L],
                 "lp")
@@ -401,6 +443,9 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
                       last_mig=jnp.where(admit, t, hstate["last_mig"]))
         f.update(hstate)
         migs = jax.lax.psum(admit.sum(), "lp")
+        mig_flows = jax.lax.psum(
+            jnp.zeros((L, L), jnp.int32).at[safe_lp, dest].add(
+                admit.astype(jnp.int32)), "lp")
 
     halo_total = jax.lax.psum(halo_n, "lp").astype(jnp.float32)
     remote_slots = jax.lax.psum(remote_valid.sum(), "lp").astype(jnp.float32)
@@ -413,6 +458,8 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         "heu_evals": n_evals.astype(jnp.float32),
         "lcr": local.astype(jnp.float32)
                / jnp.maximum(total.astype(jnp.float32), 1.0),
+        "lp_flows": flows,
+        "mig_flows": mig_flows,
         # mean remote agents a shard actually needs (its halo), as a
         # fraction of all remote agents — GAIA's clustering drives this
         # down; a ragged transport would realize the saving on the wire
@@ -423,7 +470,9 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
 
 
 _FIELD_SPECS = {
-    "pos": P("lp"), "waypoint": P("lp"), "lp": P("lp"), "gid": P("lp"),
+    "pos": P("lp"), "waypoint": P("lp"), "mob": P("lp"),
+    "mob_g": P(),  # global mobility rows: replicated on every device
+    "lp": P("lp"), "gid": P("lp"),
     "pending_dst": P("lp"), "pending_eta": P("lp"), "ring": P(None, "lp"),
     "ptr": P("lp"), "since_eval": P("lp"), "last_mig": P("lp"),
 }
@@ -439,7 +488,8 @@ def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
     fields = {k: state[k] for k in _FIELD_SPECS}
     metric_specs = {k: P() for k in
                     ("local_msgs", "remote_msgs", "migrations", "heu_evals",
-                     "lcr", "halo_frac", "shard_overflow")}
+                     "lcr", "lp_flows", "mig_flows", "halo_frac",
+                     "shard_overflow")}
     fn = shard_map(
         partial(_shard_step, cfg=cfg, spec=spec),
         mesh=mesh,

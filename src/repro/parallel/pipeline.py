@@ -13,7 +13,6 @@ use pod-axis data parallelism (better MFU at 2 pods — see DESIGN.md
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -7,10 +7,9 @@ fall back to replication (e.g. 4 KV heads on a 16-way model axis).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel.ctx import ParallelCtx

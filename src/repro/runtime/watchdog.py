@@ -13,7 +13,6 @@ the single-process step clock and unit-tested with injected delays.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 

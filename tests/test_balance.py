@@ -5,7 +5,6 @@ property tests of the core invariants:
   quota: admitted migrations per (src, dst) never exceed the grant;
   asymmetric: grants drain SEs toward the capacity profile, never past it.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

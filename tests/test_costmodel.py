@@ -1,11 +1,24 @@
-"""Cost-model tests (paper §3, Eqs. 1–6)."""
+"""Cost-model tests (paper §3, Eqs. 1–6) and the heterogeneous
+execution-environment layer (per-LP speeds + pairwise link classes)."""
+import numpy as np
 import pytest
 
-from repro.core.costmodel import DISTRIBUTED, PARALLEL, amdahl, wct
+from repro.core.costmodel import (DISTRIBUTED, PARALLEL, ExecutionEnvironment,
+                                  amdahl, hetero_speed_env, homogeneous_env,
+                                  make_env, two_site_env, wct, wct_env)
 
 
 BASE = {"local_msgs": 1e6, "remote_msgs": 1e6, "migrations": 0.0,
         "heu_evals": 0.0}
+
+
+def _flows(n_lp=4, local=2.5e5, remote=None, total_remote=3e6):
+    """Balanced (L, L) flow matrix: `local` on the diagonal, the remote
+    volume spread evenly off-diagonal."""
+    remote = total_remote / (n_lp * (n_lp - 1)) if remote is None else remote
+    f = np.full((n_lp, n_lp), remote)
+    np.fill_diagonal(f, local)
+    return f.tolist()
 
 
 def test_amdahl_bounds():
@@ -71,3 +84,107 @@ def test_more_lps_cut_compute_term():
     t4 = wct(BASE, PARALLEL, 4, 1200)["MCC"]
     t16 = wct(BASE, PARALLEL, 16, 1200)["MCC"]
     assert t16 < t4
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous execution environments
+# ---------------------------------------------------------------------------
+
+
+def test_env_validation():
+    with pytest.raises(ValueError):  # unknown link class
+        ExecutionEnvironment("x", (1.0, 1.0),
+                             (("shm", "carrier-pigeon"),) * 2)
+    with pytest.raises(ValueError):  # non-square link matrix
+        ExecutionEnvironment("x", (1.0, 1.0), (("shm",),) * 2)
+    with pytest.raises(ValueError):  # non-positive speed
+        ExecutionEnvironment("x", (1.0, 0.0), (("shm", "shm"),) * 2)
+    with pytest.raises(ValueError):
+        make_env("fog", 4)
+    assert sum(hetero_speed_env(6).capacity_shares()) == pytest.approx(1.0)
+
+
+def test_homogeneous_env_reduces_to_scalar_model():
+    """On balanced flows and equal unit speeds, wct_env == wct: the
+    per-LP bottleneck collapses to Amdahl and the link pricing to the
+    scalar remote path (shm == PARALLEL, lan == DISTRIBUTED)."""
+    c = dict(BASE, local_msgs=1e6, remote_msgs=3e6,
+             lp_flows=_flows(local=2.5e5, total_remote=3e6))
+    for p, link in ((PARALLEL, "shm"), (DISTRIBUTED, "lan")):
+        env = homogeneous_env(4, link=link)
+        got = wct_env(c, p, env, 1200, interaction_bytes=100)
+        want = wct(c, p, 4, 1200, interaction_bytes=100)
+        for k in ("MCC", "LCC", "RCC", "SC", "MMC", "TEC"):
+            assert got[k] == pytest.approx(want[k]), (link, k)
+
+
+def test_wan_site_split_prices_cross_flows_higher():
+    """Same flows: a two-site WAN environment must cost strictly more
+    than the all-LAN one (cross-site link + RTT-dominated barrier)."""
+    c = dict(BASE, lp_flows=_flows())
+    lan = wct_env(c, DISTRIBUTED, make_env("lan", 4), 1200,
+                  interaction_bytes=100)
+    wan = wct_env(c, DISTRIBUTED, make_env("wan2", 4), 1200,
+                  interaction_bytes=100)
+    assert wan["RCC"] > lan["RCC"]
+    assert wan["SC"] > lan["SC"]
+    assert wan["TEC"] > lan["TEC"]
+    # flows kept inside a site dodge the WAN premium entirely
+    intra = np.zeros((4, 4))
+    intra[0, 1] = intra[1, 0] = 1e6  # LPs 0,1 are co-sited
+    cross = np.zeros((4, 4))
+    cross[0, 2] = cross[2, 0] = 1e6  # sites A <-> B
+    c_intra = dict(BASE, lp_flows=intra.tolist())
+    c_cross = dict(BASE, lp_flows=cross.tolist())
+    env = two_site_env(4)
+    assert wct_env(c_cross, DISTRIBUTED, env, 1200)["RCC"] > \
+        wct_env(c_intra, DISTRIBUTED, env, 1200)["RCC"]
+
+
+def test_slow_lp_is_the_compute_bottleneck():
+    """Events landing on a half-speed LP dominate MCC; the same volume
+    on the double-speed LP is cheap."""
+    env = hetero_speed_env(4)  # speeds (2, 1, 1, 0.5)
+    on_fast = np.zeros((4, 4))
+    on_fast[1, 0] = 4e6
+    on_slow = np.zeros((4, 4))
+    on_slow[1, 3] = 4e6
+    fast = wct_env(dict(BASE, lp_flows=on_fast.tolist()), DISTRIBUTED,
+                   env, 1200)["MCC"]
+    slow = wct_env(dict(BASE, lp_flows=on_slow.tolist()), DISTRIBUTED,
+                   env, 1200)["MCC"]
+    assert slow > 3.0 * fast, (slow, fast)
+
+
+def test_migrations_priced_on_their_pair_link():
+    env = two_site_env(4)
+    intra_mig = np.zeros((4, 4))
+    intra_mig[0, 1] = 1e4
+    cross_mig = np.zeros((4, 4))
+    cross_mig[0, 2] = 1e4
+    base = dict(BASE, lp_flows=_flows(), migrations=1e4)
+    a = wct_env(dict(base, mig_flows=intra_mig.tolist()), DISTRIBUTED, env,
+                1200, migration_bytes=20480)
+    b = wct_env(dict(base, mig_flows=cross_mig.tolist()), DISTRIBUTED, env,
+                1200, migration_bytes=20480)
+    assert b["MigComm"] > a["MigComm"]
+    # without mig_flows the fallback prices every migration on the most
+    # expensive link present — an upper bound on both
+    c = wct_env(base, DISTRIBUTED, env, 1200, migration_bytes=20480)
+    assert c["MigComm"] >= b["MigComm"] >= a["MigComm"]
+
+
+def test_wct_env_rejects_bad_flow_shape():
+    with pytest.raises(ValueError):
+        wct_env(dict(BASE, lp_flows=[[1.0]]), DISTRIBUTED,
+                make_env("lan", 4), 1200)
+
+
+def test_wct_env_single_lp_without_mig_flows():
+    """Degenerate 1-LP environment: no remote links exist, so the
+    migration fallback must price zero instead of crashing on an empty
+    link set (regression)."""
+    out = wct_env(dict(BASE, remote_msgs=0.0, lp_flows=[[1e6]]),
+                  DISTRIBUTED, homogeneous_env(1), 1200)
+    assert out["MigComm"] == 0.0 and out["RCC"] == 0.0
+    assert out["TEC"] > 0.0

@@ -1,9 +1,7 @@
 """Fault-tolerance integration tests: checkpoint atomicity/integrity,
 crash-restart bit-exactness, watchdog, elastic reshape.
 """
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

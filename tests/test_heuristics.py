@@ -3,10 +3,8 @@
 Hand-stepped traces verify the window semantics of #1/#2/#3 and the
 MF/MT gating exactly as specified.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.heuristics import HeuristicConfig, init_state, update_window, evaluate
 

@@ -74,6 +74,39 @@ def test_parity_under_clustering_with_explicit_capacity(backend):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
+def test_overflow_path_on_hotspot_distribution():
+    """The satellite contract for clustered inputs: on a hotspot
+    distribution the *uniform* auto-capacity overflows (flag raised, and
+    the resulting counts really are undercounted — the failure is not
+    hypothetical), while an explicit ABMConfig.grid_capacity override
+    restores exact parity with the dense oracle. The mobility-aware
+    auto-capacity must also hold on its own."""
+    from repro.core.abm import init_abm
+
+    cfg = ABMConfig(n_se=300, n_lp=4, area=2000.0, interaction_range=100.0,
+                    mobility="hotspot", n_groups=3, group_radius=100.0)
+    st = init_abm(jax.random.key(2), cfg)
+    pos, lp = st["pos"], st["lp"]
+    sender = jnp.ones((cfg.n_se,), bool)
+
+    # uniform-density capacity (what RWP would use): overflows on blobs
+    uniform_spec = neighbors.make_grid_spec(cfg.n_se, cfg.area,
+                                            cfg.interaction_range)
+    assert bool(neighbors.build_grid(pos, uniform_spec)["overflow"])
+    under = neighbors.grid_lp_counts(pos, lp, sender, cfg.n_lp, cfg.area,
+                                     cfg.interaction_range, uniform_spec)
+    ref = _dense_counts(pos, lp, sender, cfg)
+    assert int(np.asarray(under).sum()) < int(np.asarray(ref).sum())
+
+    # the clustered auto-capacity holds, and explicit override is exact
+    assert not bool(neighbors.build_grid(pos, cfg.grid_spec())["overflow"])
+    got_auto = interaction_counts(pos, lp, sender, cfg)
+    np.testing.assert_array_equal(np.asarray(got_auto), np.asarray(ref))
+    got = interaction_counts(pos, lp, sender,
+                             dataclasses.replace(cfg, grid_capacity=cfg.n_se))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
 def test_grid_spec_geometry():
     spec = neighbors.make_grid_spec(10_000, 10_000.0, 250.0)
     assert spec.ncell == 40 and spec.cell >= 250.0

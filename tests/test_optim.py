@@ -9,7 +9,7 @@ from repro.optim.adamw import AdamWConfig, adamw_apply, adamw_init, lr_at
 from repro.optim.adafactor import (adafactor_apply, adafactor_init,
                                    adafactor_lean_apply, adafactor_lean_init,
                                    _stochastic_round_bf16)
-from repro.optim.compress import dequantize_q8, ef_q8_step, quantize_q8
+from repro.optim.compress import dequantize_q8, quantize_q8
 from repro.optim.diloco import DiLoCoConfig, diloco_init, outer_step
 
 

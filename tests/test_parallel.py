@@ -8,15 +8,7 @@ import subprocess
 import sys
 import textwrap
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
-
-from repro.configs import get_smoke
-from repro.launch.steps import _param_sds
-from repro.parallel import sharding as sh
-from repro.parallel.ctx import make_ctx
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -131,8 +123,10 @@ def test_sharded_train_step_matches_single_device():
             if mesh is None:
                 fn = jax.jit(b.fn)
             else:
-                in_sh = jax.tree.map(lambda s: shard_mod.to_shardings(s, px), b.in_specs,
-                    is_leaf=lambda x: x is None or isinstance(x, jax.sharding.PartitionSpec))
+                in_sh = jax.tree.map(
+                    lambda s: shard_mod.to_shardings(s, px), b.in_specs,
+                    is_leaf=lambda x: x is None or isinstance(
+                        x, jax.sharding.PartitionSpec))
                 fn = jax.jit(b.fn, in_shardings=in_sh)
             p2, o2, e2, m = fn(params, opt, {}, batch)
             losses[name] = float(m["loss"])

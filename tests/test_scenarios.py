@@ -1,0 +1,182 @@
+"""Scenario-subsystem tests (mobility models + execution environments).
+
+Contracts, per mobility model:
+  * §4.2 transparency: GAIA on/off leaves the model evolution
+    (positions, mobility state, total interaction volume) byte-identical;
+  * proximity-backend parity: dense and grid trajectories byte-identical
+    (the clustered auto-capacity must hold, or the grid undercounts);
+  * the workloads are genuinely non-uniform (that is their purpose) and
+    per-step displacement stays bounded by the configured speed.
+
+Sharded bit-identity for the same scenarios lives in test_sharding.py;
+the heterogeneous pricing itself in test_costmodel.py.
+"""
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+from repro.core.abm import (ABMConfig, MOBILITY_MODELS, init_abm,
+                            mobility_step)
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+NEW_MODELS = [m for m in MOBILITY_MODELS if m != "rwp"]
+
+
+def _abm(mobility, **kw):
+    base = dict(n_se=120, n_lp=4, area=1000.0, speed=5.0,
+                interaction_range=80.0, p_interact=0.3,
+                mobility=mobility, n_groups=4, group_radius=120.0)
+    return ABMConfig(**{**base, **kw})
+
+
+def _cfg(mobility, gaia=True, ts=40, **kw):
+    return EngineConfig(abm=_abm(mobility, **kw),
+                        heuristic=HeuristicConfig(mf=1.2, mt=5),
+                        gaia_on=gaia, timesteps=ts)
+
+
+@functools.lru_cache(maxsize=None)
+def _run(cfg: EngineConfig, seed=7):
+    return run(jax.random.key(seed), cfg)
+
+
+def _bytes(x):
+    return np.ascontiguousarray(np.asarray(x)).tobytes()
+
+
+def test_mobility_config_validation():
+    with pytest.raises(ValueError):
+        ABMConfig(mobility="teleport")
+    with pytest.raises(ValueError):
+        ABMConfig(mobility="hotspot", n_groups=0)
+
+
+@pytest.mark.parametrize("mobility", NEW_MODELS)
+def test_transparency_gaia_does_not_change_model_evolution(mobility):
+    st_on, s_on, _ = _run(_cfg(mobility, True))
+    st_off, s_off, _ = _run(_cfg(mobility, False))
+    for k in ("pos", "waypoint", "mob", "mob_g"):
+        assert _bytes(st_on[k]) == _bytes(st_off[k]), k
+    tot_on = np.asarray(s_on["local_msgs"]) + np.asarray(s_on["remote_msgs"])
+    tot_off = (np.asarray(s_off["local_msgs"])
+               + np.asarray(s_off["remote_msgs"]))
+    np.testing.assert_array_equal(tot_on, tot_off)
+
+
+@pytest.mark.parametrize("mobility", NEW_MODELS)
+def test_dense_grid_trajectories_bit_identical(mobility):
+    """The whole-run parity contract: with the clustered auto-capacity
+    the grid backend must reproduce the dense oracle byte-for-byte on
+    the non-uniform workloads too."""
+    cfg = _cfg(mobility, True)
+    dense = dataclasses.replace(
+        cfg, abm=dataclasses.replace(cfg.abm, proximity_backend="dense"))
+    st_g, s_g, c_g = _run(cfg)
+    st_d, s_d, c_d = _run(dense)
+    for k in ("pos", "lp", "ring", "last_mig"):
+        assert _bytes(st_g[k]) == _bytes(st_d[k]), k
+    np.testing.assert_array_equal(np.asarray(s_g["lp_flows"]),
+                                  np.asarray(s_d["lp_flows"]))
+    assert c_g["grid_overflow"] == 0.0  # capacity held, else parity is luck
+
+
+@pytest.mark.parametrize("mobility", ["hotspot", "group"])
+def test_clustered_workloads_are_nonuniform_and_gaia_still_wins(mobility):
+    st, _, c_on = _run(_cfg(mobility, True))
+    _, _, c_off = _run(_cfg(mobility, False))
+    # non-uniform: peak cell occupancy well above the uniform mean
+    spec = _abm(mobility).grid_spec()
+    pos = np.asarray(st["pos"])
+    cell = (np.floor(pos[:, 0] / spec.cell).astype(int) % spec.ncell) \
+        * spec.ncell + np.floor(pos[:, 1] / spec.cell).astype(int) \
+        % spec.ncell
+    occ = np.bincount(cell, minlength=spec.ncell ** 2)
+    assert occ.max() > 3.0 * 120 / spec.ncell ** 2, occ.max()
+    # and self-clustering still converts remote traffic to local
+    assert c_on["migrations"] > 0
+    assert c_on["mean_lcr"] > c_off["mean_lcr"] + 0.05, (c_on, c_off)
+
+
+def test_clustered_auto_capacity_exceeds_uniform_bound():
+    from repro.core import neighbors
+    uni = ABMConfig(n_se=400, area=1000.0, interaction_range=80.0)
+    hot = dataclasses.replace(uni, mobility="hotspot", n_groups=4,
+                              group_radius=120.0)
+    assert hot.grid_spec().capacity > uni.grid_spec().capacity
+    # explicit override still wins
+    assert dataclasses.replace(hot, grid_capacity=9).grid_spec().capacity == 9
+    spec = uni.grid_spec()
+    assert neighbors.clustered_capacity(
+        400, spec.ncell, spec.cell, 4, 120.0) <= 400
+
+
+def test_grid_overflow_metric_fires_when_capacity_too_tight():
+    """The engine's per-step alarm: a deliberately tiny capacity on a
+    clustered workload must raise grid_overflow (silent undercounting is
+    the failure mode it guards against)."""
+    _, _, c = _run(_cfg("hotspot", True, ts=10, grid_capacity=4))
+    assert c["grid_overflow"] > 0
+
+
+@pytest.mark.parametrize("mobility", MOBILITY_MODELS)
+def test_per_step_displacement_bounded(mobility):
+    """No mobility model teleports: toroidal per-step displacement stays
+    within speed x (1 + noise amplitude)."""
+    cfg = _abm(mobility)
+    st = init_abm(jax.random.key(1), cfg)
+    pos, wp, mob, mob_g = st["pos"], st["waypoint"], st["mob"], st["mob_g"]
+    for i in range(3):
+        new_pos, wp, mob, mob_g = mobility_step(
+            jax.random.fold_in(jax.random.key(2), i), pos, wp, mob, mob_g,
+            cfg)
+        d = np.asarray(jnp_tor_dist(new_pos, pos, cfg.area))
+        assert d.max() <= cfg.speed * 1.8 + 1e-3, (mobility, d.max())
+        pos = new_pos
+
+
+def jnp_tor_dist(a, b, area):
+    import jax.numpy as jnp
+    d = jnp.abs(a - b)
+    d = jnp.minimum(d, area - d)
+    return jnp.linalg.norm(d, axis=-1)
+
+
+def test_group_members_track_their_leader():
+    """RPGM coherence: after a burn-in, members sit near
+    (leader + offset) — the whole group moves as one."""
+    cfg = _abm("group")
+    st = init_abm(jax.random.key(3), cfg)
+    pos, wp, mob, mob_g = st["pos"], st["waypoint"], st["mob"], st["mob_g"]
+    for i in range(30):
+        pos, wp, mob, mob_g = mobility_step(
+            jax.random.fold_in(jax.random.key(4), i), pos, wp, mob, mob_g,
+            cfg)
+    target = (np.asarray(mob_g)[np.arange(cfg.n_se) % cfg.n_groups, :2]
+              + np.asarray(mob)) % cfg.area
+    d = np.asarray(jnp_tor_dist(pos, target, cfg.area))
+    assert np.median(d) < 3.0 * cfg.speed, np.median(d)
+
+
+def test_env_supplies_asymmetric_capacity_profile():
+    """EngineConfig.env stands in for explicit capacity shares: the
+    allocation drifts toward the environment's speed profile."""
+    env = cm.make_env("hetero", 4)  # speeds (2, 1, 1, 0.5)
+    cfg = EngineConfig(abm=_abm("rwp"),
+                       heuristic=HeuristicConfig(mf=0.8, mt=2),
+                       balance="asymmetric", env=env, timesteps=60)
+    assert cfg.effective_capacity() == pytest.approx(env.capacity_shares())
+    st, _, _ = _run(cfg, seed=3)
+    counts = np.bincount(np.asarray(st["lp"]), minlength=4) / 120
+    assert counts[0] > counts[3] + 0.1, counts
+
+
+def test_env_n_lp_mismatch_rejected():
+    with pytest.raises(ValueError):
+        EngineConfig(abm=_abm("rwp"), env=cm.make_env("lan", 8))
+    with pytest.raises(ValueError):
+        EngineConfig(abm=_abm("rwp"), balance="asymmetric")

@@ -26,9 +26,10 @@ ASYM = EngineConfig(abm=ABM, heuristic=HeuristicConfig(mf=0.8, mt=2),
                     gaia_on=True, balance="asymmetric",
                     capacity=(0.4, 0.3, 0.2, 0.1), timesteps=24)
 
-STATE_KEYS = ("pos", "waypoint", "lp", "pending_dst", "pending_eta",
-              "ring", "ptr", "since_eval", "last_mig")
-SERIES_KEYS = ("local_msgs", "remote_msgs", "migrations", "heu_evals", "lcr")
+STATE_KEYS = ("pos", "waypoint", "mob", "mob_g", "lp", "pending_dst",
+              "pending_eta", "ring", "ptr", "since_eval", "last_mig")
+SERIES_KEYS = ("local_msgs", "remote_msgs", "migrations", "heu_evals", "lcr",
+               "lp_flows", "mig_flows")
 
 
 @functools.lru_cache(maxsize=None)
@@ -61,6 +62,20 @@ def test_symmetric_equivalence(n_devices):
 @pytest.mark.parametrize("n_devices", [2, 4])
 def test_asymmetric_equivalence(n_devices):
     _assert_equivalent(ASYM, n_devices)
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+@pytest.mark.parametrize("mobility", ["hotspot", "group", "flock"])
+def test_mobility_scenario_equivalence(mobility, n_devices):
+    """The tentpole contract extended to the non-uniform mobility
+    models: per-SE mobility state (`mob`) reshards with the SE, the
+    replicated global rows (`mob_g`) advance identically everywhere,
+    and the whole trajectory stays byte-identical to the oracle."""
+    cfg = dataclasses.replace(
+        SYM, abm=dataclasses.replace(ABM, mobility=mobility, n_groups=4,
+                                     group_radius=120.0),
+        timesteps=20)
+    _assert_equivalent(cfg, n_devices)
 
 
 def test_dense_backend_equivalence():
