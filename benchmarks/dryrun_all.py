@@ -4,6 +4,12 @@ also bounds compiler memory).
 
 Usage: PYTHONPATH=src python benchmarks/dryrun_all.py [--mesh single multi]
 Writes results/dryrun/<arch>_<shape>_<mesh>.json and a campaign log.
+
+`--bench exp4 exp5 exp6 exp7` additionally runs the named quick-mode
+engine benchmarks (the BENCH_*.json producers, see benchmarks/run.py)
+each in its own subprocess before the dry-run cells — the same
+isolation rationale: every cell/bench gets a fresh XLA, and one OOM or
+compiler blow-up cannot take down the whole campaign.
 """
 from __future__ import annotations
 
@@ -30,7 +36,28 @@ def main():
     ap.add_argument("--components", action="store_true",
                     help="run the component roofline pass per cell "
                          "(writes *_comp.json; §Roofline table input)")
+    ap.add_argument("--bench", nargs="*", default=[],
+                    help="quick-mode engine benchmarks to run first, each "
+                         "in a fresh subprocess (e.g. exp4 exp5 exp6 exp7)")
     args = ap.parse_args()
+
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    for bench in args.bench:
+        t0 = time.time()
+        try:
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.run", "--scale", "quick",
+                 "--only", bench],
+                env=env, cwd=ROOT, capture_output=True, text=True,
+                timeout=args.timeout)
+            ok = r.returncode == 0
+            tail = (r.stdout + r.stderr).strip().splitlines()[-1:] or [""]
+        except subprocess.TimeoutExpired:
+            ok, tail = False, ["TIMEOUT"]
+        print(f"[bench {bench}] {'ok' if ok else 'FAIL'} "
+              f"({time.time()-t0:.0f}s) {tail[0][-200:]}", flush=True)
+        if not ok:
+            sys.exit(1)
 
     cells = []
     for arch, cfg in ARCHS.items():

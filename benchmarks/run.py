@@ -11,6 +11,8 @@ Experiments (see DESIGN.md §Per-experiment index):
     exp5      beyond-paper: LP-per-device sharded engine (BENCH_sharded)
     exp6      beyond-paper: mobility scenarios x environments
               (BENCH_scenarios)
+    exp7      beyond-paper: partitioning backends vs adaptive GAIA
+              (BENCH_partition)
     tables23  Tables 2-3 + Figs. 8-9 — ΔWCT via the calibrated cost model
     gaiamoe   beyond-paper: adaptive MoE expert placement traffic
     roofline  assemble the §Roofline table from results/dryrun
@@ -34,9 +36,10 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (exp1_speed, exp2_lps, exp3_range, exp4_scaling,
-                            exp5_sharded, exp6_scenarios, tables23,
-                            gaia_moe_bench, roofline, selftune_bench)
-    # exp4/exp5/exp6 expose quick|full: paper-scale maps to their full sweep
+                            exp5_sharded, exp6_scenarios, exp7_partition,
+                            tables23, gaia_moe_bench, roofline,
+                            selftune_bench)
+    # exp4..exp7 expose quick|full: paper-scale maps to their full sweep
     qf = "quick" if args.scale == "quick" else "full"
     benches = {
         "exp1": lambda: exp1_speed.main(args.scale),
@@ -45,6 +48,7 @@ def main() -> int:
         "exp4": lambda: exp4_scaling.main(qf),
         "exp5": lambda: exp5_sharded.main(qf),
         "exp6": lambda: exp6_scenarios.main(qf),
+        "exp7": lambda: exp7_partition.main(qf),
         "tables23": lambda: tables23.main(args.scale),
         "gaiamoe": lambda: gaia_moe_bench.main(args.scale),
         "selftune": lambda: selftune_bench.main(args.scale),

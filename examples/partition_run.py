@@ -1,0 +1,60 @@
+"""Static vs. periodic vs. adaptive partitioning on the hotspot scenario.
+
+The paper's headline comparison, runnable on a laptop: the same
+clustered workload (K dense blobs chasing moving attractors) is run
+with
+
+  * a static map from each partitioning backend
+    (ABMConfig.partitioner: random / stripe / kmeans / bestresponse),
+  * a periodic global kmeans repartition
+    (EngineConfig.repartition_every — deltas ride the migration
+    machinery and are priced like migrations), and
+  * GAIA's adaptive self-clustering on top of a random start,
+
+then every run is priced on the LAN environment with the per-LP-pair
+cost layer (wct_env), so "which partitioner wins" is a wall-clock
+statement, not an LCR aesthetic.
+
+    PYTHONPATH=src python examples/partition_run.py [hotspot|group|flock]
+"""
+import dataclasses
+import sys
+
+import jax
+
+from repro.core import costmodel as cm
+from repro.core.abm import ABMConfig
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+
+def main(mobility: str = "hotspot"):
+    base = EngineConfig(
+        abm=ABMConfig(n_se=1000, n_lp=4, area=3162.0, speed=3.5,
+                      interaction_range=250.0, p_interact=0.2,
+                      mobility=mobility, n_groups=8, group_radius=250.0),
+        heuristic=HeuristicConfig(mf=1.2, mt=10),
+        gaia_on=False, timesteps=300)
+    env = cm.make_env("lan", base.abm.n_lp)
+    print(f"scenario: {mobility}  ({base.abm.n_se} SEs, "
+          f"{base.timesteps} steps, TEC priced on '{env.name}')")
+
+    runs = [(f"{b}/static", dataclasses.replace(
+        base, abm=dataclasses.replace(base.abm, partitioner=b)))
+        for b in ("random", "stripe", "kmeans", "bestresponse")]
+    runs.append(("kmeans/periodic", dataclasses.replace(
+        base, abm=dataclasses.replace(base.abm, partitioner="kmeans"),
+        repartition_every=50)))
+    runs.append(("random/GAIA", dataclasses.replace(base, gaia_on=True)))
+
+    print(f"{'mode':18s} {'LCR':>6s} {'migs':>7s} {'TEC(lan)':>10s}")
+    for name, cfg in runs:
+        _, _, c = run(jax.random.key(0), cfg)
+        tec = cm.wct_env(c, cm.DISTRIBUTED, env, cfg.timesteps,
+                         interaction_bytes=100, migration_bytes=256)["TEC"]
+        print(f"{name:18s} {c['mean_lcr']:6.3f} {c['migrations']:7.0f} "
+              f"{tec:10.3f}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "hotspot")

@@ -6,6 +6,10 @@ numbers: Local Communication Ratio, migrations, and the estimated
 wall-clock gain on the two calibrated testbeds (Eq. 5/6).
 
     PYTHONPATH=src python examples/quickstart.py
+
+For GAIA measured against partitioners that actually try (static and
+periodically recomputed stripe/kmeans/bestresponse maps), see
+examples/partition_run.py.
 """
 import jax
 

@@ -9,6 +9,9 @@ Paper -> module map (see README.md for the full table):
   backend behind the §5.1 proximity hot spot
 - heuristics: self-clustering heuristics #1/#2/#3, §4.3
 - balance: symmetric/asymmetric load balancing, §4.4
+- partition: pluggable static/periodic partitioning backends (random /
+  stripe / kmeans / bestresponse) — the baselines GAIA is measured
+  against, and the engine's periodic global-repartition hook
 - engine: the timestepped adaptive-partitioning engine, §4
 - costmodel: the paper's TEC/MigC cost analysis, §3 Eqs. 1-6, plus the
   heterogeneous ExecutionEnvironment pricing layer (per-LP speeds +
@@ -25,3 +28,8 @@ from repro.core.engine import EngineConfig, run  # noqa: F401
 from repro.core.heuristics import HeuristicConfig  # noqa: F401
 from repro.core.neighbors import (GridSpec, build_grid,  # noqa: F401
                                   grid_lp_counts, make_grid_spec)
+# NOTE: the bare `partition` function is deliberately not re-exported —
+# it would shadow the `repro.core.partition` submodule attribute; use
+# `from repro.core.partition import partition`.
+from repro.core.partition import (PARTITION_BACKENDS,  # noqa: F401
+                                  PartitionConfig)

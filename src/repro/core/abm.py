@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import neighbors
+from repro.core import partition as part
 
 PROXIMITY_BACKENDS = ("dense", "grid", "pallas", "pallas_grid")
 MOBILITY_MODELS = ("rwp", "hotspot", "group", "flock")
@@ -77,12 +78,18 @@ class ABMConfig:
     mobility: str = "rwp"  # see MOBILITY_MODELS
     n_groups: int = 8  # K attractors ("hotspot") / groups ("group")
     group_radius: float = 250.0  # cluster spatial scale (spaceunits)
+    # --- initial SE -> LP map (core/partition.py registry) --------------
+    partitioner: str = "random"  # see partition.PARTITION_BACKENDS
 
     def __post_init__(self):
         if self.proximity_backend not in PROXIMITY_BACKENDS:
             raise ValueError(
                 f"proximity_backend={self.proximity_backend!r} not in "
                 f"{PROXIMITY_BACKENDS}")
+        if self.partitioner not in part.PARTITION_BACKENDS:
+            raise ValueError(
+                f"partitioner={self.partitioner!r} not in "
+                f"{part.PARTITION_BACKENDS}")
         if self.mobility not in MOBILITY_MODELS:
             raise ValueError(
                 f"mobility={self.mobility!r} not in {MOBILITY_MODELS}")
@@ -145,14 +152,17 @@ def init_abm(key, cfg: ABMConfig):
     existing RWP seeds reproduce bit-identically; clustered models remap
     the same k1 uniforms into their blob offsets (initial density is
     non-uniform from step 0, which is the point of those scenarios).
+
+    The SE -> LP map comes from the configured partitioning backend
+    (`cfg.partitioner`, core/partition.py) fed with the *final* initial
+    positions, so informed backends see the clustered density. The
+    default "random" backend consumes k3 exactly as the pre-registry
+    round-robin line did — existing seeds reproduce bit-identically.
     """
     n, G = cfg.n_se, mobility_globals(cfg)
     k1, k2, k3 = jax.random.split(key, 3)
     pos = jax.random.uniform(k1, (n, 2), maxval=cfg.area)
     wp = jax.random.uniform(k2, (n, 2), maxval=cfg.area)
-    # round-robin random assignment: equal SEs per LP (paper: random but
-    # equal-sized)
-    lp = jax.random.permutation(k3, jnp.arange(cfg.n_se) % cfg.n_lp)
     mob = jnp.zeros((n, 2), jnp.float32)
     mob_g = jnp.zeros((G, 4), jnp.float32)
     if cfg.mobility in ("hotspot", "group"):
@@ -173,7 +183,9 @@ def init_abm(key, cfg: ABMConfig):
         kh = jax.random.fold_in(key, 0x6b0c)
         theta = jax.random.uniform(kh, (n,), maxval=2.0 * jnp.pi)
         mob = jnp.stack([jnp.cos(theta), jnp.sin(theta)], axis=1)
-    return {"pos": pos, "waypoint": wp, "lp": lp.astype(jnp.int32),
+    lp = part.partition(k3, pos, jnp.ones((n,), jnp.float32),
+                        part.from_abm(cfg))
+    return {"pos": pos, "waypoint": wp, "lp": lp,
             "mob": mob.astype(jnp.float32), "mob_g": mob_g}
 
 

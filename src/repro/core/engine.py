@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import balance as bal
+from repro.core import partition as part
 from repro.core.abm import (ABMConfig, init_abm,
                             interaction_counts_overflow, mobility_step)
 from repro.core.costmodel import ExecutionEnvironment
@@ -42,6 +43,11 @@ from repro.core import heuristics as heu
 
 
 SHARDINGS = ("none", "lp_device")
+
+#: PRNG salt for the periodic-repartition stream: folded into the
+#: per-step k_move, so the default path (repartition_every=0) consumes
+#: the main key stream exactly as before (bit-identical seeds)
+REPART_SALT = 0x7a47
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,11 +73,21 @@ class EngineConfig:
     n_devices: int = 0  # 0 = all visible devices (capped at n_lp)
     shard_capacity: int = 0  # SE slots per device; 0 = auto (2x share)
     mig_capacity: int = 0  # migration-buffer rows/device/step; 0 = auto
+    # --- periodic global repartition (core/partition.py) ----------------
+    # every R steps the abm.partitioner backend recomputes the SE -> LP
+    # map from current geometry; the delta rides the normal migration
+    # machinery (pending_dst/pending_eta, full-row resharding under
+    # "lp_device") and is counted in migrations/mig_flows, so the state
+    # transfer is priced by wct/wct_env exactly like GAIA migrations.
+    # 0 = never (the default path is bit-identical to pre-registry runs).
+    repartition_every: int = 0
 
     def __post_init__(self):
         if self.sharding not in SHARDINGS:
             raise ValueError(
                 f"sharding={self.sharding!r} not in {SHARDINGS}")
+        if self.repartition_every < 0:
+            raise ValueError("repartition_every must be >= 0")
         if self.env is not None and self.env.n_lp != self.abm.n_lp:
             raise ValueError(
                 f"env {self.env.name!r} has {self.env.n_lp} LPs but "
@@ -137,11 +153,34 @@ def step(state, cfg: EngineConfig, mf=None):
     total = flows.sum()
     remote = total - local
 
-    # 4/5. self-clustering
+    # 4/5. self-clustering + periodic global repartition
     hstate = {k: state[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
     migs = jnp.int32(0)
     n_evals = jnp.int32(0)
     mig_flows = jnp.zeros((L, L), jnp.int32)
+    reparts = jnp.int32(0)
+    if cfg.repartition_every > 0:
+        # every R steps the configured backend recomputes the global map
+        # from current geometry; the delta enters the ordinary in-flight
+        # migration machinery (and the migration counters, so wct/wct_env
+        # price the state transfer). SEs already in flight are skipped —
+        # their pending move completes first.
+        pcfg = part.from_engine(cfg)
+        k_rep = jax.random.fold_in(k_move, REPART_SALT)
+        do = (t > 0) & (t % cfg.repartition_every == 0)
+        new_lp = jax.lax.cond(
+            do,
+            lambda: part.partition(k_rep, pos,
+                                   jnp.ones((n,), jnp.float32), pcfg),
+            lambda: lp)
+        move = (new_lp != lp) & (pending_dst < 0)
+        pending_dst = jnp.where(move, new_lp, pending_dst)
+        pending_eta = jnp.where(move, t + cfg.migration_delay, pending_eta)
+        hstate = dict(hstate, last_mig=jnp.where(move, t,
+                                                 hstate["last_mig"]))
+        reparts = move.sum()
+        migs = migs + reparts
+        mig_flows = mig_flows.at[lp, new_lp].add(move.astype(jnp.int32))
     if cfg.gaia_on:
         hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
         cand, dest, alpha, hstate, n_evals = heu.evaluate(
@@ -159,7 +198,7 @@ def step(state, cfg: EngineConfig, mf=None):
         pending_eta = jnp.where(admit, t + cfg.migration_delay, pending_eta)
         hstate = dict(hstate, last_mig=jnp.where(admit, t,
                                                  hstate["last_mig"]))
-        migs = admit.sum()
+        migs = migs + admit.sum()
         mig_flows = mig_flows.at[lp, dest].add(admit.astype(jnp.int32))
 
     new_state = dict(state, key=key, t=t + 1, pos=pos, waypoint=wp, lp=lp,
@@ -175,6 +214,9 @@ def step(state, cfg: EngineConfig, mf=None):
                / jnp.maximum(total.astype(jnp.float32), 1.0),
         "lp_flows": flows,
         "mig_flows": mig_flows,
+        # bulk moves issued by the periodic global repartition (a subset
+        # of `migrations`: they ride the same machinery and pricing)
+        "repartitions": reparts.astype(jnp.float32),
         # exactness alarm: a grid cell over capacity silently undercounts
         # neighbors — the clustered mobility models are what can trip it
         "grid_overflow": grid_ovf.astype(jnp.float32),
@@ -191,8 +233,9 @@ def series_counters(series) -> dict:
     counters = {k: float(series[k].sum()) for k in
                 ("local_msgs", "remote_msgs", "migrations", "heu_evals")}
     counters["mean_lcr"] = float(series["lcr"].mean())
-    if "grid_overflow" in series:
-        counters["grid_overflow"] = float(series["grid_overflow"].sum())
+    for k in ("grid_overflow", "repartitions"):
+        if k in series:
+            counters[k] = float(series[k].sum())
     for k in ("lp_flows", "mig_flows"):
         if k in series:
             counters[k] = np.asarray(series[k]).sum(

@@ -1,0 +1,248 @@
+"""Pluggable partitioning backends: the static story GAIA competes with.
+
+The paper's core claim is that *adaptive* self-clustering beats static
+partitioning, but its only static baseline is the random round-robin
+assignment of §5.1. This module supplies the baselines the claim should
+be measured against (benchmarks/exp7_partition.py), behind one API:
+
+    partition(key, pos, weights, cfg) -> lp   # (N,) int32
+
+Every backend is a pure, jittable function of its inputs — determinism
+for a fixed key is a tested invariant, and the sharded engine relies on
+it to recompute the identical map on every device. Backends:
+
+  "random"        the paper's baseline: a random permutation of the
+                  round-robin assignment (equal-sized LPs). Bit-identical
+                  to the pre-registry `init_abm` line, so existing seeds
+                  reproduce exactly. Ignores pos/weights.
+  "stripe"        spatial slabs: SEs ranked along x (ties by y, then
+                  index) and cut into contiguous blocks at the capacity
+                  shares' cumulative-weight boundaries. The cheapest
+                  geometry-aware placement (Boulmier et al.,
+                  arXiv:2108.11099, distill the informed-placement idea
+                  to its 1-D core).
+  "kmeans"        balanced Lloyd iterations: toroidal-distance
+                  assignment under per-LP capacity bounds, circular-mean
+                  centroid update. The geometric "self-clustering done
+                  offline" baseline.
+  "bestresponse"  iterative node-level best-response over the sampled
+                  proximity-interaction graph (Kurve et al.,
+                  arXiv:1111.0875): each round every SE scores each LP
+                  by the interaction weight it would keep local, and the
+                  capacity-constrained assignment admits moves by
+                  descending score — simultaneous best responses with
+                  load feasibility enforced by construction rather than
+                  by a price term (see DESIGN.md §Partitioning backends).
+
+Capacity discipline: all backends (except the exactly-balanced
+"random") bound per-LP load by `capacity_bounds(cfg, total_weight)` —
+ceil(share * total * (1 + imbalance)) — which tests/test_partition.py
+enforces as a property. `weights` is the per-SE load weight (the engine
+passes ones; a calibrated per-SE event cost would slot in here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neighbors
+
+PARTITION_BACKENDS = ("random", "stripe", "kmeans", "bestresponse")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionConfig:
+    """Static parameters of one partitioning problem (hashable, so it
+    can close over a jitted engine step)."""
+    backend: str = "random"
+    n_lp: int = 4
+    area: float = 10_000.0  # toroidal square side
+    interaction_range: float = 250.0  # bestresponse affinity-graph radius
+    iters: int = 8  # Lloyd / best-response rounds
+    imbalance: float = 0.0  # allowed load slack over the capacity share
+    shares: Optional[Tuple[float, ...]] = None  # per-LP capacity shares
+
+    def __post_init__(self):
+        if self.backend not in PARTITION_BACKENDS:
+            raise ValueError(f"partition backend {self.backend!r} not in "
+                             f"{PARTITION_BACKENDS}")
+        if self.shares is not None and len(self.shares) != self.n_lp:
+            raise ValueError(f"shares has {len(self.shares)} entries for "
+                             f"n_lp={self.n_lp}")
+        if self.imbalance < 0:
+            raise ValueError("imbalance must be >= 0")
+
+    def share_array(self):
+        if self.shares is None:
+            return jnp.full((self.n_lp,), 1.0 / self.n_lp, jnp.float32)
+        return jnp.asarray(self.shares, jnp.float32)
+
+
+def from_abm(abm, shares: Optional[Tuple[float, ...]] = None,
+             iters: int = 8) -> PartitionConfig:
+    """PartitionConfig for an ABMConfig-shaped object (duck-typed to
+    avoid a circular import: abm.py dispatches through this module)."""
+    return PartitionConfig(backend=abm.partitioner, n_lp=abm.n_lp,
+                           area=abm.area,
+                           interaction_range=abm.interaction_range,
+                           iters=iters, shares=shares)
+
+
+def from_engine(cfg) -> PartitionConfig:
+    """PartitionConfig for an EngineConfig: the engine's effective
+    asymmetric capacity shares (explicit `capacity` or the environment's
+    relative LP speeds) become the partitioner's load shares, so a
+    periodic repartition targets the same allocation the balancer
+    drifts toward."""
+    return from_abm(cfg.abm, shares=cfg.effective_capacity())
+
+
+def capacity_bounds(cfg: PartitionConfig, total_weight):
+    """Declared per-LP load bound: ceil(share * total * (1 + imbalance)).
+
+    With ceil and imbalance >= 0 the bounds always sum to >= total, so a
+    feasible assignment exists; the property tests assert every backend
+    stays within this bound."""
+    return jnp.ceil(cfg.share_array() * total_weight
+                    * (1.0 + cfg.imbalance)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# capacity-constrained assignment (shared by kmeans / bestresponse)
+# ---------------------------------------------------------------------------
+
+
+def capacity_assign(cost, weights, caps):
+    """Greedy capacity-constrained assignment: admit (SE, LP) pairs in
+    ascending `cost` order; an SE takes the first LP whose remaining
+    capacity fits its weight. Deterministic (ties break on the flat
+    (i * L + l) index via stable sort). SEs no LP can fit (possible only
+    with heterogeneous weights and tight caps) fall back to the LP with
+    the most remaining capacity.
+
+    cost (N, L) float, weights (N,) float, caps (L,) float ->
+    assignment (N,) int32. O(N * L) scan — partitioning runs at init and
+    every `repartition_every` steps, not per timestep.
+    """
+    n, L = cost.shape
+    order = jnp.argsort(cost.reshape(-1), stable=True)
+
+    def body(carry, flat_idx):
+        assigned, fill = carry
+        i, l = flat_idx // L, flat_idx % L
+        ok = (assigned[i] < 0) & (fill[l] + weights[i] <= caps[l])
+        assigned = assigned.at[i].set(jnp.where(ok, l, assigned[i]))
+        fill = fill.at[l].add(jnp.where(ok, weights[i], 0.0))
+        return (assigned, fill), None
+
+    init = (jnp.full((n,), -1, jnp.int32), jnp.zeros((L,), jnp.float32))
+    (assigned, fill), _ = jax.lax.scan(body, init, order)
+    fallback = jnp.argmax(caps - fill).astype(jnp.int32)
+    return jnp.where(assigned < 0, fallback, assigned)
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+def _random(key, pos, weights, cfg: PartitionConfig):
+    # the paper's §5.1 baseline, verbatim from the pre-registry init_abm
+    # line: a permuted round-robin (random but equal-sized). The exact
+    # expression is a seed-compat contract (tests/test_partition.py).
+    n = pos.shape[0]
+    return jax.random.permutation(key, jnp.arange(n) % cfg.n_lp)
+
+
+def _stripe(key, pos, weights, cfg: PartitionConfig):
+    # 1-D informed placement: rank along x (ties by y, then index) and
+    # cut the ranked line into slabs at the shares' cumulative-weight
+    # boundaries. Key unused: the map is a pure function of geometry.
+    n = pos.shape[0]
+    order = jnp.lexsort((jnp.arange(n), pos[:, 1], pos[:, 0]))
+    w_sorted = weights[order]
+    start_w = jnp.cumsum(w_sorted) - w_sorted  # weight strictly before
+    bounds = jnp.cumsum(cfg.share_array()) * weights.sum()
+    lp_sorted = jnp.clip(
+        jnp.searchsorted(bounds, start_w, side="right"), 0, cfg.n_lp - 1)
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        lp_sorted.astype(jnp.int32))
+
+
+def _toroidal_dist2(pos, cent, area):
+    d = jnp.abs(pos[:, None, :] - cent[None, :, :])
+    d = jnp.minimum(d, area - d)
+    return (d ** 2).sum(-1)  # (N, L)
+
+
+def _kmeans(key, pos, weights, cfg: PartitionConfig):
+    # Balanced Lloyd: capacity-constrained toroidal-distance assignment,
+    # circular-mean centroid update (the mean of points on a torus is
+    # the per-axis circular mean — a Euclidean mean would tear blobs
+    # that straddle the wrap seam). Centroids init uniformly from the
+    # key, NOT from data rows, so the map is permutation-equivariant
+    # (a data-seeded init would depend on SE order).
+    L = cfg.n_lp
+    caps = capacity_bounds(cfg, weights.sum())
+    cent = jax.random.uniform(key, (L, 2), maxval=cfg.area)
+    two_pi = 2.0 * jnp.pi
+
+    def lloyd(_, cent):
+        assign = capacity_assign(_toroidal_dist2(pos, cent, cfg.area),
+                                 weights, caps)
+        onehot = (assign[:, None] == jnp.arange(L)[None, :]) \
+            * weights[:, None]  # (N, L)
+        ang = pos * (two_pi / cfg.area)  # (N, 2)
+        s = onehot.T @ jnp.sin(ang)  # (L, 2)
+        c = onehot.T @ jnp.cos(ang)
+        new = (jnp.arctan2(s, c) % two_pi) * (cfg.area / two_pi)
+        # an empty cluster (possible only for tiny N) keeps its centroid
+        return jnp.where(onehot.sum(0)[:, None] > 0, new, cent)
+
+    cent = jax.lax.fori_loop(0, cfg.iters, lloyd, cent)
+    return capacity_assign(_toroidal_dist2(pos, cent, cfg.area),
+                           weights, caps)
+
+
+def _bestresponse(key, pos, weights, cfg: PartitionConfig):
+    # Kurve-style iterative node-level best response on the sampled
+    # interaction graph: the proximity graph at the current positions IS
+    # the expected interaction graph (every in-range SE is a recipient),
+    # so affinity[i, l] = weighted in-range neighbors of i on LP l —
+    # exactly the quantity each SE would keep local by sitting on l.
+    # Each round all SEs respond simultaneously; feasibility (the load
+    # term of Kurve's cost) is enforced by the capacity-constrained
+    # admission (descending affinity) instead of a tuned price. Seeded
+    # from "stripe" so round 0 responds to an informed placement rather
+    # than noise. Key unused: deterministic in the geometry.
+    caps = capacity_bounds(cfg, weights.sum())
+    everyone = jnp.ones((pos.shape[0],), bool)
+
+    def respond(_, lp):
+        aff = neighbors.dense_lp_counts_chunked(
+            pos, lp, everyone, cfg.n_lp, cfg.area,
+            cfg.interaction_range).astype(jnp.float32) * weights[:, None]
+        return capacity_assign(-aff, weights, caps)
+
+    return jax.lax.fori_loop(0, cfg.iters, respond, _stripe(key, pos,
+                                                            weights, cfg))
+
+
+_REGISTRY = {
+    "random": _random,
+    "stripe": _stripe,
+    "kmeans": _kmeans,
+    "bestresponse": _bestresponse,
+}
+
+
+def partition(key, pos, weights, cfg: PartitionConfig):
+    """Dispatch to the configured backend: (key, pos (N, 2),
+    weights (N,), cfg) -> lp (N,) int32. Pure and deterministic — the
+    sharded engine recomputes the identical map on every device."""
+    lp = _REGISTRY[cfg.backend](key, pos,
+                                jnp.asarray(weights, jnp.float32), cfg)
+    return lp.astype(jnp.int32)

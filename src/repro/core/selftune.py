@@ -26,7 +26,7 @@ from typing import List, Optional, Tuple
 
 import jax
 
-from repro.core.costmodel import CostParams, SETUPS, wct
+from repro.core.costmodel import CostParams, SETUPS, wct, wct_env
 from repro.core.engine import EngineConfig, init_engine, run_window
 
 
@@ -42,9 +42,19 @@ class SelfTuneConfig:
     migration_bytes: int = 32
 
 
-def _price(counters, p: CostParams, n_lp: int, n_steps: int,
+def _price(counters, p: CostParams, cfg: EngineConfig, n_steps: int,
            tc: SelfTuneConfig) -> float:
-    return wct(counters, p, n_lp, n_steps,
+    """Window/probe TEC on the objective the run actually executes on:
+    when an ExecutionEnvironment is set, price the per-pair flow
+    counters with `wct_env` (per-LP speeds + link classes) instead of
+    the homogeneous scalar model — an MF that is optimal on homogeneous
+    pricing can be the wrong one on a heterogeneous cluster (tested in
+    tests/test_selftune.py)."""
+    if cfg.env is not None:
+        return wct_env(counters, p, cfg.env, n_steps,
+                       interaction_bytes=tc.interaction_bytes,
+                       migration_bytes=tc.migration_bytes)["TEC"]
+    return wct(counters, p, cfg.abm.n_lp, n_steps,
                interaction_bytes=tc.interaction_bytes,
                migration_bytes=tc.migration_bytes)["TEC"]
 
@@ -57,7 +67,6 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
     (window_index, mf, window_lcr, window_tec_per_step)."""
     total = total_steps or cfg.timesteps
     params = SETUPS[tc.setup]
-    n_lp = cfg.abm.n_lp
     state = init_engine(key, cfg)
     mf = tc.mf0
     step = tc.step0
@@ -70,7 +79,7 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
         # mf rides as a dynamic argument: every window (and every MF the
         # hill descent visits) reuses one compiled window scan
         state, counters = run_window(state, cfg, tc.window, mf=mf)
-        tec = _price(counters, params, n_lp, tc.window, tc) / tc.window
+        tec = _price(counters, params, cfg, tc.window, tc) / tc.window
         history.append((w, mf, counters["mean_lcr"], tec))
         if prev is not None and tec > prev * 1.001:
             direction = -direction  # worse: back off
@@ -95,7 +104,6 @@ def inter_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
     (best_mf, [(mf, tec), ...])."""
     import math
     params = SETUPS[tc.setup]
-    n_lp = cfg.abm.n_lp
     lo, hi = math.log(tc.min_mf), math.log(tc.max_mf)
     gr = (math.sqrt(5) - 1) / 2
     trials = []
@@ -106,7 +114,7 @@ def inter_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
         # compiled scan (a fresh run() per probe would recompile each)
         state = init_engine(jax.random.fold_in(key, i), cfg)
         _, counters = run_window(state, cfg, cfg.timesteps, mf=mf)
-        tec = _price(counters, params, n_lp, cfg.timesteps, tc)
+        tec = _price(counters, params, cfg, cfg.timesteps, tc)
         trials.append((mf, tec))
         return tec
 

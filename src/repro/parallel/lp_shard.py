@@ -58,6 +58,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import balance as bal
 from repro.core import heuristics as heu
 from repro.core import neighbors
+from repro.core import partition as part
 from repro.core.abm import init_abm, mobility_step, rwp_apply, rwp_draws
 
 #: per-SE state rows that migrate with an SE between shards ("mob" is
@@ -358,7 +359,8 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         new_pos, new_wp = rwp_apply(f["pos"], f["waypoint"], my_wp_draw, abm)
         f["pos"] = jnp.where(valid[:, None], new_pos, f["pos"])
         f["waypoint"] = jnp.where(valid[:, None], new_wp, f["waypoint"])
-    else:
+    gid_all = None  # id-order gather, shared by non-RWP mobility + repartition
+    if abm.mobility != "rwp":
         pos_all = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
         mob_all = jax.lax.all_gather(f["mob"], "lp", axis=0, tiled=True)
         gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
@@ -410,13 +412,50 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
     total = flows.sum()
     remote = total - local
 
-    # 4/5. self-clustering: window update + evaluation are row-local;
-    # the balancer's inputs are psum'd so every device sees the same
-    # grants and the per-pair selection stays shard-local (a pair's
-    # candidates all live on the shard owning the source LP)
+    # 4/5. self-clustering + periodic global repartition: window update
+    # + evaluation are row-local; the balancer's inputs are psum'd so
+    # every device sees the same grants and the per-pair selection stays
+    # shard-local (a pair's candidates all live on the shard owning the
+    # source LP)
     migs = jnp.int32(0)
     n_evals = jnp.int32(0)
     mig_flows = jnp.zeros((L, L), jnp.int32)
+    reparts = jnp.int32(0)
+    if cfg.repartition_every > 0:
+        # mirror of engine.step's hook: reconstruct the id-order arrays
+        # from the already-gathered halo buffers, run the *same*
+        # partition function on every device, and take this shard's rows
+        # back — bit-identity with the oracle by construction, like the
+        # mobility models. Only the gid gather (a collective, so it may
+        # not live inside the cond) runs every step, and only when the
+        # non-RWP mobility path has not gathered it already; the
+        # reconstruction + partition math fires on repartition steps.
+        from repro.core.engine import REPART_SALT
+        pcfg = part.from_engine(cfg)
+        if gid_all is None:
+            gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
+        k_rep = jax.random.fold_in(k_move, REPART_SALT)
+        do = (t > 0) & (t % cfg.repartition_every == 0)
+
+        def _recompute():
+            tgt = jnp.where(gid_all >= 0, gid_all, n)  # pads -> dropped
+            pos_n = jnp.zeros((n, 2), f["pos"].dtype).at[tgt].set(
+                pos_g, mode="drop")
+            new_lp_n = part.partition(k_rep, pos_n,
+                                      jnp.ones((n,), jnp.float32), pcfg)
+            return new_lp_n[safe_gid]
+
+        new_lp = jax.lax.cond(do, _recompute, lambda: f["lp"])
+        move = valid & (new_lp != f["lp"]) & (f["pending_dst"] < 0)
+        f["pending_dst"] = jnp.where(move, new_lp, f["pending_dst"])
+        f["pending_eta"] = jnp.where(move, t + cfg.migration_delay,
+                                     f["pending_eta"])
+        f["last_mig"] = jnp.where(move, t, f["last_mig"])
+        reparts = jax.lax.psum(move.sum(), "lp")
+        migs = migs + reparts
+        mig_flows = mig_flows + jax.lax.psum(
+            jnp.zeros((L, L), jnp.int32).at[safe_lp, new_lp].add(
+                move.astype(jnp.int32)), "lp")
     if cfg.gaia_on:
         hstate = {k: f[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
         hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
@@ -442,8 +481,8 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         hstate = dict(hstate,
                       last_mig=jnp.where(admit, t, hstate["last_mig"]))
         f.update(hstate)
-        migs = jax.lax.psum(admit.sum(), "lp")
-        mig_flows = jax.lax.psum(
+        migs = migs + jax.lax.psum(admit.sum(), "lp")
+        mig_flows = mig_flows + jax.lax.psum(
             jnp.zeros((L, L), jnp.int32).at[safe_lp, dest].add(
                 admit.astype(jnp.int32)), "lp")
 
@@ -460,6 +499,7 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
                / jnp.maximum(total.astype(jnp.float32), 1.0),
         "lp_flows": flows,
         "mig_flows": mig_flows,
+        "repartitions": reparts.astype(jnp.float32),
         # mean remote agents a shard actually needs (its halo), as a
         # fraction of all remote agents — GAIA's clustering drives this
         # down; a ragged transport would realize the saving on the wire
@@ -488,8 +528,8 @@ def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
     fields = {k: state[k] for k in _FIELD_SPECS}
     metric_specs = {k: P() for k in
                     ("local_msgs", "remote_msgs", "migrations", "heu_evals",
-                     "lcr", "lp_flows", "mig_flows", "halo_frac",
-                     "shard_overflow")}
+                     "lcr", "lp_flows", "mig_flows", "repartitions",
+                     "halo_frac", "shard_overflow")}
     fn = shard_map(
         partial(_shard_step, cfg=cfg, spec=spec),
         mesh=mesh,

@@ -1,0 +1,261 @@
+"""Partitioning-backend tests (core/partition.py).
+
+Three contracts:
+
+  * seed compatibility — the default `partitioner="random"` reproduces
+    the pre-registry `init_abm` round-robin line bit-identically, so
+    every existing seed (and every earlier benchmark/test expectation)
+    is untouched;
+  * execution-layer parity — each backend, static and with the periodic
+    repartition hook active, is bit-identical between sharding="none"
+    and "lp_device" (the §4.2 transparency invariant extended to the
+    partitioner subsystem);
+  * hypothesis properties — every SE gets exactly one valid LP, per-LP
+    load stays within the declared capacity bound, maps are
+    deterministic for a fixed key, and the geometry-driven backends
+    (stripe/kmeans) are permutation-equivariant.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import partition as part
+from repro.core.abm import ABMConfig, init_abm
+from repro.core.engine import EngineConfig, run
+from repro.core.heuristics import HeuristicConfig
+
+# the property tests (bottom section) need the optional dev dependency
+# `hypothesis`; the seed-compat and sharding-parity contracts must run
+# regardless, so only that section is gated.
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("partition", deadline=None, max_examples=25)
+    settings.load_profile("partition")
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ABM = ABMConfig(n_se=96, n_lp=4, area=1000.0, speed=5.0,
+                interaction_range=80.0, p_interact=0.3)
+ENGINE = EngineConfig(abm=ABM, heuristic=HeuristicConfig(mf=1.2, mt=5),
+                      gaia_on=False, timesteps=18)
+
+
+# ---------------------------------------------------------------------------
+# seed compatibility
+# ---------------------------------------------------------------------------
+
+
+def test_random_default_reproduces_pre_registry_assignment():
+    """The registry's "random" backend must consume its key exactly like
+    the pre-PR hardcoded line: lp = permutation(k3, arange(n) % n_lp)
+    with k3 the third split of the init key. Bit-identical, not just
+    statistically equivalent."""
+    key = jax.random.key(123)
+    st_ = init_abm(key, ABM)
+    _, _, k3 = jax.random.split(key, 3)
+    legacy = jax.random.permutation(k3, jnp.arange(ABM.n_se) % ABM.n_lp)
+    np.testing.assert_array_equal(np.asarray(st_["lp"]), np.asarray(legacy))
+    assert st_["lp"].dtype == jnp.int32
+
+
+def test_random_ignores_geometry():
+    """Same key, different positions -> same map (the baseline must not
+    silently become informed)."""
+    cfg = part.PartitionConfig(backend="random", n_lp=4, area=1000.0)
+    k = jax.random.key(3)
+    w = jnp.ones((64,))
+    p1 = jax.random.uniform(jax.random.key(1), (64, 2), maxval=1000.0)
+    p2 = jax.random.uniform(jax.random.key(2), (64, 2), maxval=1000.0)
+    np.testing.assert_array_equal(np.asarray(part.partition(k, p1, w, cfg)),
+                                  np.asarray(part.partition(k, p2, w, cfg)))
+
+
+# ---------------------------------------------------------------------------
+# execution-layer parity (sharding="none" vs "lp_device")
+# ---------------------------------------------------------------------------
+
+STATE_KEYS = ("pos", "waypoint", "mob", "mob_g", "lp", "pending_dst",
+              "pending_eta", "ring", "ptr", "since_eval", "last_mig")
+SERIES_KEYS = ("local_msgs", "remote_msgs", "migrations", "heu_evals", "lcr",
+               "lp_flows", "mig_flows", "repartitions")
+
+
+@functools.lru_cache(maxsize=None)
+def _run(cfg: EngineConfig, seed=11):
+    return run(jax.random.key(seed), cfg)
+
+
+def _assert_sharding_parity(cfg):
+    st0, s0, c0 = _run(cfg)
+    st1, s1, c1 = _run(dataclasses.replace(cfg, sharding="lp_device",
+                                           n_devices=4))
+    assert c1["shard_overflow"] == 0.0
+    for k in STATE_KEYS:
+        np.testing.assert_array_equal(np.asarray(st0[k]), np.asarray(st1[k]),
+                                      err_msg=k)
+    for k in SERIES_KEYS:
+        np.testing.assert_array_equal(np.asarray(s0[k]), np.asarray(s1[k]),
+                                      err_msg=k)
+
+
+@pytest.mark.parametrize("backend", part.PARTITION_BACKENDS)
+def test_backend_bit_identical_across_sharding(backend):
+    """Static init through each backend: identical states and series on
+    the single-device oracle and the 4-device mesh."""
+    _assert_sharding_parity(dataclasses.replace(
+        ENGINE, abm=dataclasses.replace(ABM, partitioner=backend)))
+
+
+@pytest.mark.parametrize("backend,mobility", [
+    ("kmeans", "rwp"), ("random", "rwp"),
+    # hotspot exercises the sharded hook's other gather path: it reuses
+    # the id-order gid gather the non-RWP mobility branch already did
+    ("kmeans", "hotspot"),
+])
+def test_periodic_repartition_bit_identical_across_sharding(backend,
+                                                            mobility):
+    """The repartition hook recomputes the global map mid-run on every
+    device; the pending/migration path must reshard the deltas into the
+    exact oracle trajectory (and actually fire: repartitions > 0)."""
+    cfg = dataclasses.replace(
+        ENGINE, abm=dataclasses.replace(ABM, partitioner=backend,
+                                        mobility=mobility, n_groups=4,
+                                        group_radius=120.0),
+        repartition_every=6, gaia_on=True)
+    _assert_sharding_parity(cfg)
+    _, _, c = _run(cfg)
+    assert c["repartitions"] > 0
+
+
+def test_repartition_rides_migration_machinery():
+    """Repartition deltas must be *in-flight* migrations, counted in
+    migrations/mig_flows so the cost model prices the state transfer.
+    With repartition_every=6 (partitioner "random": a fresh permutation
+    each time, so deltas are guaranteed) the bulk moves are issued
+    exactly at steps 6 and 12 — never in between — and every issued
+    move appears in the per-pair flow matrix."""
+    cfg = dataclasses.replace(
+        ENGINE, abm=dataclasses.replace(ABM, partitioner="random"),
+        repartition_every=6, timesteps=14)
+    _, series, counters = _run(cfg)
+    reparts = np.asarray(series["repartitions"])
+    migs = np.asarray(series["migrations"])
+    assert (reparts == migs).all()  # gaia_off: all migrations are reparts
+    fired = np.nonzero(reparts)[0].tolist()
+    assert fired == [6, 12], reparts
+    # flow matrix totals match the issued moves (priced by wct_env)
+    mig_flows = np.asarray(series["mig_flows"]).sum(axis=(1, 2))
+    np.testing.assert_array_equal(mig_flows, migs)
+
+
+def test_repartition_applies_after_protocol_delay():
+    """The Fig. 4 in-flight protocol must gate the map change: a delta
+    issued at step 6 with migration_delay=5 becomes active at step 11 —
+    the lp map is untouched on steps 6..10 and changed at 11."""
+    cfg = dataclasses.replace(
+        ENGINE, abm=dataclasses.replace(ABM, partitioner="random"),
+        repartition_every=6, migration_delay=5)
+    from repro.core.engine import init_engine, step
+    step_fn = jax.jit(step, static_argnums=1)
+    st = init_engine(jax.random.key(11), cfg)
+    lp0 = np.asarray(st["lp"])
+    lp_at = {}
+    for t in range(13):
+        st, _ = step_fn(st, cfg)
+        lp_at[t] = np.asarray(st["lp"])
+    for t in range(11):  # map frozen while deltas are in flight
+        np.testing.assert_array_equal(lp_at[t], lp0, err_msg=str(t))
+    assert (lp_at[11] != lp0).any()  # ...and lands at 6 + 5
+
+
+def test_repartition_improves_lcr_on_hotspot():
+    """Sanity of the whole point: on a clustered workload a periodic
+    kmeans repartition must beat the static random map on LCR."""
+    abm = dataclasses.replace(ABM, mobility="hotspot", n_groups=4,
+                              group_radius=120.0)
+    base = dataclasses.replace(ENGINE, abm=abm, timesteps=30)
+    _, _, c_rand = _run(base)
+    _, _, c_km = _run(dataclasses.replace(
+        base, abm=dataclasses.replace(abm, partitioner="kmeans"),
+        repartition_every=10))
+    assert c_km["mean_lcr"] > c_rand["mean_lcr"] + 0.2, (
+        c_km["mean_lcr"], c_rand["mean_lcr"])
+
+
+def test_partitioner_validation():
+    with pytest.raises(ValueError):
+        dataclasses.replace(ABM, partitioner="metis")
+    with pytest.raises(ValueError):
+        part.PartitionConfig(backend="nope")
+    with pytest.raises(ValueError):
+        part.PartitionConfig(shares=(0.5, 0.5), n_lp=4)
+    with pytest.raises(ValueError):
+        dataclasses.replace(ENGINE, repartition_every=-1)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (section gated: `hypothesis` is an optional dev
+# dependency; the contracts above must run without it)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    def _case(draw):
+        n_lp = draw(st.integers(2, 5))
+        n = draw(st.integers(n_lp, 80))
+        seed = draw(st.integers(0, 2**16))
+        backend = draw(st.sampled_from(part.PARTITION_BACKENDS))
+        cfg = part.PartitionConfig(
+            backend=backend, n_lp=n_lp, area=1000.0, interaction_range=120.0,
+            iters=3, imbalance=draw(st.sampled_from([0.0, 0.1])))
+        # positions from a PRNG draw: continuous, collision-free (exact ties
+        # would make greedy tie-breaking order-dependent by design)
+        pos = jax.random.uniform(jax.random.key(seed), (n, 2), maxval=cfg.area)
+        return cfg, jax.random.key(seed + 1), pos, jnp.ones((n,), jnp.float32)
+
+
+    @given(st.data())
+    def test_every_se_gets_exactly_one_valid_lp(data):
+        cfg, key, pos, w = _case(data.draw)
+        lp = np.asarray(part.partition(key, pos, w, cfg))
+        assert lp.shape == (pos.shape[0],)
+        assert ((lp >= 0) & (lp < cfg.n_lp)).all(), (cfg.backend, lp)
+
+
+    @given(st.data())
+    def test_load_within_declared_capacity_bound(data):
+        cfg, key, pos, w = _case(data.draw)
+        lp = np.asarray(part.partition(key, pos, w, cfg))
+        loads = np.bincount(lp, minlength=cfg.n_lp)
+        caps = np.asarray(part.capacity_bounds(cfg, float(w.sum())))
+        assert (loads <= caps).all(), (cfg.backend, loads, caps)
+
+
+    @given(st.data())
+    def test_deterministic_for_fixed_key(data):
+        cfg, key, pos, w = _case(data.draw)
+        a = np.asarray(part.partition(key, pos, w, cfg))
+        b = np.asarray(part.partition(key, pos, w, cfg))
+        np.testing.assert_array_equal(a, b)
+
+
+    @given(st.data())
+    def test_kmeans_stripe_permutation_equivariant(data):
+        """Relabeling the SEs must relabel the map: lp(perm(pos)) ==
+        perm(lp(pos)) for the geometry-only backends (random is a
+        permutation by design; bestresponse's graph sampling shares the
+        greedy core but is exempted only because its affinity ties are
+        integer-valued and genuinely order-broken)."""
+        cfg, key, pos, w = _case(data.draw)
+        cfg = dataclasses.replace(cfg,
+                                  backend=data.draw(st.sampled_from(
+                                      ("stripe", "kmeans"))))
+        perm = np.asarray(jax.random.permutation(
+            jax.random.key(99), jnp.arange(pos.shape[0])))
+        lp1 = np.asarray(part.partition(key, pos, w, cfg))
+        lp2 = np.asarray(part.partition(key, pos[perm], w[perm], cfg))
+        np.testing.assert_array_equal(lp1[perm], lp2, err_msg=cfg.backend)

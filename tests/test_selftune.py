@@ -8,6 +8,7 @@ import dataclasses
 import jax
 import pytest
 
+from repro.core import costmodel as cm
 from repro.core.abm import ABMConfig
 from repro.core.engine import EngineConfig
 from repro.core.heuristics import HeuristicConfig
@@ -54,6 +55,26 @@ def test_inter_run_tuner_finds_low_mf_region():
                                      n_probes=4)
     assert len(trials) == 4
     assert best_mf < 6.0, trials
+
+
+def test_env_pricing_steers_mf_differently():
+    """Regression for `_price` ignoring cfg.env: the tuner must optimize
+    the objective the run executes on. With 2 KiB migration payloads,
+    the homogeneous "distributed" pricing (LAN-cost remote messages)
+    rewards aggressive migration and walks MF down; on a shared-memory
+    environment remote delivery is nearly free, so the same migrations
+    are pure cost and the tuner must back MF off instead. The old code
+    priced both runs identically and picked the LAN answer on shm."""
+    tc = SelfTuneConfig(window=30, mf0=8.0, setup="distributed",
+                        interaction_bytes=1024, migration_bytes=2048)
+    _, h_scalar = intra_run_tune(jax.random.key(0), CFG, tc)
+    cfg_shm = dataclasses.replace(CFG, env=cm.make_env("shm", CFG.abm.n_lp))
+    _, h_shm = intra_run_tune(jax.random.key(0), cfg_shm, tc)
+    # identical engine trajectories (env only reprices), divergent MF:
+    assert h_scalar[-1][1] < 2.0, h_scalar  # LAN pricing: migrate hard
+    assert h_shm[-1][1] > tc.mf0, h_shm  # shm pricing: back off
+    # and the priced windows really differ (wct_env was actually used)
+    assert h_shm[0][3] < h_scalar[0][3]
 
 
 @pytest.mark.slow
