@@ -5,17 +5,26 @@ sized for a 16-core Xeon; this container is one CPU core, so every
 experiment has a `scale` knob: "quick" (CI-sized, minutes) and "paper"
 (the published parameters). Trends — not absolute seconds — are the
 reproduction target either way; see DESIGN.md §Deviations.
+
+Replicas: every performance claim in the paper is a statement about the
+*expected* behaviour of a stochastic simulation, so the statistical
+experiments take a `replicas` count (CLI `--replicas`; default 5 in
+quick mode, 10 at mid/paper scale). The R seeds run in ONE batched
+device pass (`engine.run_batch`, vmap over the seed axis — replica r is
+bit-identical to a sequential run on seed r), and every reported metric
+carries mean/std/ci95/n (src/repro/core/stats.py).
 """
 from __future__ import annotations
 
+import copy
+import functools
 import os
 import time
 
-import jax
-
 from repro.core.abm import ABMConfig
-from repro.core.engine import EngineConfig, run
+from repro.core.engine import EngineConfig, run_batch
 from repro.core.heuristics import HeuristicConfig
+from repro.core.stats import replica_stats, summarize
 
 RESULTS = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results", "paper")
@@ -27,6 +36,16 @@ SCALES = {
     "mid": dict(n_se=3000, timesteps=900, area=5477.0),
     "paper": dict(n_se=10_000, timesteps=3600, area=10_000.0),
 }
+
+#: default replica counts per scale (n >= 3 in CI, which passes
+#: --replicas 3 explicitly to bound the nightly budget). "full" is
+#: exp6/exp7/exp8's name for their paper-sized sweep.
+DEFAULT_REPLICAS = {"quick": 5, "mid": 10, "paper": 10, "full": 10}
+
+
+def default_replicas(scale: str, override=None) -> int:
+    """CLI --replicas override, else the per-scale default."""
+    return int(override) if override else DEFAULT_REPLICAS.get(scale, 5)
 
 
 def engine_cfg(scale: str, *, n_lp=4, speed=11.0, rng=250.0, pi=0.2,
@@ -50,11 +69,55 @@ def engine_cfg(scale: str, *, n_lp=4, speed=11.0, rng=250.0, pi=0.2,
     )
 
 
-def run_cfg(cfg, seed=0):
+@functools.lru_cache(maxsize=None)
+def _batch_counters(cfg: EngineConfig, seeds: tuple):
+    """Hoisted cross-benchmark run cache: one batched engine run per
+    distinct (config, seed-vector) per process. exp1's speed x MF grid
+    overlaps tables23's MF sweep, and tables23 re-prices the same run
+    across 9 (interaction, migration)-size combinations — pricing is
+    cost-model arithmetic and must never re-run the engine. run_cfg
+    deep-copies on the way out, so callers can never corrupt the
+    cached counters."""
+    _, _, reps = run_batch(cfg, seeds)
+    return reps
+
+
+def run_cfg(cfg: EngineConfig, seed=0, replicas=1):
+    """Run `replicas` consecutive seeds (seed..seed+R-1) in one batched
+    pass. Returns a counters dict carrying
+
+      * the replica-*mean* at every scalar metric key (trend code keeps
+        reading c["mean_lcr"] / c["migrations"]),
+      * "stats": {metric: {mean, std, ci95, n}} (the BENCH schema),
+      * "reps": the per-replica counter dicts (matrix flow counters
+        included — price each replica, then aggregate the prices),
+      * "wall_s": wall time of this call (0 on a cache hit).
+    """
     t0 = time.time()
-    _, series, counters = run(jax.random.key(seed), cfg)
-    counters["wall_s"] = time.time() - t0
-    return counters
+    # deep copy: the cache's dicts are shared across benchmarks, and a
+    # caller annotating/rounding a counters dict in place must corrupt
+    # its own copy, never a later cache hit
+    reps = copy.deepcopy(
+        _batch_counters(cfg, tuple(range(seed, seed + replicas))))
+    stats = summarize(reps)
+    out = {k: v["mean"] for k, v in stats.items()}
+    out["stats"] = stats
+    out["reps"] = reps
+    out["wall_s"] = time.time() - t0
+    return out
+
+
+def paired_stats(a_reps, b_reps, fn):
+    """Stats of a per-replica *paired* derived metric: fn(a_r, b_r) per
+    seed (e.g. dLCR or TEC gain ON vs OFF on the same seed) — pairing
+    removes the between-seed variance the unpaired difference would
+    carry."""
+    return replica_stats([fn(a, b) for a, b in zip(a_reps, b_reps)])
+
+
+def fmt_stat(st: dict, nd: int = 3) -> str:
+    """'mean±ci95 (n=N)' log formatting for a stats dict."""
+    return f"{st['mean']:.{nd}f}±{st['ci95']:.{nd}f}(n={st['n']})"
 
 
 def write_csv(name: str, header: str, rows):

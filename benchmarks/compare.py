@@ -6,25 +6,42 @@ over a same-machine oracle, overhead factors, halo fractions, TEC gain
 fractions) rather than absolute seconds: the baselines were recorded on
 one box and the nightly job runs on whatever runner GitHub hands out,
 so wall-clock numbers would flap while ratios only move when the code's
-behavior moves. A tracked metric may regress at most its tolerance
-relative to its baseline before the gate fails: REL_TOL (20%) for the
-counter-derived metrics, which are deterministic given the code, and
-TIMING_TOL (60%) for the two ratios that divide one *measured time* by
-another — same-machine ratios still shift with CPU generation and rep
-noise, so their gate only catches structural regressions (e.g. the
-grid path degenerating toward dense), not jitter.
+behavior moves.
 
-Used by the nightly CI job after the quick-mode exp4/exp5/exp6 runs,
-and runnable locally:
+Two layers decide a regression:
+
+  1. **Tolerance** (the legacy rule): a tracked metric may move at most
+     its tolerance in the worsening direction relative to its baseline
+     mean — REL_TOL (20%) for counter-derived metrics, TIMING_TOL (60%)
+     for the two ratios that divide one *measured time* by another.
+  2. **Interval separation** (the replica-aware rule): metrics in the
+     mean/std/ci95/n schema (benchmarks emit them since the batched-
+     replica engine; see src/repro/core/stats.py) only FAIL when, in
+     addition, the 95% confidence intervals of baseline and candidate
+     do not overlap: |Δmean| > ci95_base + ci95_cur. A worsened mean
+     inside overlapping intervals is reported as "ok (within noise)" —
+     single-seed point estimates could not make that distinction, which
+     is exactly how seed luck used to masquerade as a regression.
+
+Legacy point-estimate metrics (plain floats) have zero-width intervals,
+so rule 2 degenerates to rule 1. An *old-schema baseline* compared
+against a new-schema current value still works (means compared, the
+baseline interval taken as zero-width) but emits a DeprecationWarning:
+refresh BENCH_baseline/ to the stats schema in the PR that migrates the
+benchmark.
+
+Used by the nightly CI job after the quick-mode exp4..exp8 runs
+(--replicas 3: every statistical metric carries n >= 3), and runnable
+locally:
 
     PYTHONPATH=src python -m benchmarks.run --scale quick \
-        --only exp4,exp5,exp6
+        --only exp4,exp5,exp6,exp7,exp8 --replicas 3
     python benchmarks/compare.py
 
 Refreshing baselines after an intentional change:
 
     cp BENCH_proximity.json BENCH_sharded.json BENCH_scenarios.json \
-        BENCH_baseline/
+        BENCH_partition.json BENCH_replicas.json BENCH_baseline/
 """
 from __future__ import annotations
 
@@ -32,6 +49,7 @@ import argparse
 import json
 import os
 import sys
+import warnings
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 REL_TOL = 0.20  # counter-derived metrics: deterministic given the code
@@ -40,7 +58,8 @@ ABS_TOL = 0.05  # slack when the baseline is ~zero
 
 #: file -> {dotted.metric.path: (direction, tolerance)} with direction
 #: "higher" | "lower" ("higher" = larger is better; the gate fires on
-#: the *worsening* direction only)
+#: the *worsening* direction only). A path may resolve to a plain float
+#: (legacy) or a mean/std/ci95/n stats dict (replica schema).
 TRACKED = {
     "BENCH_proximity.json": {
         "grid_speedup_over_dense.10000": ("higher", TIMING_TOL),
@@ -70,6 +89,13 @@ TRACKED = {
         "gate.gaia_vs_best_static.hotspot": ("lower", REL_TOL),
         "gate.gaia_vs_best_static.group": ("lower", REL_TOL),
     },
+    # exp8: loop_ratio (batch vs the sequential seed loop) is a
+    # time/time ratio; the engine metrics are stats dicts, so their
+    # gate runs the interval-separation rule
+    "BENCH_replicas.json": {
+        "loop_ratio": ("lower", TIMING_TOL),
+        "metrics.mean_lcr": ("higher", REL_TOL),
+    },
 }
 
 
@@ -81,16 +107,49 @@ def dig(obj, path: str):
     return obj
 
 
-def check_metric(direction: str, tol: float, cur: float, base: float):
-    """Returns (ok, bound) for cur against base in the given direction."""
-    if abs(base) < 1e-9:
+def as_stats(v):
+    """Normalize a tracked value to (mean, ci95, is_legacy): a
+    mean/std/ci95/n stats dict passes through; a plain number becomes a
+    zero-width interval (the legacy point-estimate behaviour).
+
+    The detection rule (all four schema keys present) mirrors
+    `repro.core.stats.is_stats`, re-stated here because this gate must
+    run without PYTHONPATH=src (keep the two in sync). Anything else —
+    a partial dict, a nested result block — raises via float(), which
+    is the desired loud failure for a mis-pointed TRACKED path."""
+    if isinstance(v, dict) and {"mean", "std", "ci95", "n"} <= set(v):
+        return float(v["mean"]), float(v["ci95"]), False
+    return float(v), 0.0, True
+
+
+def check_metric(direction: str, tol: float, cur, base):
+    """Returns (ok, bound, note) for cur against base in the given
+    direction. A metric FAILS only if the candidate mean is beyond the
+    tolerance bound AND the 95% confidence intervals separate
+    (|Δmean| > ci95_cur + ci95_base); point estimates have zero-width
+    intervals, so legacy metrics keep the pure-tolerance rule."""
+    cur_m, cur_ci, _ = as_stats(cur)
+    base_m, base_ci, _ = as_stats(base)
+    if abs(base_m) < 1e-9:
         bound = -ABS_TOL if direction == "higher" else ABS_TOL
     elif direction == "higher":
-        bound = base - abs(base) * tol
+        bound = base_m - abs(base_m) * tol
     else:
-        bound = base + abs(base) * tol
-    ok = cur >= bound if direction == "higher" else cur <= bound
-    return ok, bound
+        bound = base_m + abs(base_m) * tol
+    beyond = not (cur_m >= bound if direction == "higher"
+                  else cur_m <= bound)
+    separated = abs(cur_m - base_m) > (cur_ci + base_ci)
+    note = ""
+    if beyond and not separated:
+        note = (" [within noise: CIs overlap, "
+                f"|Δ|={abs(cur_m - base_m):.4g} <= "
+                f"{cur_ci + base_ci:.4g}]")
+    return (not beyond) or (not separated), bound, note
+
+
+def _fmt(v):
+    m, ci, legacy = as_stats(v)
+    return f"{m:.4g}" if legacy or ci == 0.0 else f"{m:.4g}±{ci:.4g}"
 
 
 def compare_file(cur_path: str, base_path: str, metrics: dict):
@@ -110,6 +169,7 @@ def compare_file(cur_path: str, base_path: str, metrics: dict):
         cur_doc = json.load(f)
     with open(base_path) as f:
         base_doc = json.load(f)
+    warned_legacy = False
     for path, (direction, tol) in metrics.items():
         base = dig(base_doc, path)
         cur = dig(cur_doc, path)
@@ -120,10 +180,20 @@ def compare_file(cur_path: str, base_path: str, metrics: dict):
         if cur is None:
             yield f"{name}:{path}", "fail", "metric missing from current run"
             continue
-        ok, bound = check_metric(direction, tol, float(cur), float(base))
+        base_legacy = as_stats(base)[2]
+        cur_legacy = as_stats(cur)[2]
+        if base_legacy and not cur_legacy and not warned_legacy:
+            warnings.warn(
+                f"{name}: baseline for {path} is an old-schema point "
+                "estimate but the current run reports mean/std/ci95/n — "
+                "comparing means with a zero-width baseline interval; "
+                "refresh BENCH_baseline/ to the stats schema",
+                DeprecationWarning, stacklevel=2)
+            warned_legacy = True
+        ok, bound, note = check_metric(direction, tol, cur, base)
         word = ">=" if direction == "higher" else "<="
-        msg = (f"{float(cur):.4g} (baseline {float(base):.4g}, "
-               f"needs {word} {bound:.4g})")
+        msg = (f"{_fmt(cur)} (baseline {_fmt(base)}, "
+               f"needs {word} {bound:.4g}){note}")
         yield f"{name}:{path}", "ok" if ok else "fail", msg
 
 
@@ -131,7 +201,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail if any tracked benchmark metric regressed "
                     f">{REL_TOL:.0%} (counters) / >{TIMING_TOL:.0%} "
-                    "(timing ratios) vs the committed baseline")
+                    "(timing ratios) vs the committed baseline AND the "
+                    "95% confidence intervals separate")
     ap.add_argument("--baseline-dir",
                     default=os.path.join(REPO, "BENCH_baseline"))
     ap.add_argument("--current-dir", default=REPO)

@@ -5,7 +5,7 @@ also bounds compiler memory).
 Usage: PYTHONPATH=src python benchmarks/dryrun_all.py [--mesh single multi]
 Writes results/dryrun/<arch>_<shape>_<mesh>.json and a campaign log.
 
-`--bench exp4 exp5 exp6 exp7` additionally runs the named quick-mode
+`--bench exp4 exp5 exp6 exp7 exp8` additionally runs the named quick-mode
 engine benchmarks (the BENCH_*.json producers, see benchmarks/run.py)
 each in its own subprocess before the dry-run cells — the same
 isolation rationale: every cell/bench gets a fresh XLA, and one OOM or
@@ -38,7 +38,7 @@ def main():
                          "(writes *_comp.json; §Roofline table input)")
     ap.add_argument("--bench", nargs="*", default=[],
                     help="quick-mode engine benchmarks to run first, each "
-                         "in a fresh subprocess (e.g. exp4 exp5 exp6 exp7)")
+                         "in a fresh subprocess (e.g. exp4 exp5 exp6 exp7 exp8)")
     args = ap.parse_args()
 
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))

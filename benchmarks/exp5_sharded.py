@@ -76,15 +76,20 @@ jax.block_until_ready(st2)
 st2, series = scan(st2)
 jax.block_until_ready(st2)
 # min over repetitions: the container's CPU share swings ~2x with
-# neighbor load, and min is the standard noise-robust estimator
-best = float("inf")
+# neighbor load, and min is the standard noise-robust estimator for the
+# ratio gates; the full rep distribution is also reported as
+# mean/std/ci95/n (the BENCH schema)
+from repro.core.stats import replica_stats
+times = []
 for _ in range(3):
     t0 = time.time()
     st2, series = scan(st2)
     jax.block_until_ready(st2)
-    best = min(best, (time.time() - t0) / steps)
-dt = best
+    times.append((time.time() - t0) / steps)
+dt = min(times)
 out = dict(mode=mode, n_dev=n_dev, n_se=n_se, per_step_s=round(dt, 4),
+           per_step_stats={{k: round(v, 4)
+                            for k, v in replica_stats(times).items()}},
            devices=len(jax.devices()))
 if mode == "lp_device":
     out["slots_per_dev"] = spec.cap

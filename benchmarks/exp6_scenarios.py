@@ -11,17 +11,23 @@ per-LP-pair cost layer, and records everything in BENCH_scenarios.json
 at the repo root (uploaded as a CI artifact and tracked by the
 bench-regression gate, benchmarks/compare.py).
 
-One engine run per (scenario, gaia) serves all environments: counters
+Each (scenario, gaia) cell runs `--replicas` seeds in ONE batched
+engine pass (engine.run_batch) and serves all environments: counters
 are environment-independent; only the *pricing* changes (that is the
-point of the §3 cost layer).
+point of the §3 cost layer). Every reported metric is a
+mean/std/ci95/n stats dict (src/repro/core/stats.py); TEC gains are
+paired per seed (ON and OFF run the same seeds).
 
-Acceptance gate: on the LAN environment GAIA must reduce TEC vs static
-partitioning on >= 2 of the 3 non-uniform scenarios, and no run may
-overflow the proximity grid (the clustered auto-capacity must hold).
+Acceptance gate: on the LAN environment GAIA must reduce mean TEC vs
+static partitioning on >= 2 of the 3 non-uniform scenarios, and no
+replica may overflow the proximity grid (the clustered auto-capacity
+must hold).
 
     PYTHONPATH=src python benchmarks/exp6_scenarios.py [quick|full]
+                                                       [--replicas R]
 
-quick: N=1000, 300 steps (CI-sized). full: N=10000, 1200 steps.
+quick: N=1000, 300 steps (CI-sized), 5 replicas default. full:
+N=10000, 1200 steps, 10 replicas default.
 """
 from __future__ import annotations
 
@@ -30,13 +36,18 @@ import os
 import sys
 import time
 
-import jax
-import numpy as np
+if __package__ in (None, ""):  # script invocation: python benchmarks/...
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
-from repro.core import costmodel as cm
-from repro.core.abm import ABMConfig
-from repro.core.engine import EngineConfig, run
-from repro.core.heuristics import HeuristicConfig
+import numpy as np  # noqa: E402
+
+from benchmarks.common import default_replicas  # noqa: E402
+from repro.core import costmodel as cm  # noqa: E402
+from repro.core.abm import ABMConfig  # noqa: E402
+from repro.core.engine import EngineConfig, run_batch  # noqa: E402
+from repro.core.heuristics import HeuristicConfig  # noqa: E402
+from repro.core.stats import replica_stats, summarize  # noqa: E402
 
 OUT = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_scenarios.json")
@@ -67,13 +78,14 @@ def scenario_cfg(scale: str, mobility: str, gaia: bool) -> EngineConfig:
         gaia_on=gaia, timesteps=s["timesteps"])
 
 
-def density_stats(state, cfg: EngineConfig) -> dict:
+def density_stats(pos, cfg: EngineConfig) -> dict:
     """How non-uniform did the workload actually get? Peak cell
-    occupancy over the uniform mean (1.0 = perfectly uniform)."""
+    occupancy over the uniform mean (1.0 = perfectly uniform), on one
+    replica's final positions."""
     spec = cfg.abm.grid_spec()
     if spec is None:
         return {}
-    pos = np.asarray(state["pos"])
+    pos = np.asarray(pos)
     cell = (np.floor(pos[:, 0] / spec.cell).astype(int)
             % spec.ncell) * spec.ncell + \
         (np.floor(pos[:, 1] / spec.cell).astype(int) % spec.ncell)
@@ -83,50 +95,62 @@ def density_stats(state, cfg: EngineConfig) -> dict:
             "grid_capacity": spec.capacity}
 
 
-def main(scale: str = "quick"):
+def main(scale: str = "quick", replicas=None):
     s = SCALES[scale]
+    n_rep = default_replicas(scale, replicas)
+    seeds = list(range(n_rep))
     envs = {kind: cm.make_env(kind, N_LP) for kind in ENVS}
     rows = []
     for scen in SCENARIOS:
-        row = {"scenario": scen}
-        counters = {}
+        row = {"scenario": scen, "n": n_rep}
+        reps_by_gaia = {}
         for gaia in (True, False):
             cfg = scenario_cfg(scale, scen, gaia)
             t0 = time.time()
-            st, _, c = run(jax.random.key(0), cfg)
-            c["wall_s"] = round(time.time() - t0, 1)
-            counters[gaia] = c
+            states, _, reps = run_batch(cfg, seeds)
+            reps_by_gaia[gaia] = reps
             tag = "on" if gaia else "off"
-            row[f"lcr_{tag}"] = round(c["mean_lcr"], 4)
-            row[f"grid_overflow_{tag}"] = c["grid_overflow"]
+            row[f"wall_s_{tag}"] = round(time.time() - t0, 1)
+            st = summarize(reps, ndigits=4)
+            row[f"lcr_{tag}"] = st["mean_lcr"]
+            row[f"grid_overflow_{tag}"] = sum(r["grid_overflow"]
+                                              for r in reps)
             if gaia:
-                row["migrations"] = c["migrations"]
-                row.update(density_stats(st, cfg))
+                row["migrations"] = st["migrations"]
+                row.update(density_stats(states["pos"][0], cfg))
         row["tec"] = {}
         for kind, env in envs.items():
-            tec = {}
+            per_rep = {}
             for gaia in (True, False):
-                tec["on" if gaia else "off"] = cm.wct_env(
-                    counters[gaia], cm.DISTRIBUTED, env, s["timesteps"],
-                    interaction_bytes=INTERACTION_BYTES,
-                    migration_bytes=MIGRATION_BYTES)["TEC"]
+                per_rep["on" if gaia else "off"] = [
+                    cm.wct_env(r, cm.DISTRIBUTED, env, s["timesteps"],
+                               interaction_bytes=INTERACTION_BYTES,
+                               migration_bytes=MIGRATION_BYTES)["TEC"]
+                    for r in reps_by_gaia[gaia]]
+            gain = replica_stats([(off - on) / off for on, off in
+                                  zip(per_rep["on"], per_rep["off"])])
             row["tec"][kind] = {
-                "on": round(tec["on"], 3), "off": round(tec["off"], 3),
-                "gain": round((tec["off"] - tec["on"]) / tec["off"], 4),
+                "on": {k: round(v, 3) for k, v
+                       in replica_stats(per_rep["on"]).items()},
+                "off": {k: round(v, 3) for k, v
+                        in replica_stats(per_rep["off"]).items()},
+                "gain": {k: round(v, 4) for k, v in gain.items()},
             }
         rows.append(row)
         g = row["tec"][GATE_ENV]["gain"]
-        print(f"[exp6] {scen:8s} lcr {row['lcr_off']:.3f} -> "
-              f"{row['lcr_on']:.3f}  peak-density "
+        print(f"[exp6] {scen:8s} lcr {row['lcr_off']['mean']:.3f} -> "
+              f"{row['lcr_on']['mean']:.3f}  peak-density "
               f"{row.get('peak_cell_over_uniform', '-')}x  "
-              f"TEC({GATE_ENV}) gain {g:+.1%}")
+              f"TEC({GATE_ENV}) gain {g['mean']:+.1%}±{g['ci95']:.1%} "
+              f"(n={n_rep})")
 
     wins = [r["scenario"] for r in rows
             if r["scenario"] in NEW_SCENARIOS
-            and r["tec"][GATE_ENV]["gain"] > 0]
+            and r["tec"][GATE_ENV]["gain"]["mean"] > 0]
     result = {
         "experiment": "exp6_scenarios",
         "config": dict(SCALES[scale], n_lp=N_LP, scale=scale,
+                       replicas=n_rep,
                        interaction_bytes=INTERACTION_BYTES,
                        migration_bytes=MIGRATION_BYTES,
                        gate_env=GATE_ENV),
@@ -134,7 +158,9 @@ def main(scale: str = "quick"):
         "gate": {
             "gaia_wins_on": wins,
             "n_new_scenarios_gaia_wins": len(wins),
-            # machine-independent gains tracked by benchmarks/compare.py
+            # machine-independent paired gains (mean/std/ci95/n stats
+            # dicts) tracked by benchmarks/compare.py, which fails only
+            # when the baseline and candidate intervals separate
             "tec_gain_by_scenario": {
                 r["scenario"]: r["tec"][GATE_ENV]["gain"] for r in rows},
         },
@@ -148,9 +174,15 @@ def main(scale: str = "quick"):
     assert len(wins) >= 2, \
         f"GAIA won TEC({GATE_ENV}) only on {wins}; need >= 2 of " \
         f"{NEW_SCENARIOS}"
-    print(f"[exp6] OK (GAIA wins on {wins}) -> {OUT}")
+    print(f"[exp6] OK (GAIA wins on {wins}, n={n_rep}) -> {OUT}")
     return result
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "quick")
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("scale", nargs="?", default="quick",
+                    choices=["quick", "full"])
+    ap.add_argument("--replicas", type=int, default=None)
+    a = ap.parse_args()
+    main(a.scale, a.replicas)

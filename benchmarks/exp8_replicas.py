@@ -1,0 +1,142 @@
+"""Experiment 8 (beyond-paper): batched-replica engine throughput.
+
+The enabling claim behind the mean/std/ci95/n BENCH schema is that
+replicas are cheap: `engine.run_batch` vmaps R seeds through one jitted
+scan, so the marginal replica should cost far less than a sequential
+run. This bench measures it on the quick config and records the two
+ratios that matter:
+
+  batch_overhead   t_batch / t_single — the ISSUE-5 acceptance target
+                   (< 3x one sequential run at R=8), which presumes an
+                   accelerator's parallel width: R replicas are R x the
+                   flops, so a CPU with a couple of cores has a hard
+                   floor near R x (measured honestly, not gated
+                   dishonestly — see DESIGN.md §Deviations).
+  loop_ratio       t_batch / (R * t_single) — batch vs the sequential
+                   seed loop it replaces. This is the invariant any
+                   hardware can and must hold: batching replicas never
+                   loses throughput against running them one by one.
+
+The hard gate is therefore platform-aware: on accelerators
+(jax.default_backend() != "cpu") batch_overhead < 3.0; on CPU
+loop_ratio < LOOP_TOL. Both numbers land in BENCH_replicas.json either way
+(CI artifact; tracked by benchmarks/compare.py — `metrics.*` are stats
+dicts, so the gate's interval-separation rule applies to them).
+
+Timing protocol: both paths are warmed first (compilation excluded —
+the memoized scans are config-keyed, so the timed calls only execute),
+the sequential reference is the min over 3 single-seed runs, and the
+batch runs the same R seeds the sequential path ran.
+
+    PYTHONPATH=src python benchmarks/exp8_replicas.py [quick|full]
+                                                      [--replicas R]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):  # script invocation: python benchmarks/...
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+import jax  # noqa: E402
+
+from benchmarks.common import engine_cfg  # noqa: E402
+from repro.core.engine import run, run_batch  # noqa: E402
+from repro.core.stats import replica_stats, summarize  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_replicas.json")
+
+MAX_OVERHEAD = 3.0  # accelerator gate: batch of R vs ONE sequential run
+# cpu gate: batch vs the R-run sequential loop. The margin covers the
+# batch's un-batched prologue (per-replica eager init — kept eager on
+# purpose: a fused jitted init drifts ULPs off the sequential path and
+# would break bit-identity) plus 2-core scheduling jitter.
+LOOP_TOL = 1.25
+SEQ_REPS = 3  # sequential reference: min over this many runs
+BENCH_SCALE = {"quick": "quick", "full": "mid"}  # full stays CPU-sized
+
+
+def main(scale: str = "quick", replicas=None):
+    n_rep = int(replicas) if replicas else 8
+    cfg = engine_cfg(BENCH_SCALE[scale])
+    seeds = list(range(n_rep))
+
+    # warm both compiled scans (config-keyed memoization: the timed
+    # calls below reuse these executables)
+    run(jax.random.key(10_000), cfg)
+    run_batch(cfg, seeds)
+
+    seq_times = []
+    for s in seeds[:SEQ_REPS]:
+        t0 = time.time()
+        run(jax.random.key(s), cfg)
+        seq_times.append(time.time() - t0)
+    t_single = min(seq_times)
+
+    # min over the same number of repetitions as the sequential side:
+    # the container's CPU share swings with neighbor load, and an
+    # asymmetric single-shot batch timing against a min-of-3 reference
+    # would flake the nightly gate on share dips, not regressions
+    batch_times = []
+    for _ in range(SEQ_REPS):
+        t0 = time.time()
+        _, _, reps = run_batch(cfg, seeds)
+        batch_times.append(time.time() - t0)
+    t_batch = min(batch_times)
+
+    overhead = t_batch / t_single
+    loop_ratio = t_batch / (n_rep * t_single)
+    on_cpu = jax.default_backend() == "cpu"
+    gate_name, gate_val, gate_bound = (
+        ("loop_ratio", loop_ratio, LOOP_TOL) if on_cpu
+        else ("batch_overhead", overhead, MAX_OVERHEAD))
+    metrics = summarize(reps, keys=("mean_lcr", "migrations", "heu_evals"),
+                        ndigits=4)
+    print(f"[exp8] single run {t_single:.2f}s (min of {SEQ_REPS}), "
+          f"batch R={n_rep} {t_batch:.2f}s -> {overhead:.2f}x one run, "
+          f"{loop_ratio:.2f}x the sequential loop")
+    print(f"[exp8] mean_lcr {metrics['mean_lcr']['mean']:.4f}"
+          f"±{metrics['mean_lcr']['ci95']:.4f} (n={n_rep})")
+
+    result = {
+        "experiment": "exp8_replicas",
+        "config": dict(scale=scale, bench_scale=BENCH_SCALE[scale],
+                       n_se=cfg.abm.n_se, timesteps=cfg.timesteps,
+                       n_lp=cfg.abm.n_lp, replicas=n_rep,
+                       seq_reps=SEQ_REPS,
+                       backend=jax.default_backend()),
+        "t_single_s": round(t_single, 3),
+        "seq_times_s": [round(t, 3) for t in seq_times],
+        "t_batch_s": round(t_batch, 3),
+        "batch_times_s": [round(t, 3) for t in batch_times],
+        "batch_overhead": round(overhead, 3),
+        "batch_overhead_target": MAX_OVERHEAD,
+        "batch_overhead_met": overhead < MAX_OVERHEAD,
+        "loop_ratio": round(loop_ratio, 3),
+        "metrics": metrics,
+        "gate": {"name": gate_name, "value": round(gate_val, 3),
+                 "bound": gate_bound,
+                 "timing": {k: round(v, 3) for k, v in
+                            replica_stats(seq_times).items()}},
+    }
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    assert gate_val < gate_bound, \
+        (f"batched R={n_rep} replicas: {gate_name}={gate_val:.2f} "
+         f"(gate: < {gate_bound})")
+    print(f"[exp8] OK ({gate_name} {gate_val:.2f} < {gate_bound}) -> {OUT}")
+    return result
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("scale", nargs="?", default="quick",
+                    choices=["quick", "full"])
+    ap.add_argument("--replicas", type=int, default=None)
+    a = ap.parse_args()
+    main(a.scale, a.replicas)

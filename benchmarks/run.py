@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--scale quick|mid|paper]
                                             [--only exp1,exp2,...]
+                                            [--replicas R]
 
 Experiments (see DESIGN.md §Per-experiment index):
     exp1      Fig. 5  — LCR & migrations vs. speed x MF
@@ -13,9 +14,17 @@ Experiments (see DESIGN.md §Per-experiment index):
               (BENCH_scenarios)
     exp7      beyond-paper: partitioning backends vs adaptive GAIA
               (BENCH_partition)
+    exp8      beyond-paper: batched-replica engine throughput
+              (BENCH_replicas)
     tables23  Tables 2-3 + Figs. 8-9 — ΔWCT via the calibrated cost model
     gaiamoe   beyond-paper: adaptive MoE expert placement traffic
     roofline  assemble the §Roofline table from results/dryrun
+
+`--replicas` sets the replica count for the statistical experiments
+(exp1/2/3/6/7, tables23 — and the batch size of exp8); the default is 5
+in quick mode and 10 at mid/paper scale. Replicas run in one batched
+device pass (engine.run_batch) and every reported metric carries
+mean/std/ci95/n (see README §Benchmarks).
 
 The dry-run campaign itself (benchmarks/dryrun_all.py) is run separately
 (it spawns one 512-device subprocess per cell).
@@ -33,23 +42,28 @@ def main() -> int:
     ap.add_argument("--scale", default="quick",
                     choices=["quick", "mid", "paper"])
     ap.add_argument("--only", default="")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="replica count for the statistical experiments "
+                         "(default: 5 quick, 10 mid/paper)")
     args = ap.parse_args()
 
     from benchmarks import (exp1_speed, exp2_lps, exp3_range, exp4_scaling,
                             exp5_sharded, exp6_scenarios, exp7_partition,
-                            tables23, gaia_moe_bench, roofline,
-                            selftune_bench)
-    # exp4..exp7 expose quick|full: paper-scale maps to their full sweep
+                            exp8_replicas, tables23, gaia_moe_bench,
+                            roofline, selftune_bench)
+    # exp4..exp8 expose quick|full: paper-scale maps to their full sweep
     qf = "quick" if args.scale == "quick" else "full"
+    rep = args.replicas
     benches = {
-        "exp1": lambda: exp1_speed.main(args.scale),
-        "exp2": lambda: exp2_lps.main(args.scale),
-        "exp3": lambda: exp3_range.main(args.scale),
+        "exp1": lambda: exp1_speed.main(args.scale, rep),
+        "exp2": lambda: exp2_lps.main(args.scale, rep),
+        "exp3": lambda: exp3_range.main(args.scale, rep),
         "exp4": lambda: exp4_scaling.main(qf),
         "exp5": lambda: exp5_sharded.main(qf),
-        "exp6": lambda: exp6_scenarios.main(qf),
-        "exp7": lambda: exp7_partition.main(qf),
-        "tables23": lambda: tables23.main(args.scale),
+        "exp6": lambda: exp6_scenarios.main(qf, rep),
+        "exp7": lambda: exp7_partition.main(qf, rep),
+        "exp8": lambda: exp8_replicas.main(qf, rep),
+        "tables23": lambda: tables23.main(args.scale, rep),
         "gaiamoe": lambda: gaia_moe_bench.main(args.scale),
         "selftune": lambda: selftune_bench.main(args.scale),
         "roofline": lambda: roofline.main(),

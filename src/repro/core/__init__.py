@@ -16,7 +16,10 @@ Paper -> module map (see README.md for the full table):
 - costmodel: the paper's TEC/MigC cost analysis, §3 Eqs. 1-6, plus the
   heterogeneous ExecutionEnvironment pricing layer (per-LP speeds +
   pairwise shm/lan/wan link classes)
-- selftune: intra-run heuristic re-parameterization, §5.5
+- selftune: intra-run heuristic re-parameterization, §5.5 (solo and
+  batched per-replica tuners)
+- stats: replica statistics — the mean/std/ci95/n schema every
+  benchmark metric carries (§5: repeated trials behind every number)
 - gaia_moe: the technique adapted to MoE expert placement (beyond-paper)
 """
 from repro.core.abm import (ABMConfig, MOBILITY_MODELS,  # noqa: F401
@@ -24,7 +27,9 @@ from repro.core.abm import (ABMConfig, MOBILITY_MODELS,  # noqa: F401
 from repro.core.costmodel import (DISTRIBUTED, PARALLEL, SETUPS,  # noqa: F401
                                   CostParams, ExecutionEnvironment,
                                   make_env, wct, wct_env)
-from repro.core.engine import EngineConfig, run  # noqa: F401
+from repro.core.engine import (EngineConfig, run,  # noqa: F401
+                               run_batch)
+from repro.core.stats import replica_stats, summarize  # noqa: F401
 from repro.core.heuristics import HeuristicConfig  # noqa: F401
 from repro.core.neighbors import (GridSpec, build_grid,  # noqa: F401
                                   grid_lp_counts, make_grid_spec)

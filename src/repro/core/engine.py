@@ -22,6 +22,12 @@ one device's scan (this module); "lp_device" maps LPs onto a JAX device
 mesh where each device owns its LPs' SE rows and GAIA migrations
 physically reshard state (parallel/lp_shard.py) — bit-identical to
 "none" on the same seed (tests/test_sharding.py).
+
+A third transparent layer batches replicas: `run_batch(cfg, seeds)`
+vmaps the memoized jitted scan over a leading seed axis, with per-seed
+bit-identity to sequential runs on both execution layers
+(tests/test_replicas.py) — the substrate of every mean/std/ci95/n
+number the benchmarks report (core/stats.py).
 """
 from __future__ import annotations
 
@@ -302,7 +308,119 @@ def run(key, cfg: EngineConfig):
     st, series = _compiled_window(cfg, cfg.timesteps)(
         st, jnp.float32(cfg.heuristic.mf))
     counters = series_counters(series)
-    counters["migration_ratio"] = (counters["migrations"] /
-                                   (cfg.abm.n_se *
-                                    (cfg.timesteps / 1000.0)))  # Eq. 8
+    counters["migration_ratio"] = _migration_ratio(counters, cfg)
     return st, series, counters
+
+
+# ---------------------------------------------------------------------------
+# batched multi-replica execution (vmap over seeds)
+# ---------------------------------------------------------------------------
+
+
+def _migration_ratio(counters, cfg: EngineConfig) -> float:
+    return counters["migrations"] / (cfg.abm.n_se *
+                                     (cfg.timesteps / 1000.0))  # Eq. 8
+
+
+def replica_keys(seeds):
+    """Seeds (ints) -> one PRNG key per replica. A replica's key is
+    exactly `jax.random.key(seed)`, so replica r of a batch reproduces
+    a sequential `run(jax.random.key(seeds[r]), cfg)` bit-for-bit."""
+    return [jax.random.key(int(s)) for s in seeds]
+
+
+def stack_states(states):
+    """Stack per-replica state pytrees along a new leading replica axis
+    (PRNG keys included — key arrays stack like any other leaf)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def init_batch(cfg: EngineConfig, seeds):
+    """Stacked engine state for R replicas: every leaf of the single-
+    replica state gains a leading replica axis (including `t`, which
+    stays lockstep across replicas — they advance together).
+
+    The per-replica inits run through the very same (eager) init_engine
+    a sequential run uses, then stack — deliberately NOT a vmapped
+    jitted init: jit fuses the clustered-mobility position arithmetic
+    with FMA and drifts ULPs off the eager path, which would break the
+    per-seed bit-identity contract (tests/test_replicas.py). Init is a
+    one-off O(N) cost; the scan is where batching pays."""
+    return stack_states([init_engine(k, cfg) for k in replica_keys(seeds)])
+
+
+def _mf_vector(cfg: EngineConfig, mf, n_rep: int):
+    """Per-replica Migration Factors: scalar/None broadcasts; an (R,)
+    array lets each replica run its own MF (the batched §5.5 tuner)."""
+    mf = cfg.heuristic.mf if mf is None else mf
+    return jnp.broadcast_to(jnp.asarray(mf, jnp.float32), (n_rep,))
+
+
+def replica_series(series, r: int):
+    """Slice replica r out of a batched (T, R, ...) metrics series,
+    yielding the (T, ...) series a sequential run would have produced."""
+    return {k: v[:, r] for k, v in series.items()}
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_batch_cached(cfg: EngineConfig, n_steps: int):
+    def fn(states, mfs):
+        def body(s, _):
+            return jax.vmap(lambda st, m: step(st, cfg, mf=m))(s, mfs)
+        return jax.lax.scan(body, states, None, length=n_steps)
+    return jax.jit(fn)
+
+
+def _compiled_batch(cfg: EngineConfig, n_steps: int):
+    """One jitted batched scan per config shape: `jax.vmap` of the
+    single-replica step over the leading replica axis, MF dynamic and
+    per-replica. jit re-specializes per replica count, so the cache key
+    stays (config shape, n_steps) like `_compiled_window`."""
+    return _compiled_batch_cached(window_key_cfg(cfg), n_steps)
+
+
+def run_window_batch(states, cfg: EngineConfig, n_steps: int, mf=None):
+    """Advance R stacked replica states by n_steps in one batched scan.
+
+    `mf` may be a scalar (all replicas) or an (R,) vector — the batched
+    §5.5 tuner descends each replica's MF independently, so MF rides as
+    a per-replica dynamic argument of the one compiled scan. Returns
+    (states, [per-replica counters])."""
+    if cfg.sharding == "lp_device":
+        from repro.parallel import lp_shard
+        return lp_shard.run_window_batch_sharded(states, cfg, n_steps,
+                                                 mf=mf)
+    n_rep = states["t"].shape[0]
+    states, series = _compiled_batch(cfg, n_steps)(
+        states, _mf_vector(cfg, mf, n_rep))
+    return states, [series_counters(replica_series(series, r))
+                    for r in range(n_rep)]
+
+
+def run_batch(cfg: EngineConfig, seeds):
+    """Run R independent replicas (one per seed) in a single batched
+    device pass: `jax.vmap` over the leading seed axis of the memoized
+    jitted scan. Heuristic windows, mobility state, pending migrations —
+    the whole engine state — ride the batch axis, so replicas never
+    interact; replica r is bit-identical to `run(jax.random.key(seeds[r]),
+    cfg)` (tests/test_replicas.py).
+
+    Returns (states, series, reps): stacked final states (leading
+    replica axis), the batched per-step metrics series (T, R, ...), and
+    one aggregate-counters dict per replica (the exact schema `run`
+    returns, `migration_ratio` included). With
+    cfg.sharding="lp_device" the batch axis is vmapped *inside* each
+    shard (parallel/lp_shard.py), so sharded replicas stay bit-identical
+    to oracle replicas per seed."""
+    if cfg.sharding == "lp_device":
+        from repro.parallel import lp_shard
+        return lp_shard.run_batch_sharded(cfg, seeds)
+    states = init_batch(cfg, seeds)
+    states, series = _compiled_batch(cfg, cfg.timesteps)(
+        states, _mf_vector(cfg, None, len(seeds)))
+    reps = []
+    for r in range(len(seeds)):
+        c = series_counters(replica_series(series, r))
+        c["migration_ratio"] = _migration_ratio(c, cfg)
+        reps.append(c)
+    return states, series, reps

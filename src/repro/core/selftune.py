@@ -18,6 +18,11 @@ controller runs at the LP level on local counters, no centralization.
 
 Inter-run: golden-section-style bracketing on full-run TEC across
 replicas (different seeds), reusing the monotone-then-worse structure.
+
+Batched: `intra_run_tune_batch` runs R independent intra-run tuners in
+one batched scan (engine.run_window_batch) — each replica prices its
+own windows and descends its own MF, so trajectories reproduce solo
+runs bit-for-bit while sharing one compiled executable.
 """
 from __future__ import annotations
 
@@ -25,9 +30,11 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.costmodel import CostParams, SETUPS, wct, wct_env
-from repro.core.engine import EngineConfig, init_engine, run_window
+from repro.core.engine import (EngineConfig, init_batch, init_engine,
+                               run_window, run_window_batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +99,47 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
         from repro.parallel import lp_shard
         state = lp_shard.unshard_state(state, lp_shard.make_shard_spec(cfg))
     return state, history
+
+
+def intra_run_tune_batch(cfg: EngineConfig, tc: SelfTuneConfig, seeds,
+                         total_steps: Optional[int] = None):
+    """R independent intra-run tuners in one batched pass.
+
+    Each replica observes its own windows, prices them, and
+    hill-descends its own MF: the per-replica MF vector rides the
+    batched scan as a dynamic argument (engine.run_window_batch), so MF
+    trajectories stay fully independent — replica r reproduces a solo
+    `intra_run_tune(jax.random.key(seeds[r]), cfg, tc)` bit-for-bit
+    (tests/test_selftune.py) at batched cost. Returns (final_states,
+    histories) with one solo-format history per replica."""
+    total = total_steps or cfg.timesteps
+    params = SETUPS[tc.setup]
+    n_rep = len(seeds)
+    states = init_batch(cfg, seeds)
+    mf = [tc.mf0] * n_rep
+    step = [tc.step0] * n_rep
+    direction = [-1.0] * n_rep
+    prev: List[Optional[float]] = [None] * n_rep
+    histories: List[List[Tuple[int, float, float, float]]] = \
+        [[] for _ in range(n_rep)]
+
+    for w in range(total // tc.window):
+        states, reps = run_window_batch(
+            states, cfg, tc.window, mf=jnp.asarray(mf, jnp.float32))
+        for r, counters in enumerate(reps):
+            tec = _price(counters, params, cfg, tc.window, tc) / tc.window
+            histories[r].append((w, mf[r], counters["mean_lcr"], tec))
+            if prev[r] is not None and tec > prev[r] * 1.001:
+                direction[r] = -direction[r]  # worse: back off
+                step[r] = max(step[r] * 0.5, 0.02)
+            prev[r] = tec
+            mf[r] = float(min(max(mf[r] * (1.0 + direction[r] * step[r]),
+                                  tc.min_mf), tc.max_mf))
+    if cfg.sharding == "lp_device":
+        from repro.parallel import lp_shard
+        states = lp_shard.unshard_batch(states,
+                                        lp_shard.make_shard_spec(cfg))
+    return states, histories
 
 
 def inter_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,

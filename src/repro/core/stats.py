@@ -1,0 +1,86 @@
+"""Replica statistics for benchmark reporting.
+
+Every performance claim in the paper (§5, Tables 2-3, Figs. 5-9) is a
+statement about the *expected* behaviour of a stochastic simulation, so
+every number this repo publishes in a BENCH_*.json must carry its
+uncertainty. The shared schema for one reported metric is
+
+    {"mean": m, "std": s, "ci95": h, "n": n}
+
+where `std` is the sample standard deviation (ddof=1) over the n
+replicas (or timing repetitions) and `ci95` is the half-width of the
+95% confidence interval of the mean, using the Student-t critical value
+for n-1 degrees of freedom (n is single-digit in CI, where a normal
+z=1.96 would understate the interval by ~2x at n=3). With n=1 the
+spread terms are 0 — a point estimate in the same schema, which
+`benchmarks/compare.py` treats as a zero-width interval (the legacy
+behaviour).
+
+Kept dependency-free (math only): `benchmarks/compare.py` must stay
+importable without jax/numpy, and the engine itself never needs these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Sequence
+
+#: two-sided 95% Student-t critical values, df = 1..30 (df > 30 ~ z)
+_T95 = (12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
+        2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101,
+        2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052,
+        2.048, 2.045, 2.042)
+
+
+def t95(df: int) -> float:
+    """Two-sided 95% Student-t critical value for `df` degrees of
+    freedom (df > 30 falls back to the normal 1.96)."""
+    if df < 1:
+        raise ValueError(f"df must be >= 1, got {df}")
+    return _T95[df - 1] if df <= len(_T95) else 1.96
+
+
+def replica_stats(values: Sequence[float]) -> Dict[str, float]:
+    """mean/std/ci95/n over independent replica measurements.
+
+    n=1 degenerates to a point estimate (std = ci95 = 0) so callers can
+    emit the same schema regardless of replica count.
+    """
+    xs = [float(v) for v in values]
+    n = len(xs)
+    if n == 0:
+        raise ValueError("replica_stats needs at least one value")
+    mean = sum(xs) / n
+    if n < 2:
+        return {"mean": mean, "std": 0.0, "ci95": 0.0, "n": n}
+    var = sum((x - mean) ** 2 for x in xs) / (n - 1)
+    std = math.sqrt(var)
+    return {"mean": mean, "std": std,
+            "ci95": t95(n - 1) * std / math.sqrt(n), "n": n}
+
+
+def is_stats(obj) -> bool:
+    """Is `obj` a mean/std/ci95/n stats dict (the BENCH metric schema)?
+
+    benchmarks/compare.py re-states this rule in `as_stats` (it must
+    run without PYTHONPATH=src) — keep the two in sync."""
+    return isinstance(obj, dict) and {"mean", "std", "ci95", "n"} <= set(obj)
+
+
+def summarize(reps: List[Dict], keys: Optional[Iterable[str]] = None,
+              ndigits: Optional[int] = None) -> Dict[str, Dict[str, float]]:
+    """Per-metric `replica_stats` over a list of per-replica counter
+    dicts (engine `run_batch` output). Defaults to every scalar metric
+    present in the first replica; matrix counters (nested lists) are
+    skipped. `ndigits` optionally rounds for JSON friendliness."""
+    if not reps:
+        raise ValueError("summarize needs at least one replica")
+    if keys is None:
+        keys = [k for k, v in reps[0].items() if isinstance(v, (int, float))]
+    out = {}
+    for k in keys:
+        st = replica_stats([r[k] for r in reps])
+        if ndigits is not None:
+            st = {kk: (round(v, ndigits) if kk != "n" else v)
+                  for kk, v in st.items()}
+        out[k] = st
+    return out

@@ -517,6 +517,16 @@ _FIELD_SPECS = {
     "ptr": P("lp"), "since_eval": P("lp"), "last_mig": P("lp"),
 }
 
+#: batched replicas: a leading (unsharded) replica axis in front of
+#: every per-SE field's spec — the "lp" mesh axis keeps sharding the
+#: slot dimension, replicas ride along inside each shard
+_BATCH_FIELD_SPECS = {k: P(None, *v) for k, v in _FIELD_SPECS.items()}
+
+_METRIC_SPECS = {k: P() for k in
+                 ("local_msgs", "remote_msgs", "migrations", "heu_evals",
+                  "lcr", "lp_flows", "mig_flows", "repartitions",
+                  "halo_frac", "shard_overflow")}
+
 
 def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
     """One sharded timestep. Same contract as `engine.step`, on
@@ -526,21 +536,41 @@ def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
         mf = jnp.float32(cfg.heuristic.mf)
     key, k_move, k_send = jax.random.split(state["key"], 3)
     fields = {k: state[k] for k in _FIELD_SPECS}
-    metric_specs = {k: P() for k in
-                    ("local_msgs", "remote_msgs", "migrations", "heu_evals",
-                     "lcr", "lp_flows", "mig_flows", "repartitions",
-                     "halo_frac", "shard_overflow")}
     fn = shard_map(
         partial(_shard_step, cfg=cfg, spec=spec),
         mesh=mesh,
         in_specs=(_FIELD_SPECS, P(), P(), P(), P()),
-        out_specs=(_FIELD_SPECS, metric_specs),
+        out_specs=(_FIELD_SPECS, _METRIC_SPECS),
         check_rep=False,  # psum'd outputs are replicated by construction
     )
     new_fields, metrics = fn(fields, jax.random.key_data(k_move),
                              jax.random.key_data(k_send), state["t"], mf)
     new_state = dict(new_fields, key=key, t=state["t"] + 1)
     return new_state, metrics
+
+
+def step_sharded_batch(state, cfg, spec: ShardSpec, mesh: Mesh, mfs):
+    """One timestep of R stacked replicas: `jax.vmap` of the per-device
+    body *inside* `shard_map`, so each device advances its shard of all
+    R replicas in one pass and the collectives batch across the replica
+    axis. Because the vmapped body is the very `_shard_step` the
+    single-replica path runs, per-seed bit-identity with the oracle is
+    inherited rather than re-proven (tests/test_replicas.py). `mfs` is
+    the (R,) per-replica Migration Factor vector."""
+    ks = jax.vmap(lambda k: jax.random.split(k, 3))(state["key"])
+    key, k_move, k_send = ks[:, 0], ks[:, 1], ks[:, 2]
+    fields = {k: state[k] for k in _FIELD_SPECS}
+    fn = shard_map(
+        jax.vmap(partial(_shard_step, cfg=cfg, spec=spec),
+                 in_axes=(0, 0, 0, 0, 0)),
+        mesh=mesh,
+        in_specs=(_BATCH_FIELD_SPECS, P(), P(), P(), P()),
+        out_specs=(_BATCH_FIELD_SPECS, _METRIC_SPECS),
+        check_rep=False,
+    )
+    new_fields, metrics = fn(fields, jax.random.key_data(k_move),
+                             jax.random.key_data(k_send), state["t"], mfs)
+    return dict(new_fields, key=key, t=state["t"] + 1), metrics
 
 
 # ---------------------------------------------------------------------------
@@ -587,11 +617,74 @@ def run_sharded(key, cfg):
     """Sharded mirror of `engine.run`: returns (final_state, series,
     counters) with the final state unsharded back to gid-order, so
     callers (and the equivalence tests) see the oracle's layout."""
+    from repro.core.engine import _migration_ratio
     spec = make_shard_spec(cfg)
     st = init_sharded(key, cfg, spec)
     st, series = _scan_sharded(st, cfg, cfg.timesteps)
     counters = _series_counters(series)
-    counters["migration_ratio"] = (counters["migrations"] /
-                                   (cfg.abm.n_se *
-                                    (cfg.timesteps / 1000.0)))  # Eq. 8
+    counters["migration_ratio"] = _migration_ratio(counters, cfg)  # Eq. 8
     return unshard_state(st, spec), series, counters
+
+
+# ---------------------------------------------------------------------------
+# batched multi-replica runners (mirror engine.run_batch/run_window_batch)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_batch_sharded(key_cfg, n_steps: int):
+    # mirror of engine._compiled_batch: one jitted batched scan per
+    # config shape, per-replica MF dynamic (jit re-specializes per
+    # replica count)
+    spec = make_shard_spec(key_cfg)
+    mesh = make_mesh(spec)
+
+    def fn(state, mfs):
+        def body(s, _):
+            return step_sharded_batch(s, key_cfg, spec, mesh, mfs)
+        return jax.lax.scan(body, state, None, length=n_steps)
+    return jax.jit(fn)
+
+
+def _scan_batch_sharded(states, cfg, n_steps: int, mf=None):
+    from repro.core.engine import _mf_vector, window_key_cfg
+    n_rep = states["t"].shape[0]
+    return _compiled_batch_sharded(window_key_cfg(cfg), n_steps)(
+        states, _mf_vector(cfg, mf, n_rep))
+
+
+def _batch_replica_counters(series, n_rep: int):
+    from repro.core.engine import replica_series
+    return [_series_counters(replica_series(series, r))
+            for r in range(n_rep)]
+
+
+def run_window_batch_sharded(states, cfg, n_steps: int, mf=None):
+    states, series = _scan_batch_sharded(states, cfg, n_steps, mf=mf)
+    return states, _batch_replica_counters(series, states["t"].shape[0])
+
+
+def unshard_batch(states, spec: ShardSpec):
+    """Unshard each replica of a stacked slot-major state back to the
+    oracle's gid-order layout (stacked again on the replica axis)."""
+    from repro.core.engine import stack_states
+    n_rep = states["t"].shape[0]
+    return stack_states([
+        unshard_state({k: v[r] for k, v in states.items()}, spec)
+        for r in range(n_rep)])
+
+
+def run_batch_sharded(cfg, seeds):
+    """Sharded mirror of `engine.run_batch`: R replicas vmapped inside
+    each shard, final states unsharded to gid-order per replica — so
+    sharded replicas compare byte-for-byte against oracle replicas."""
+    from repro.core.engine import (_migration_ratio, replica_keys,
+                                   stack_states)
+    spec = make_shard_spec(cfg)
+    states = stack_states([init_sharded(k, cfg, spec)
+                           for k in replica_keys(seeds)])
+    states, series = _scan_batch_sharded(states, cfg, cfg.timesteps)
+    reps = _batch_replica_counters(series, len(seeds))
+    for c in reps:
+        c["migration_ratio"] = _migration_ratio(c, cfg)  # Eq. 8
+    return unshard_batch(states, spec), series, reps

@@ -1,0 +1,134 @@
+"""Unit tests for the bench-regression gate (benchmarks/compare.py).
+
+The gate's decision rule has two layers: the legacy tolerance bound on
+the metric mean, and — for metrics in the mean/std/ci95/n replica
+schema — interval separation: a worsened mean only fails when the 95%
+confidence intervals of baseline and candidate do not overlap. These
+tests pin both layers plus the old-schema compatibility path (plain
+floats keep the pure-tolerance behaviour; old-schema baselines against
+new-schema currents warn but still compare).
+"""
+import json
+
+import pytest
+
+from benchmarks import compare
+
+
+def _stats(mean, ci95, n=5):
+    return {"mean": mean, "std": ci95, "ci95": ci95, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# check_metric: the decision rule
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_point_estimates_keep_tolerance_rule():
+    # within tolerance: ok
+    ok, bound, _ = compare.check_metric("higher", 0.20, 0.9, 1.0)
+    assert ok and bound == pytest.approx(0.8)
+    # beyond tolerance: zero-width intervals always "separate" -> fail
+    ok, _, _ = compare.check_metric("higher", 0.20, 0.7, 1.0)
+    assert not ok
+    ok, _, _ = compare.check_metric("lower", 0.20, 1.3, 1.0)
+    assert not ok
+    ok, _, _ = compare.check_metric("lower", 0.20, 1.1, 1.0)
+    assert ok
+
+
+def test_interval_overlap_suppresses_regression():
+    """Mean beyond the bound, but wide CIs overlap: the gate must read
+    it as noise, not regression — the whole point of replicas."""
+    cur, base = _stats(0.70, ci95=0.25), _stats(1.0, ci95=0.25)
+    ok, _, note = compare.check_metric("higher", 0.20, cur, base)
+    assert ok and "within noise" in note
+
+
+def test_interval_separation_fires():
+    cur, base = _stats(0.70, ci95=0.05), _stats(1.0, ci95=0.05)
+    ok, _, note = compare.check_metric("higher", 0.20, cur, base)
+    assert not ok and note == ""
+
+
+def test_within_tolerance_needs_no_separation():
+    """A mean inside the tolerance band passes regardless of interval
+    width (the gate only ever *relaxes* with replicas, never
+    tightens)."""
+    ok, _, _ = compare.check_metric("higher", 0.20, _stats(0.9, 0.001),
+                                    _stats(1.0, 0.001))
+    assert ok
+
+
+def test_mixed_schema_uses_available_interval():
+    # legacy current vs stats baseline: baseline interval alone can
+    # still cover the delta
+    ok, _, _ = compare.check_metric("higher", 0.20, 0.7,
+                                    _stats(1.0, ci95=0.4))
+    assert ok
+    ok, _, _ = compare.check_metric("higher", 0.20, 0.7,
+                                    _stats(1.0, ci95=0.1))
+    assert not ok
+
+
+# ---------------------------------------------------------------------------
+# compare_file: schema compatibility + missing-data discipline
+# ---------------------------------------------------------------------------
+
+
+def _write(path, doc):
+    path.write_text(json.dumps(doc))
+
+
+def test_old_schema_baseline_warns_but_compares(tmp_path):
+    cur = tmp_path / "BENCH_x.json"
+    base = tmp_path / "base" / "BENCH_x.json"
+    base.parent.mkdir()
+    _write(cur, {"gate": {"m": _stats(0.95, ci95=0.1)}})
+    _write(base, {"gate": {"m": 1.0}})  # old point-estimate schema
+    with pytest.warns(DeprecationWarning, match="old-schema"):
+        rows = list(compare.compare_file(str(cur), str(base),
+                                         {"gate.m": ("higher", 0.20)}))
+    assert [s for _, s, _ in rows] == ["ok"]
+
+
+def test_new_schema_baseline_does_not_warn(tmp_path):
+    cur = tmp_path / "BENCH_x.json"
+    base = tmp_path / "base" / "BENCH_x.json"
+    base.parent.mkdir()
+    _write(cur, {"gate": {"m": _stats(0.5, ci95=0.01)}})
+    _write(base, {"gate": {"m": _stats(1.0, ci95=0.01)}})
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error", DeprecationWarning)
+        rows = list(compare.compare_file(str(cur), str(base),
+                                         {"gate.m": ("higher", 0.20)}))
+    assert [s for _, s, _ in rows] == ["fail"]  # separated regression
+
+
+def test_missing_baseline_metric_fails(tmp_path):
+    cur = tmp_path / "BENCH_x.json"
+    base = tmp_path / "base" / "BENCH_x.json"
+    base.parent.mkdir()
+    _write(cur, {"gate": {"m": 1.0}})
+    _write(base, {"gate": {}})
+    rows = list(compare.compare_file(str(cur), str(base),
+                                     {"gate.m": ("higher", 0.20)}))
+    assert [s for _, s, _ in rows] == ["fail"]
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    basedir = tmp_path / "BENCH_baseline"
+    basedir.mkdir()
+    doc = {"loop_ratio": 1.05,
+           "metrics": {"mean_lcr": _stats(0.75, ci95=0.02)}}
+    _write(tmp_path / "BENCH_replicas.json", doc)
+    _write(basedir / "BENCH_replicas.json", doc)
+    argv = ["--baseline-dir", str(basedir), "--current-dir", str(tmp_path),
+            "BENCH_replicas.json"]
+    assert compare.main(argv) == 0
+    # candidate collapses far below the interval: gate must fire
+    bad = {"loop_ratio": 1.05,
+           "metrics": {"mean_lcr": _stats(0.30, ci95=0.02)}}
+    _write(tmp_path / "BENCH_replicas.json", bad)
+    assert compare.main(argv) == 1

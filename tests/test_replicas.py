@@ -1,0 +1,182 @@
+"""Batched multi-replica execution contract (engine.run_batch tentpole).
+
+`run_batch(cfg, seeds)` vmaps the memoized jitted scan over a leading
+seed axis; the contract is *per-seed bit-identity*: replica r of a
+batch — state, per-step series, aggregate counters — is byte-identical
+to a sequential `run(jax.random.key(seeds[r]), cfg)`, on both execution
+layers (oracle and LP-per-device sharded at 1/2/4 devices). Replicas
+are independent by construction (vmap never mixes rows), pinned here
+via seed-permutation equivariance and a hypothesis invariant.
+
+Speed discipline: the engine/sharding configs reuse
+tests/test_sharding.py's shapes, so the sequential reference runs share
+those tests' compiled scans; batched scans are memoized per config.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import stats
+from repro.core.abm import ABMConfig
+from repro.core.engine import (EngineConfig, init_batch, run, run_batch,
+                               run_window, run_window_batch)
+from repro.core.heuristics import HeuristicConfig
+
+ABM = ABMConfig(n_se=96, n_lp=4, area=1000.0, speed=5.0,
+                interaction_range=80.0, p_interact=0.3)
+CFG = EngineConfig(abm=ABM, heuristic=HeuristicConfig(mf=1.2, mt=5),
+                   gaia_on=True, timesteps=24)
+
+STATE_KEYS = ("pos", "waypoint", "mob", "mob_g", "lp", "pending_dst",
+              "pending_eta", "ring", "ptr", "since_eval", "last_mig")
+SERIES_KEYS = ("local_msgs", "remote_msgs", "migrations", "heu_evals", "lcr",
+               "lp_flows", "mig_flows")
+
+
+@functools.lru_cache(maxsize=None)
+def _run(cfg: EngineConfig, seed: int):
+    return run(jax.random.key(seed), cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _run_batch(cfg: EngineConfig, seeds: tuple):
+    return run_batch(cfg, seeds)
+
+
+def _assert_replicas_match_sequential(cfg, seeds):
+    states, series, reps = _run_batch(cfg, tuple(seeds))
+    for r, seed in enumerate(seeds):
+        st, ser, c = _run(cfg, seed)
+        for k in STATE_KEYS:
+            np.testing.assert_array_equal(
+                np.asarray(st[k]), np.asarray(states[k][r]),
+                err_msg=f"seed {seed} state {k}")
+        np.testing.assert_array_equal(
+            np.asarray(jax.random.key_data(st["key"])),
+            np.asarray(jax.random.key_data(states["key"][r])))
+        for k in SERIES_KEYS:
+            np.testing.assert_array_equal(
+                np.asarray(ser[k]), np.asarray(series[k][:, r]),
+                err_msg=f"seed {seed} series {k}")
+        assert set(c) == set(reps[r])
+        for k in c:
+            assert np.array_equal(c[k], reps[r][k]), (seed, k)
+
+
+def test_batch_matches_sequential_oracle():
+    _assert_replicas_match_sequential(CFG, (3, 7, 11))
+
+
+def test_batch_matches_sequential_oracle_mobility():
+    """Per-SE mobility state (`mob`) and the replicated global rows
+    (`mob_g`) ride the batch axis too."""
+    cfg = dataclasses.replace(
+        CFG, abm=dataclasses.replace(ABM, mobility="hotspot", n_groups=4,
+                                     group_radius=120.0),
+        timesteps=16)
+    _assert_replicas_match_sequential(cfg, (3, 7))
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+def test_batch_matches_sequential_sharded(n_devices):
+    """The sharded batch vmaps *inside* each shard: replicas must stay
+    bit-identical to the sequential sharded run per seed (which is
+    itself bit-identical to the oracle, test_sharding.py)."""
+    cfg = dataclasses.replace(CFG, sharding="lp_device",
+                              n_devices=n_devices)
+    _assert_replicas_match_sequential(cfg, (3, 7))
+
+
+def test_seed_permutation_permutes_replicas():
+    """Replica independence: permuting the seed vector permutes the
+    outputs and changes nothing else (no cross-replica leakage)."""
+    sa, ser_a, reps_a = _run_batch(CFG, (3, 7, 11))
+    sb, ser_b, reps_b = _run_batch(CFG, (11, 3, 7))
+    perm = [1, 2, 0]  # position of (3, 7, 11)'s replicas inside batch b
+    for k in STATE_KEYS:
+        np.testing.assert_array_equal(np.asarray(sa[k]),
+                                      np.asarray(sb[k])[perm], err_msg=k)
+    for k in SERIES_KEYS:
+        np.testing.assert_array_equal(np.asarray(ser_a[k]),
+                                      np.asarray(ser_b[k])[:, perm],
+                                      err_msg=k)
+    for r, p in enumerate(perm):
+        assert reps_a[r] == reps_b[p]
+    # distinct seeds really are distinct trajectories
+    assert reps_a[0] != reps_a[1]
+
+
+def test_per_replica_mf_vector():
+    """run_window_batch threads a per-replica MF vector: each replica
+    runs its own Migration Factor (the batched §5.5 tuner's contract)
+    and reproduces a solo run_window at that MF bit-for-bit."""
+    mfs = (0.6, 8.0)
+    states = init_batch(CFG, (5, 5))  # same seed: only MF differs
+    states, reps = run_window_batch(states, CFG, 16,
+                                    mf=jnp.asarray(mfs, jnp.float32))
+    from repro.core.engine import init_engine
+    for r, mf in enumerate(mfs):
+        st = init_engine(jax.random.key(5), CFG)
+        _, solo = run_window(st, CFG, 16, mf=mf)
+        assert solo == reps[r], (mf, solo, reps[r])
+    # aggressive MF migrates strictly more than conservative MF
+    assert reps[0]["migrations"] > reps[1]["migrations"]
+
+
+# ---------------------------------------------------------------------------
+# replica statistics (core/stats.py)
+# ---------------------------------------------------------------------------
+
+
+def test_replica_stats_schema():
+    st = stats.replica_stats([1.0, 2.0, 3.0, 4.0])
+    assert st["n"] == 4 and st["mean"] == 2.5
+    np.testing.assert_allclose(st["std"], np.std([1, 2, 3, 4], ddof=1))
+    # t(df=3) = 3.182, not z = 1.96: small-n intervals must widen
+    np.testing.assert_allclose(st["ci95"], 3.182 * st["std"] / 2.0)
+    one = stats.replica_stats([7.5])
+    assert one == {"mean": 7.5, "std": 0.0, "ci95": 0.0, "n": 1}
+    assert stats.t95(40) == 1.96 and stats.t95(1) == 12.706
+    with pytest.raises(ValueError):
+        stats.replica_stats([])
+
+
+def test_summarize_skips_matrix_counters():
+    reps = [{"mean_lcr": 0.5, "migrations": 10.0, "lp_flows": [[1, 2]]},
+            {"mean_lcr": 0.7, "migrations": 14.0, "lp_flows": [[3, 4]]}]
+    out = stats.summarize(reps)
+    assert set(out) == {"mean_lcr", "migrations"}
+    assert out["migrations"]["mean"] == 12.0 and out["migrations"]["n"] == 2
+    assert stats.is_stats(out["mean_lcr"])
+    assert not stats.is_stats({"mean": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# hypothesis invariant: batched counters == stack of per-seed counters
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # optional dev dependency; contract still covered
+    HAVE_HYPOTHESIS = False  # by the explicit bit-identity tests above
+
+if HAVE_HYPOTHESIS:
+    TINY = dataclasses.replace(
+        CFG, abm=dataclasses.replace(ABM, n_se=48), timesteps=8)
+
+    @settings(deadline=None, max_examples=8)
+    @given(hyp_st.lists(hyp_st.integers(0, 12), min_size=1, max_size=4,
+                        unique=True))
+    def test_batched_counters_equal_per_seed_stack(seeds):
+        """For ANY seed vector, the batch's per-replica counters equal
+        the stack of sequential per-seed counters — no metric mixes
+        information across the replica axis."""
+        _, _, reps = _run_batch(TINY, tuple(seeds))
+        for r, seed in enumerate(seeds):
+            _, _, c = _run(TINY, seed)
+            assert c == reps[r], (seed, c, reps[r])

@@ -12,7 +12,8 @@ from repro.core import costmodel as cm
 from repro.core.abm import ABMConfig
 from repro.core.engine import EngineConfig
 from repro.core.heuristics import HeuristicConfig
-from repro.core.selftune import SelfTuneConfig, inter_run_tune, intra_run_tune
+from repro.core.selftune import (SelfTuneConfig, inter_run_tune,
+                                 intra_run_tune, intra_run_tune_batch)
 
 CFG = EngineConfig(
     abm=ABMConfig(n_se=100, n_lp=4, area=1000.0, speed=4.0,
@@ -43,6 +44,22 @@ def test_intra_run_tuner_respects_bounds():
     _, hist = intra_run_tune(jax.random.key(1), CFG, tc, total_steps=120)
     for _, mf, _, _ in hist:
         assert 1.05 <= mf <= 19.0
+
+
+def test_batched_tuner_matches_solo_trajectories():
+    """The batched tuner must be R *independent* tuners: each replica's
+    (MF, LCR, TEC) history reproduces a solo intra_run_tune on that
+    replica's seed bit-for-bit — per-replica MF rides the batched scan
+    as a dynamic vector, so one replica's hill descent never perturbs
+    another's — and different seeds produce different trajectories."""
+    cfg = dataclasses.replace(CFG, timesteps=90)
+    tc = SelfTuneConfig(window=30, mf0=8.0, setup="distributed",
+                        interaction_bytes=1024, migration_bytes=32)
+    _, hists = intra_run_tune_batch(cfg, tc, seeds=(0, 4))
+    for seed, hist in zip((0, 4), hists):
+        _, solo = intra_run_tune(jax.random.key(seed), cfg, tc)
+        assert hist == solo, (seed, hist, solo)
+    assert hists[0] != hists[1]
 
 
 def test_inter_run_tuner_finds_low_mf_region():
