@@ -12,11 +12,17 @@ at first init, so `XLA_FLAGS=--xla_force_host_platform_device_count=N`
 must be set before jax imports.
 
 Honest-measurement notes:
-  * every "device" here is a thread on the same CPU, so D>1 rows
-    measure *orchestration overhead* (shard_map, collectives, slot
-    indirection), not parallel speedup — the hardware has one core.
-    The acceptance gate is therefore overhead at D=1: the sharded
-    engine must not be slower than the oracle on one device.
+  * every "device" here is a thread on the same CPU. On a single-core
+    host, D>1 rows measure *orchestration overhead* (shard_map,
+    collectives, slot indirection), not parallel speedup, so the
+    unconditional acceptance gate is overhead at D=1: the sharded
+    engine must not be slower than the oracle on one device. When the
+    host has >= 2 cores (os.cpu_count), a second gate requires
+    sharded D=4 to beat the oracle outright.
+  * bytes_on_wire is the sparse exchange's exact transport count (see
+    lp_shard's wire-accounting rules); the halo-shrink child asserts it
+    falls monotonically (within ci95) as GAIA clusters the hotspot
+    scenario.
   * timing excludes compilation (one full warm-up scan first) and uses
     a jitted fixed-length scan, the same shape the engine runs under.
 
@@ -95,6 +101,9 @@ if mode == "lp_device":
     out["slots_per_dev"] = spec.cap
     out["overflow"] = float(series["shard_overflow"].sum())
     out["halo_frac"] = round(float(series["halo_frac"].mean()), 4)
+    # exact transport bytes for one steady-state scan (halo rows +
+    # migration rows + heuristic gathers; see lp_shard's accounting)
+    out["bytes_on_wire"] = float(series["bytes_on_wire"].sum())
 print("RESULT " + json.dumps(out))
 """
 
@@ -106,20 +115,33 @@ from repro.core.engine import EngineConfig, run
 from repro.core.heuristics import HeuristicConfig
 import dataclasses, numpy as np
 
+from repro.core.stats import replica_stats
+
 cfg = EngineConfig(
     abm=ABMConfig(n_se={n_se}, n_lp=8, area=10_000.0, speed=11.0,
-                  interaction_range=250.0, p_interact=0.2),
+                  interaction_range=250.0, p_interact=0.2,
+                  mobility="hotspot", n_groups=8, group_radius=900.0),
     heuristic=HeuristicConfig(mf=1.2, mt=10),
     gaia_on=True, timesteps=80, sharding="lp_device", n_devices=4,
     mig_capacity=512)
+
+def window_stats(x, w=10):
+    return [{{k: round(v, 4) for k, v in replica_stats(
+        [float(u) for u in x[i:i + w]]).items()}}
+            for i in range(0, len(x), w)]
+
 rows = {{}}
 for gaia in (True, False):
     _, series, c = run(jax.random.key(1),
                        dataclasses.replace(cfg, gaia_on=gaia))
     h = np.asarray(series["halo_frac"])
+    b = np.asarray(series["bytes_on_wire"])
     rows["gaia_on" if gaia else "gaia_off"] = dict(
-        halo_frac_first10=round(float(h[:10].mean()), 4),
-        halo_frac_last10=round(float(h[-10:].mean()), 4),
+        halo_frac_first10=window_stats(h)[0],
+        halo_frac_last10=window_stats(h)[-1],
+        bytes_on_wire_first10=window_stats(b)[0],
+        bytes_on_wire_last10=window_stats(b)[-1],
+        bytes_on_wire_windows=window_stats(b),
         mean_lcr=round(c["mean_lcr"], 4),
         overflow=c["shard_overflow"])
 print("RESULT " + json.dumps(rows))
@@ -159,26 +181,47 @@ def main(scale: str = "full"):
         rows.append(row)
 
     halo = _run_child(_HALO_CODE.format(n_se=min(n_se, 10_000)), 4)
-    print(f"[exp5] halo shrink (D=4, GAIA on): "
-          f"{halo['gaia_on']['halo_frac_first10']} -> "
-          f"{halo['gaia_on']['halo_frac_last10']}")
+    g_on = halo["gaia_on"]
+    print(f"[exp5] halo shrink (D=4 hotspot, GAIA on): "
+          f"{g_on['halo_frac_first10']['mean']} -> "
+          f"{g_on['halo_frac_last10']['mean']}; wire "
+          f"{g_on['bytes_on_wire_first10']['mean']:.0f} -> "
+          f"{g_on['bytes_on_wire_last10']['mean']:.0f} B/step")
+    # the neighbor-only exchange's physical claim: as GAIA clusters the
+    # hotspot scenario, the measured bytes fall monotonically (within
+    # each window's ci95 — single-seed windows are noisy)
+    bw = g_on["bytes_on_wire_windows"]
+    for a, b in zip(bw, bw[1:]):
+        assert b["mean"] <= a["mean"] + a["ci95"] + b["ci95"], (a, b)
+    assert (bw[-1]["mean"] + bw[-1]["ci95"]
+            < bw[0]["mean"] - bw[0]["ci95"]), (bw[0], bw[-1])
 
     base = rows[0]["per_step_s"]
     sharded1 = next(r for r in rows if r["mode"] == "lp_device"
                     and r["n_dev"] == 1)["per_step_s"]
+    sharded4 = next(r for r in rows if r["mode"] == "lp_device"
+                    and r["n_dev"] == 4)["per_step_s"]
     result = {
         "experiment": "exp5_sharded",
         "config": dict(n_se=n_se, n_lp=8, steps=STEPS, scale=scale,
-                       note="host devices share one CPU core: D>1 rows "
-                            "measure sharding overhead, not speedup"),
+                       cpu_count=os.cpu_count(),
+                       note="host devices share the host CPU: D>1 rows "
+                            "only measure speedup when cores >= devices"),
         "results": rows,
         "halo_shrink_d4": halo,
         "sharded_overhead_at_d1": round(sharded1 / base, 3),
+        "speedup_at_d4": round(base / sharded4, 3),
     }
     with open(OUT, "w") as f:
         json.dump(result, f, indent=2)
     # acceptance gate: sharded on one device is no slower than the oracle
     assert sharded1 <= base * 1.05, (sharded1, base)
+    # on parallel hardware the sparse halo must turn devices into actual
+    # speedup; on a single-core container D>1 only measures orchestration
+    # overhead, so the gate is conditional on the host having cores
+    if (os.cpu_count() or 1) >= 2:
+        assert sharded4 < base, (sharded4, base)
+        print(f"[exp5] D=4 speedup {result['speedup_at_d4']}x")
     print(f"[exp5] OK (D=1 overhead {result['sharded_overhead_at_d1']}x) "
           f"-> {OUT}")
     return result

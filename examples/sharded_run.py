@@ -9,8 +9,10 @@ a CPU box, fake them:
 Each device owns the SE rows of its LPs; GAIA migrations physically
 reshard SE state between devices. The run is bit-identical to
 sharding="none" on the same seed — what changes is WHERE the work and
-the state live, and the halo_frac metric shows the fraction of remote
-agents each shard actually needs falling as GAIA clusters the model.
+the state live, and the halo_frac / bytes_on_wire metrics show the
+fraction of remote agents each shard actually needs — and the bytes
+the neighbor-only exchange actually moves — falling as GAIA clusters
+the model.
 """
 import os
 
@@ -35,9 +37,11 @@ def main():
     st, series, counters = run(jax.random.key(0), cfg)
     lcr = np.asarray(series["lcr"])
     halo = np.asarray(series["halo_frac"])
+    wire = np.asarray(series["bytes_on_wire"])
     for w in range(0, cfg.timesteps, 40):
         print(f"steps {w:4d}-{w + 39:4d}  LCR {lcr[w:w + 40].mean():.3f}  "
-              f"halo_frac {halo[w:w + 40].mean():.3f}")
+              f"halo_frac {halo[w:w + 40].mean():.3f}  "
+              f"wire {wire[w:w + 40].mean():8.0f} B/step")
     print(f"migrations: {counters['migrations']:.0f}  "
           f"mean LCR: {counters['mean_lcr']:.3f}  "
           f"shard overflow steps: {counters['shard_overflow']:.0f}")

@@ -26,7 +26,7 @@ from repro.core.abm import (ABMConfig, MOBILITY_MODELS,  # noqa: F401
                             PROXIMITY_BACKENDS)
 from repro.core.costmodel import (DISTRIBUTED, PARALLEL, SETUPS,  # noqa: F401
                                   CostParams, ExecutionEnvironment,
-                                  make_env, wct, wct_env)
+                                  make_env, wct, wct_env, wire_cost)
 from repro.core.engine import (EngineConfig, run,  # noqa: F401
                                run_batch)
 from repro.core.stats import replica_stats, summarize  # noqa: F401

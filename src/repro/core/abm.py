@@ -250,32 +250,83 @@ def _globals_step(key, mob_g, cfg: ABMConfig):
     return jnp.concatenate([gpos, gwp], axis=1)
 
 
-def _hotspot_step(k_glob, k_noise, pos, mob_g, cfg: ABMConfig):
-    """Pull toward the SE's attractor, saturating at `speed` beyond the
-    dwell radius; uniform noise keeps the blob from collapsing. The
-    stationary blob radius is ~0.4 * group_radius."""
-    n = pos.shape[0]
-    mob_g = _globals_step(k_glob, mob_g, cfg)
-    target = mob_g[jnp.arange(n) % mob_g.shape[0], :2]
-    delta = toroidal_signed_delta(pos, target, cfg.area)
+def _hotspot_apply(pos, anchor, noise, cfg: ABMConfig):
+    """Row-local half of the hotspot move: pull toward the SE's
+    attractor, saturating at `speed` beyond the dwell radius; uniform
+    noise keeps the blob from collapsing. The stationary blob radius is
+    ~0.4 * group_radius. Elementwise per row, so the sharded engine can
+    run it on any row subset (anchor/noise gathered by SE id) and still
+    match the oracle bit-for-bit."""
+    delta = toroidal_signed_delta(pos, anchor, cfg.area)
     dist = jnp.linalg.norm(delta, axis=-1, keepdims=True)
     pull = _unit(delta) * cfg.speed * jnp.minimum(
         1.0, dist / jnp.float32(cfg.group_radius))
-    noise = (jax.random.uniform(k_noise, (n, 2)) - 0.5) * cfg.speed
-    return (pos + pull + noise) % cfg.area, mob_g
+    return (pos + pull + noise) % cfg.area
 
 
-def _group_step(k_glob, k_noise, pos, mob, mob_g, cfg: ABMConfig):
-    """RPGM-lite: chase (leader + fixed member offset) at up to `speed`,
-    with small jitter. Groups migrate coherently behind their leader."""
-    n = pos.shape[0]
-    mob_g = _globals_step(k_glob, mob_g, cfg)
-    target = (mob_g[jnp.arange(n) % mob_g.shape[0], :2] + mob) % cfg.area
+def _group_apply(pos, target, noise, cfg: ABMConfig):
+    """Row-local half of the RPGM-lite move: chase (leader + fixed
+    member offset) at up to `speed`, with small jitter. Groups migrate
+    coherently behind their leader."""
     delta = toroidal_signed_delta(pos, target, cfg.area)
     dist = jnp.linalg.norm(delta, axis=-1, keepdims=True)
     step = _unit(delta) * jnp.minimum(dist, cfg.speed)
-    noise = (jax.random.uniform(k_noise, (n, 2)) - 0.5) * (0.5 * cfg.speed)
-    return (pos + step + noise) % cfg.area, mob_g
+    return (pos + step + noise) % cfg.area
+
+
+def row_local_mobility(cfg: ABMConfig) -> bool:
+    """True iff the model factors into (full-size id-order draws) x
+    (elementwise per-row apply) — rwp/hotspot/group. The sharded engine
+    then moves each shard's rows without any position gather; "flock"
+    reads global cell aggregates (a float scatter-add whose reduction
+    order must match the oracle), so it stays gather-reconstruct."""
+    return cfg.mobility in ("rwp", "hotspot", "group")
+
+
+def mobility_row_draws(key, n: int, mob_g, cfg: ABMConfig):
+    """Full-size (n, 2) id-order draw arrays for the row-local models,
+    plus the advanced global rows. Pure in (key, mob_g): every device
+    computes the identical arrays and gathers its own shard's rows by SE
+    id, so the draw an SE sees is independent of which device hosts it
+    (the bit-identity requirement — same contract as `rwp_draws`).
+
+    Returns (draws, mob_g): draws is {"wp"} for rwp, {"anchor",
+    "noise"} for hotspot/group (anchor = the SE's attractor position /
+    its group leader's position, noise = the per-step jitter)."""
+    if cfg.mobility == "rwp":
+        return {"wp": rwp_draws(key, n, cfg)}, mob_g
+    k_glob = jax.random.fold_in(key, 1)
+    k_noise = jax.random.fold_in(key, 2)
+    mob_g = _globals_step(k_glob, mob_g, cfg)
+    anchor = mob_g[jnp.arange(n) % mob_g.shape[0], :2]
+    scale = cfg.speed if cfg.mobility == "hotspot" else 0.5 * cfg.speed
+    noise = (jax.random.uniform(k_noise, (n, 2)) - 0.5) * scale
+    return {"anchor": anchor, "noise": noise}, mob_g
+
+
+def mobility_row_apply(pos, waypoint, mob, draws, cfg: ABMConfig):
+    """Elementwise per-row half of the row-local models: advance any row
+    subset given its rows of the `mobility_row_draws` arrays. Returns
+    (pos, waypoint) — `mob` is read-only here (the group member
+    offset)."""
+    if cfg.mobility == "rwp":
+        return rwp_apply(pos, waypoint, draws["wp"], cfg)
+    if cfg.mobility == "hotspot":
+        return _hotspot_apply(pos, draws["anchor"], draws["noise"],
+                              cfg), waypoint
+    target = (draws["anchor"] + mob) % cfg.area  # group
+    return _group_apply(pos, target, draws["noise"], cfg), waypoint
+
+
+def max_step_displacement(cfg: ABMConfig) -> float:
+    """Upper bound on any SE's per-axis displacement in one mobility
+    step — the halo-need dilation radius derives from it (see
+    parallel/lp_shard.py). rwp/flock move exactly `speed` along a unit
+    direction; hotspot adds up to 0.5*speed of per-axis noise on top of
+    a speed-capped pull, group up to 0.25*speed on a speed-capped
+    chase."""
+    return {"rwp": cfg.speed, "hotspot": 1.5 * cfg.speed,
+            "group": 1.25 * cfg.speed, "flock": cfg.speed}[cfg.mobility]
 
 
 def _flock_step(k_noise, pos, mob, cfg: ABMConfig):
@@ -314,18 +365,12 @@ def mobility_step(key, pos, waypoint, mob, mob_g, cfg: ABMConfig):
     parallel/lp_shard.py). Fields a model does not use pass through
     untouched.
     """
-    if cfg.mobility == "rwp":
-        pos, waypoint = rwp_apply(pos, waypoint,
-                                  rwp_draws(key, pos.shape[0], cfg), cfg)
+    if row_local_mobility(cfg):
+        draws, mob_g = mobility_row_draws(key, pos.shape[0], mob_g, cfg)
+        pos, waypoint = mobility_row_apply(pos, waypoint, mob, draws, cfg)
         return pos, waypoint, mob, mob_g
-    k_glob = jax.random.fold_in(key, 1)
-    k_noise = jax.random.fold_in(key, 2)
-    if cfg.mobility == "hotspot":
-        pos, mob_g = _hotspot_step(k_glob, k_noise, pos, mob_g, cfg)
-    elif cfg.mobility == "group":
-        pos, mob_g = _group_step(k_glob, k_noise, pos, mob, mob_g, cfg)
-    else:  # flock
-        pos, mob = _flock_step(k_noise, pos, mob, cfg)
+    k_noise = jax.random.fold_in(key, 2)  # flock
+    pos, mob = _flock_step(k_noise, pos, mob, cfg)
     return pos, waypoint, mob, mob_g
 
 

@@ -248,6 +248,30 @@ def make_env(kind: str, n_lp: int) -> ExecutionEnvironment:
     return ENV_PRESETS[kind](n_lp)
 
 
+def wire_cost(wire_flows, env: ExecutionEnvironment) -> float:
+    """Price a sharded run's *physical* transport on `env`: the engine's
+    `wire_flows` counter is the (n_dev, n_dev) matrix of useful payload
+    bytes each device pair exchanged (sparse halo rows + migrated SE
+    rows + reconstruction gathers — see lp_shard's wire accounting).
+    Devices host contiguous LP blocks (`lp_shard.dev_of_lp`), so a
+    device pair is priced with the link class joining the first LPs of
+    the two blocks. Returns seconds of bandwidth cost (the per-timestep
+    marshaling/latency already rides in SC/RCC)."""
+    w = np.asarray(wire_flows, dtype=np.float64)
+    if w.ndim != 2 or w.shape[0] != w.shape[1]:
+        raise ValueError(f"wire_flows must be square, got {w.shape}")
+    n_dev = w.shape[0]
+    L = env.n_lp
+    if n_dev > L:
+        raise ValueError(f"wire_flows has {n_dev} devices but env has "
+                         f"only {L} LPs")
+    first_lp = [-(-a * L // n_dev) for a in range(n_dev)]
+    return sum(
+        w[a, b] * LINK_CLASSES[env.link[first_lp[a]][first_lp[b]]].t_byte
+        for a in range(n_dev) for b in range(n_dev)
+        if a != b and w[a, b])
+
+
 def wct_env(counters: Dict, p: CostParams, env: ExecutionEnvironment,
             timesteps: int, interaction_bytes: int = 1,
             migration_bytes: int = 32) -> Dict[str, float]:
@@ -266,7 +290,13 @@ def wct_env(counters: Dict, p: CostParams, env: ExecutionEnvironment,
       * MigComm prices each migration on its pair's link (falling back
         to the most expensive link present if only the scalar
         `migrations` counter is available);
-      * SC uses env.t_sync when set (WAN barriers are RTT-dominated).
+      * SC uses env.t_sync when set (WAN barriers are RTT-dominated);
+      * when the sharded engine's `wire_flows` counter is present, its
+        measured per-device-pair bytes are priced by `wire_cost` and
+        reported as `WireC`. WireC is the physical-transport view of
+        the same traffic RCC/MigComm estimate from logical message
+        counts, so it is reported alongside TEC rather than added to
+        it (summing both would double-count the interaction payload).
     """
     L = env.n_lp
     flows = np.asarray(counters["lp_flows"], dtype=np.float64)
@@ -307,11 +337,15 @@ def wct_env(counters: Dict, p: CostParams, env: ExecutionEnvironment,
     mig_cpu = migs * p.t_mig_cpu
     heu = float(counters["heu_evals"]) * p.t_heu
 
+    wirec = (wire_cost(counters["wire_flows"], env)
+             if "wire_flows" in counters else 0.0)
+
     total = mcc + lcc + rcc + sc + mmc + mig_cpu + mig_comm + heu
     return {
         "MCC": mcc, "LCC": lcc, "RCC": float(rcc), "SC": sc, "MMC": mmc,
         "MigCPU": mig_cpu, "MigComm": float(mig_comm), "Heu": heu,
         "MigC": mig_cpu + float(mig_comm) + heu,
         "TEC": total,
+        "WireC": float(wirec),
         "per_lp_compute_s": per_lp.tolist(),
     }

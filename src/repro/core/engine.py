@@ -79,6 +79,13 @@ class EngineConfig:
     n_devices: int = 0  # 0 = all visible devices (capped at n_lp)
     shard_capacity: int = 0  # SE slots per device; 0 = auto (2x share)
     mig_capacity: int = 0  # migration-buffer rows/device/step; 0 = auto
+    # halo-exchange buffer rows per (src, dst) device pair per step; the
+    # exchange is exact as long as no device needs more than this many
+    # rows from any single peer (overflow raises the shard_overflow
+    # alarm, like the other capacities). 0 = auto (= shard capacity,
+    # safe for arbitrary partitions); tighten once GAIA has clustered
+    # the shards to shrink the static all_to_all transport.
+    halo_capacity: int = 0
     # --- periodic global repartition (core/partition.py) ----------------
     # every R steps the abm.partitioner backend recomputes the SE -> LP
     # map from current geometry; the delta rides the normal migration

@@ -137,7 +137,7 @@ def cell_ids(pos, spec: GridSpec):
     return cxy[:, 0] * spec.ncell + cxy[:, 1]
 
 
-def build_grid(pos, spec: GridSpec):
+def build_grid(pos, spec: GridSpec, valid=None):
     """Bin positions; returns dict with the sorted layout + member table.
 
     Keys: cell (N,) i32 cell id per SE; order (N,) the sort permutation;
@@ -145,16 +145,29 @@ def build_grid(pos, spec: GridSpec):
     member indices padded with -1; overflow () bool — True iff some cell
     holds more than `capacity` SEs (members beyond capacity are dropped
     from the table, so exactness requires overflow == False).
+
+    `valid` (N,) bool optionally masks rows out of the structure
+    entirely: invalid rows bin to the virtual cell ncell^2, so they
+    occupy no member-table slot, count toward no cell, and can never
+    trip `overflow`. The sharded engine uses this to build its local
+    view grid over (own slots + received halo rows) where empty slots
+    and halo padding are dead rows — `capacity` then only has to bound
+    the density of *live* SEs. Invalid rows' `cell` entries hold the
+    virtual id (callers must not index cell-shaped arrays with them).
     """
     n = pos.shape[0]
     ncells = spec.ncell * spec.ncell
     cell = cell_ids(pos, spec)
+    if valid is not None:
+        cell = jnp.where(valid, cell, ncells)
     order = jnp.argsort(cell)
     cell_sorted = cell[order]
     cids = jnp.arange(ncells, dtype=cell_sorted.dtype)
     starts = jnp.searchsorted(cell_sorted, cids)
     counts = jnp.searchsorted(cell_sorted, cids, side="right") - starts
-    rank = jnp.arange(n) - starts[cell_sorted]
+    # virtual-cell rows sort to the tail; their rank value is irrelevant
+    # because the scatter below drops their out-of-bounds cell id
+    rank = jnp.arange(n) - starts[jnp.minimum(cell_sorted, ncells - 1)]
     table = jnp.full((ncells, spec.capacity), -1, jnp.int32)
     # ranks beyond capacity fall outside the table and are dropped
     table = table.at[cell_sorted, rank].set(order.astype(jnp.int32),
@@ -291,10 +304,11 @@ def halo_mask(cell_ref, row_cell, row_valid, spec: GridSpec):
 
     Returns a boolean mask over `cell_ref` (global per-agent cell ids):
     True for agents inside the 3x3 neighborhood of any cell occupied by
-    a valid row. This is the halo-exchange set of the sharded engine —
+    a valid row. This is the *exact* halo set of the sharded engine —
     the agents a shard actually needs to resolve its own proximity
-    queries (the rest of the all-gathered buffer is dead weight, and the
-    `halo_frac` metric measures how much GAIA's clustering shrinks it).
+    queries, which the `halo_frac` metric counts (the sparse exchange
+    transports a dilated superset of it; GAIA's clustering shrinks
+    both, see parallel/lp_shard.py).
     """
     occ = jnp.zeros((spec.ncell * spec.ncell,), bool)
     safe_cell = jnp.where(row_valid, row_cell, spec.ncell * spec.ncell)
@@ -304,6 +318,28 @@ def halo_mask(cell_ref, row_cell, row_valid, spec: GridSpec):
     for di, dj in _NEIGH_OFFSETS:
         halo2d = halo2d | jnp.roll(occ2d, (di, dj), axis=(0, 1))
     return halo2d.reshape(-1)[cell_ref]
+
+
+def dilate_mask(occ, r: int):
+    """Chebyshev (L-inf) dilation of a boolean cell mask by radius r on
+    the torus: out[i, j] is True iff any cell within r rows AND r
+    columns (wrapping) is True. r=1 is exactly the 3x3 neighborhood the
+    proximity sweep visits; the sharded engine dilates by 1 + the
+    per-step cell-displacement bound to turn "cells my SEs occupy now"
+    into "cells whose occupants I may query next step" (the halo-need
+    bitmap, see parallel/lp_shard.py).
+
+    The L-inf ball is a square, so the dilation is separable: dilate
+    rows, then columns. Works on any (..., ncell, ncell) batch; when
+    2r+1 >= ncell a roll chain wraps all the way around and any occupied
+    input correctly saturates the axis (need-everything)."""
+    out = occ
+    for axis in (-2, -1):
+        acc = out
+        for s in range(1, r + 1):
+            acc = acc | jnp.roll(out, s, axis) | jnp.roll(out, -s, axis)
+        out = acc
+    return out
 
 
 def cell_block_mean(pos, vec, spec: GridSpec, area: float):

@@ -7,14 +7,28 @@ JAX device mesh (axis "lp"), and **each device owns the SE rows of its
 LPs** — positions, waypoints, heuristic windows, migration state all
 live in per-device slot buffers. Per step:
 
-  * proximity/interaction counts are computed per-shard: positions/LPs
-    are exchanged (`all_gather` — the fixed-size transport of the halo
-    exchange), the PR-1 cell-list grid is built over the gathered
-    buffer, and each shard resolves only its own rows against its 3x3
-    candidate blocks. `neighbors.halo_mask` measures the *actual* halo
-    (remote agents inside the shard's neighborhood cells) — the
-    `halo_frac` metric shows GAIA's clustering physically shrinking the
-    communication a smarter ragged transport would have to move.
+  * proximity/interaction counts are computed per-shard over a **sparse
+    neighbor-only halo**: each device knows, one step in advance, which
+    grid cells every device may query (the `halo_need` bitmaps, see
+    below), packs exactly the boundary rows each peer needs into
+    fixed-capacity per-pair buffers, and exchanges them with a single
+    `all_to_all`. The PR-1 cell-list grid is then built over the local
+    view (own rows + received halo) and each shard resolves only its
+    own rows against its 3x3 candidate blocks. No position all-gather:
+    what moves is the exchange set GAIA is shrinking, and the
+    `bytes_on_wire` / `wire_flows` metrics count it exactly.
+  * **halo-need double buffer** (the comm/compute overlap): the bitmap
+    that steers step t+1's exchange is computed and psum-reduced at the
+    tail of step t — per-device cell occupancy (plus the cells of rows
+    pending migration toward each destination device) dilated by
+    1 + ceil(max per-step displacement / cell). The dilation makes the
+    one-step-stale footprint a sound superset of the true need (every
+    in-range neighbor is guaranteed present in the receiver's view —
+    tests/test_halo_exchange.py), and it removes the same-step global
+    agreement round: the only same-step collective the proximity path
+    needs is the one payload all_to_all, issued right after the (cheap)
+    row-local mobility update so asynchronous-collective backends can
+    overlap it with the independent own-row binning work.
   * LCR numerators/denominators, the candidate matrix, and all Eq. 5/6
     counters are accumulated across devices with `psum`.
   * GAIA migrations are **actual resharding ops**: when a migration's
@@ -27,20 +41,26 @@ live in per-device slot buffers. Per step:
 Bit-identity with the single-device oracle (the §4.2 transparency
 invariant, extended to the execution layer): `sharding="lp_device"`
 produces byte-identical states, series, and migration sequences to
-`sharding="none"` on the same seed — see DESIGN.md §Adaptations for why
-each step phase preserves this exactly, and tests/test_sharding.py for
-the enforced contract. Two fixed capacities (slots per device,
-migration-buffer rows) must bound the true maxima for the contract to
-hold; overflow is surfaced per step in the `shard_overflow` metric
-(and asserted zero in the equivalence tests), mirroring the cell-list
-grid's capacity discipline.
+`sharding="none"` on the same seed — see DESIGN.md §Neighbor-only halo
+exchange for why each step phase preserves this exactly, and
+tests/test_sharding.py + tests/test_halo_exchange.py for the enforced
+contract. Three fixed capacities (slots per device, migration-buffer
+rows, halo rows per device pair) must bound the true maxima for the
+contract to hold; overflow is surfaced per step in the
+`shard_overflow` metric (and asserted zero in the equivalence tests),
+mirroring the cell-list grid's capacity discipline.
 
-Static-shape honesty: JAX collectives move fixed-size buffers, so the
-position exchange always transports all S slots and the migration
-exchange always transports `mig_capacity` rows per device, regardless
-of how few are live. What GAIA reduces is the *required* exchange set
-(halo_frac, migrations/step); a ragged transport would realize those
-savings on the wire.
+Wire accounting (`bytes_on_wire`, per-step; `wire_flows`, the per
+(src dev, dst dev) byte matrix): JAX collectives still move fixed-size
+buffers, so the numbers count the *useful* slots — packed halo rows at
+12 B (pos + lp), admitted cross-device migration rows at their full
+row size (state row + ring window), and, for the paths that still
+reconstruct id-order state (flock mobility, the periodic repartition
+hook), the valid rows of those gathers. Control-plane reductions (the
+need bitmaps, free-slot counts, the psum'd counters) are excluded —
+they are O(cells + LP^2), independent of the SE population. This is
+exactly the traffic a ragged transport would put on the wire, so the
+metric is the physical realization of what `halo_frac` only measured.
 """
 from __future__ import annotations
 
@@ -59,12 +79,25 @@ from repro.core import balance as bal
 from repro.core import heuristics as heu
 from repro.core import neighbors
 from repro.core import partition as part
-from repro.core.abm import init_abm, mobility_step, rwp_apply, rwp_draws
+from repro.core.abm import (init_abm, max_step_displacement,
+                            mobility_row_apply, mobility_row_draws,
+                            mobility_step, row_local_mobility)
 
 #: per-SE state rows that migrate with an SE between shards ("mob" is
 #: the per-SE mobility state: member offset / heading — full-row packed)
 _ROW_FIELDS = ("pos", "waypoint", "mob", "last_mig", "ptr", "since_eval",
                "gid")
+
+#: bytes per halo row on the wire: pos (2 x f32) + lp (i32) — all a
+#: receiver needs to resolve proximity + LP histograms against the row
+HALO_ROW_BYTES = 12
+
+
+def _mig_row_bytes(window: int, n_lp: int) -> int:
+    """Bytes per migrated SE row: the 7 _ROW_FIELDS (pos/waypoint/mob
+    2 x f32 each, last_mig/ptr/since_eval/gid i32) + dst i32 + the
+    (window, n_lp) i32 heuristic ring rows that travel with the SE."""
+    return 44 + 4 * window * n_lp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,7 +108,8 @@ class ShardSpec:
     n_se: int
     cap: int  # SE slots per device (must bound max per-device population)
     mig_cap: int  # migration-buffer rows per device per step
-    grid: Optional[neighbors.GridSpec]  # over all n_dev*cap slots
+    halo_cap: int  # halo rows per (src, dst) device pair per step
+    grid: Optional[neighbors.GridSpec]  # local-view cell list (live SEs)
 
     @property
     def n_slots(self) -> int:
@@ -85,6 +119,20 @@ class ShardSpec:
 def dev_of_lp(lp, spec: ShardSpec):
     """Block LP->device map: device d owns a contiguous LP range."""
     return (lp * spec.n_dev) // spec.n_lp
+
+
+def _sparse_halo(spec: ShardSpec) -> bool:
+    """Does this layout run the neighbor-only exchange? Needs a grid
+    (footprints are cell bitmaps) and a second device to talk to."""
+    return spec.grid is not None and spec.n_dev > 1
+
+
+def _dilation_radius(spec: ShardSpec, abm) -> int:
+    """Cells of Chebyshev dilation that turn step-t occupancy into a
+    sound step-t+1 need set: 1 for the 3x3 proximity block + the cell
+    shift bound of one mobility step (a move of at most `disp` per axis
+    crosses at most floor(disp/cell) + 1 cell boundaries)."""
+    return 2 + int(max_step_displacement(abm) // spec.grid.cell)
 
 
 def make_shard_spec(cfg) -> ShardSpec:
@@ -119,25 +167,66 @@ def make_shard_spec(cfg) -> ShardSpec:
         else min(cap, max(32, cap // 2))
     grid = None
     if backend == "grid":
-        grid = neighbors.make_grid_spec(d * cap, abm.area,
-                                        abm.interaction_range,
-                                        capacity=abm.grid_capacity)
-        if (grid is not None and abm.grid_capacity == 0
-                and abm.mobility != "rwp"):
-            # clustered mobility: take the ABM's clustered-density bound
-            # for the n live SEs, plus a uniform allowance for the
-            # spread-out pad positions of the empty slots
-            pads = neighbors.default_capacity(max(d * cap - n, 1),
-                                              grid.ncell)
-            grid = dataclasses.replace(
-                grid, capacity=min(d * cap,
-                                   abm.grid_spec().capacity + pads))
+        # the mobility-aware oracle geometry: the local view (own rows +
+        # received halo) only ever tables *live* SEs (build_grid masks
+        # dead slots/padding), so the per-cell bound for the n true SEs
+        # applies as-is — no pad allowance, roughly halving the 3x3
+        # candidate width vs. tabling all n_dev*cap slots
+        grid = abm.grid_spec()
+    if grid is None or d == 1:
+        halo_cap = 1  # no exchange: dense fallback / single device
+    elif cfg.halo_capacity > 0:
+        halo_cap = min(cfg.halo_capacity, cap)
+    else:
+        # a peer can need every row a device owns (e.g. the random
+        # initial partition scatters each LP across the whole torus), so
+        # only cap itself is safe for arbitrary partitions; tighten via
+        # EngineConfig.halo_capacity once GAIA has clustered the shards
+        halo_cap = cap
     return ShardSpec(n_dev=d, n_lp=L, n_se=n, cap=cap, mig_cap=mig_cap,
-                     grid=grid)
+                     halo_cap=halo_cap, grid=grid)
 
 
 def make_mesh(spec: ShardSpec) -> Mesh:
     return Mesh(np.array(jax.devices()[:spec.n_dev]), ("lp",))
+
+
+# ---------------------------------------------------------------------------
+# halo-need bitmaps
+# ---------------------------------------------------------------------------
+
+
+def halo_need_bitmaps(pos, valid, pending_dst, spec: ShardSpec, abm):
+    """(n_dev, ncell^2) bool: cells whose occupants device d may query
+    *next* step — its dilated spatial footprint.
+
+    Device d's footprint is the set of cells occupied by its valid
+    slots, plus the cells of every row currently pending migration
+    toward one of d's LPs (the row lands on d when its delay elapses,
+    and d's own bitmap cannot know about it in advance), Chebyshev-
+    dilated by `_dilation_radius` (3x3 proximity + one step of motion).
+    A superset is always sound — rows sent but not queried cost wire
+    bytes, never correctness.
+
+    This global slot-major version seeds `init_sharded` and serves as
+    the reference the property tests check against; `_shard_step`
+    computes the identical bitmaps distributedly (each device
+    contributes its rows, psum ORs them) at the tail of every step.
+    """
+    g = spec.grid
+    ncells = g.ncell * g.ncell
+    dev = jnp.arange(pos.shape[0], dtype=jnp.int32) // spec.cap
+    cell = neighbors.cell_ids(pos, g)
+    safe_cell = jnp.where(valid, cell, ncells)  # invalid -> dropped
+    contrib = jnp.zeros((spec.n_dev, ncells), bool)
+    contrib = contrib.at[dev, safe_cell].set(True, mode="drop")
+    pend = valid & (pending_dst >= 0)
+    pdev = dev_of_lp(jnp.maximum(pending_dst, 0), spec)
+    contrib = contrib.at[jnp.where(pend, pdev, spec.n_dev),
+                         safe_cell].set(True, mode="drop")
+    return neighbors.dilate_mask(
+        contrib.reshape(spec.n_dev, g.ncell, g.ncell),
+        _dilation_radius(spec, abm)).reshape(spec.n_dev, ncells)
 
 
 # ---------------------------------------------------------------------------
@@ -152,7 +241,9 @@ def init_sharded(key, cfg, spec: ShardSpec):
     split), so SE i's initial position/waypoint/LP are bit-identical to
     the oracle's row i. Empty slots get spread-out pad positions from an
     independent stream (they must not pile into one grid cell) and
-    lp = gid = -1.
+    lp = gid = -1. Under the sparse halo the state also carries the
+    initial `halo_need` bitmaps (the double buffer's first entry),
+    computed from the initial placement by `halo_need_bitmaps`.
     """
     n, L, S = spec.n_se, spec.n_lp, spec.n_slots
     k1, k2 = jax.random.split(key)
@@ -181,7 +272,7 @@ def init_sharded(key, cfg, spec: ShardSpec):
 
     ring = jnp.zeros((hst["ring"].shape[0], S, L), hst["ring"].dtype)
     ring = ring.at[:, slot_of_se, :].set(hst["ring"])
-    return {
+    state = {
         "pos": pad_pos.at[slot_of_se].set(st["pos"]),
         "waypoint": pad_pos.at[slot_of_se].set(st["waypoint"]),
         "mob": jnp.zeros((S, 2), jnp.float32).at[slot_of_se].set(st["mob"]),
@@ -197,11 +288,18 @@ def init_sharded(key, cfg, spec: ShardSpec):
         "key": k2,
         "t": jnp.int32(0),
     }
+    if _sparse_halo(spec):
+        state["halo_need"] = halo_need_bitmaps(
+            state["pos"], state["gid"] >= 0, state["pending_dst"], spec,
+            cfg.abm)
+    return state
 
 
 def unshard_state(state, spec: ShardSpec):
     """Scatter slot-major state back to gid-order — the oracle's layout,
-    so sharded and single-device final states compare byte-for-byte."""
+    so sharded and single-device final states compare byte-for-byte.
+    The `halo_need` double buffer is execution-layer plumbing with no
+    oracle counterpart, so it is dropped here."""
     n = spec.n_se
     gid = state["gid"]
     tgt = jnp.where(gid >= 0, gid, n)  # -1 -> out of bounds -> dropped
@@ -238,7 +336,11 @@ def unshard_state(state, spec: ShardSpec):
 def _apply_arrivals(f, t, cfg, spec: ShardSpec, me):
     """Complete in-flight migrations: local ones flip `lp` in place;
     cross-device ones are packed, all-gathered, and scattered into free
-    destination slots (the resharding op). Returns (fields, overflow).
+    destination slots (the resharding op). Returns (fields, overflow,
+    mig_wire) where mig_wire is the (n_dev, n_dev) byte matrix of the
+    admitted cross-device rows — the state transfer a ragged transport
+    would put on the wire this step (replicated: every device computes
+    the same admission decision, so the same matrix).
 
     Overflow never destroys SEs: a leaver that does not fit the
     migration buffer, or whose destination has no free slot this step,
@@ -297,6 +399,13 @@ def _apply_arrivals(f, t, cfg, spec: ShardSpec, me):
     admitted = g_valid & (rank < free_counts[g_dev])
     cap_overflow = (g_valid & ~admitted).any()
 
+    # the admitted cross-device rows are the priced migration payload
+    src_dev = jnp.arange(spec.n_dev * B, dtype=jnp.int32) // B
+    crossed = admitted & (g_dev != src_dev)
+    mig_wire = jnp.zeros((spec.n_dev, spec.n_dev), jnp.int32).at[
+        src_dev, g_dev].add(crossed.astype(jnp.int32)
+                            * _mig_row_bytes(f["ring"].shape[0], spec.n_lp))
+
     # vacate exactly the admitted leavers (deferred rows keep slot +
     # pending state); their ring rows go stale rather than zeroed —
     # stale rows are inert: evaluate() masks by valid, and arrivals
@@ -330,7 +439,7 @@ def _apply_arrivals(f, t, cfg, spec: ShardSpec, me):
     f["ring"] = f["ring"].at[:, target, :].set(
         jnp.moveaxis(g["ring"], 0, 1), mode="drop")
     overflow = mig_overflow | cap_overflow
-    return f, overflow
+    return f, overflow, mig_wire
 
 
 def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
@@ -338,29 +447,38 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
     the dynamic Migration Factor (see engine.run_window)."""
     abm = cfg.abm
     n, L, C, S = spec.n_se, spec.n_lp, spec.cap, spec.n_slots
+    D = spec.n_dev
     me = jax.lax.axis_index("lp")
     k_move = jax.random.wrap_key_data(k_move)
     k_send = jax.random.wrap_key_data(k_send)
 
     # 1. complete in-flight migrations (the resharding op)
-    f, reshard_overflow = _apply_arrivals(f, t, cfg, spec, me)
+    f, reshard_overflow, wire = _apply_arrivals(f, t, cfg, spec, me)
     valid = f["gid"] >= 0
     safe_gid = jnp.clip(f["gid"], 0, n - 1)
+    n_valid = valid.sum()
+    all_valid = jax.lax.psum(n_valid, "lp")
 
-    # 2. model evolution. RWP is row-local: full-array draws gathered by
-    # SE id, so every SE sees the same randomness wherever it is hosted
-    # (bit-identity). The other mobility models read global state (blob
-    # anchors, the flock's cell aggregates), so each device reconstructs
-    # the id-order arrays from an all-gather, advances them with the
-    # *same* `mobility_step` the oracle runs, and takes its own rows
-    # back — bit-identity by construction (see DESIGN.md).
-    if abm.mobility == "rwp":
-        my_wp_draw = rwp_draws(k_move, n, abm)[safe_gid]
-        new_pos, new_wp = rwp_apply(f["pos"], f["waypoint"], my_wp_draw, abm)
+    # 2. model evolution. The row-local models (rwp/hotspot/group)
+    # factor into full-array id-order draws + an elementwise apply: each
+    # device computes the same draw arrays, gathers its rows by SE id,
+    # and moves them in place — every SE sees the same randomness
+    # wherever it is hosted (bit-identity), and no position leaves the
+    # device. Flock reads global cell aggregates (a float scatter-add
+    # whose reduction order must match the oracle), so each device
+    # reconstructs the id-order arrays from an all-gather, advances them
+    # with the *same* `mobility_step` the oracle runs, and takes its own
+    # rows back — bit-identity by construction (see DESIGN.md).
+    gid_all = None  # id-order gather, shared by flock + repartition
+    if row_local_mobility(abm):
+        draws, mob_g = mobility_row_draws(k_move, n, f["mob_g"], abm)
+        my_draws = {k: v[safe_gid] for k, v in draws.items()}
+        new_pos, new_wp = mobility_row_apply(f["pos"], f["waypoint"],
+                                             f["mob"], my_draws, abm)
         f["pos"] = jnp.where(valid[:, None], new_pos, f["pos"])
         f["waypoint"] = jnp.where(valid[:, None], new_wp, f["waypoint"])
-    gid_all = None  # id-order gather, shared by non-RWP mobility + repartition
-    if abm.mobility != "rwp":
+        f["mob_g"] = mob_g
+    else:
         pos_all = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
         mob_all = jax.lax.all_gather(f["mob"], "lp", axis=0, tiled=True)
         gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
@@ -369,7 +487,7 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
             pos_all, mode="drop")
         mob_n = jnp.zeros((n, 2), f["mob"].dtype).at[tgt].set(
             mob_all, mode="drop")
-        wp_n = jnp.zeros((n, 2), jnp.float32)  # unused by non-RWP models
+        wp_n = jnp.zeros((n, 2), jnp.float32)  # unused by flock
         pos_n, _, mob_n, mob_g = mobility_step(k_move, pos_n, wp_n, mob_n,
                                                f["mob_g"], abm)
         f["pos"] = jnp.where(valid[:, None], pos_n[safe_gid], f["pos"])
@@ -377,30 +495,75 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         f["mob_g"] = mob_g
     sender = valid & jax.random.bernoulli(k_send, abm.p_interact, (n,))[safe_gid]
 
-    # halo exchange: fixed-size transport of every shard's positions/LPs
-    pos_g = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)  # (S, 2)
-    lp_g = jax.lax.all_gather(f["lp"], "lp", axis=0, tiled=True)  # (S,)
-    my_idx = me * C + jnp.arange(C, dtype=jnp.int32)
-    remote_valid = (lp_g >= 0) & (jnp.arange(S, dtype=jnp.int32) // C != me)
-
+    # 3. halo exchange + per-shard proximity
+    halo_overflow = jnp.bool_(False)
     grid_overflow = jnp.bool_(False)
+    halo_n = jnp.int32(0)
+    cellC = None
     if spec.grid is not None:
-        grid = neighbors.build_grid(pos_g, spec.grid)
+        gspec = spec.grid
+        nc = gspec.ncell
+        ncells = nc * nc
+        cellC = neighbors.cell_ids(f["pos"], gspec)
+        if D > 1:
+            hc = spec.halo_cap
+            # pack, per peer, exactly the rows its (one-step-stale,
+            # dilation-covered) need bitmap asks for
+            need = f["halo_need"]  # (D, ncells), negotiated at step t-1
+            want = need[:, jnp.where(valid, cellC, 0)]  # (D, C)
+            send = want & valid[None, :] & \
+                (jnp.arange(D, dtype=jnp.int32) != me)[:, None]
+            cnt = send.sum(axis=1)
+            order = jnp.argsort(~send, axis=1, stable=True)[:, :hc]
+            is_row = jnp.arange(hc)[None, :] < cnt[:, None]
+            send_pos = jnp.where(is_row[..., None], f["pos"][order], 0.0)
+            send_lp = jnp.where(is_row, f["lp"][order], -1)
+            halo_overflow = (cnt > hc).any()
+            # the one same-step collective of the proximity path
+            recv_pos = jax.lax.all_to_all(send_pos, "lp", split_axis=0,
+                                          concat_axis=0, tiled=True)
+            recv_lp = jax.lax.all_to_all(send_lp, "lp", split_axis=0,
+                                         concat_axis=0, tiled=True)
+            view_pos = jnp.concatenate([f["pos"],
+                                        recv_pos.reshape(D * hc, 2)])
+            view_lp = jnp.concatenate([f["lp"], recv_lp.reshape(D * hc)])
+            packed = jnp.minimum(cnt, hc)
+            wire = wire + jax.lax.psum(
+                jnp.zeros((D, D), jnp.int32).at[me].set(
+                    packed * HALO_ROW_BYTES), "lp")
+            # exact halo (the pre-existing halo_frac semantics): received
+            # rows inside this shard's true 3x3 need *now*. Exchange
+            # soundness guarantees every such row was received, so the
+            # sparse path measures the same quantity the full-gather
+            # transport did — trajectories stay baseline-comparable.
+            occ = jnp.zeros((ncells,), bool).at[
+                jnp.where(valid, cellC, ncells)].set(True, mode="drop")
+            exact = neighbors.dilate_mask(occ.reshape(nc, nc), 1).reshape(-1)
+            cellR = neighbors.cell_ids(recv_pos.reshape(D * hc, 2), gspec)
+            halo_n = ((recv_lp.reshape(-1) >= 0) & exact[cellR]).sum()
+        else:
+            view_pos, view_lp = f["pos"], f["lp"]
+        grid = neighbors.build_grid(view_pos, gspec, valid=view_lp >= 0)
         counts = neighbors.rows_grid_counts(
-            pos_g, lp_g, L, abm.area, abm.interaction_range, spec.grid,
-            grid, f["pos"], my_idx, sender)
-        halo = neighbors.halo_mask(
-            grid["cell"], neighbors.cell_ids(f["pos"], spec.grid), valid,
-            spec.grid)
-        halo_n = (halo & remote_valid).sum()
+            view_pos, view_lp, L, abm.area, abm.interaction_range, gspec,
+            grid, f["pos"], jnp.arange(C, dtype=jnp.int32), sender)
         grid_overflow = grid["overflow"]
     else:
+        # dense fallback (world too small to tessellate): the original
+        # full-gather transport — every position/LP to every device
+        pos_g = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
+        lp_g = jax.lax.all_gather(f["lp"], "lp", axis=0, tiled=True)
+        my_idx = me * C + jnp.arange(C, dtype=jnp.int32)
         counts = neighbors.rows_dense_counts(
             pos_g, lp_g, L, abm.area, abm.interaction_range,
             f["pos"], my_idx, sender)
-        halo_n = remote_valid.sum()  # no grid: every remote agent needed
+        halo_n = all_valid - n_valid  # no grid: every remote agent needed
+        if D > 1:
+            vcnt = jax.lax.all_gather(n_valid, "lp")  # (D,)
+            wire = wire + (vcnt[:, None] * HALO_ROW_BYTES
+                           * (1 - jnp.eye(D, dtype=jnp.int32)))
 
-    # 3. communication accounting: the per-pair flow matrix is integer,
+    # 3b. communication accounting: the per-pair flow matrix is integer,
     # so the cross-shard psum is exactly the oracle's id-order
     # scatter-add, and the scalar LCR terms derive from it (single
     # source of truth, same as engine.step). Rows of invalid slots are
@@ -421,26 +584,31 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
     n_evals = jnp.int32(0)
     mig_flows = jnp.zeros((L, L), jnp.int32)
     reparts = jnp.int32(0)
+    gather_row_bytes = 0 if row_local_mobility(abm) else 20  # pos+mob+gid
     if cfg.repartition_every > 0:
-        # mirror of engine.step's hook: reconstruct the id-order arrays
-        # from the already-gathered halo buffers, run the *same*
-        # partition function on every device, and take this shard's rows
-        # back — bit-identity with the oracle by construction, like the
-        # mobility models. Only the gid gather (a collective, so it may
-        # not live inside the cond) runs every step, and only when the
-        # non-RWP mobility path has not gathered it already; the
-        # reconstruction + partition math fires on repartition steps.
+        # mirror of engine.step's hook: reconstruct the id-order
+        # positions (a gather the sparse halo no longer performs), run
+        # the *same* partition function on every device, and take this
+        # shard's rows back — bit-identity with the oracle by
+        # construction, like the mobility models. The gathers (a
+        # collective, so they may not live inside the cond) run every
+        # step; the reconstruction + partition math fires on
+        # repartition steps.
         from repro.core.engine import REPART_SALT
         pcfg = part.from_engine(cfg)
         if gid_all is None:
             gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
+            gather_row_bytes += 12  # post-mobility pos + gid per valid row
+        else:
+            gather_row_bytes += 8  # gid rode the flock gather: pos only
+        rep_pos = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
         k_rep = jax.random.fold_in(k_move, REPART_SALT)
         do = (t > 0) & (t % cfg.repartition_every == 0)
 
         def _recompute():
             tgt = jnp.where(gid_all >= 0, gid_all, n)  # pads -> dropped
             pos_n = jnp.zeros((n, 2), f["pos"].dtype).at[tgt].set(
-                pos_g, mode="drop")
+                rep_pos, mode="drop")
             new_lp_n = part.partition(k_rep, pos_n,
                                       jnp.ones((n,), jnp.float32), pcfg)
             return new_lp_n[safe_gid]
@@ -456,6 +624,12 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         mig_flows = mig_flows + jax.lax.psum(
             jnp.zeros((L, L), jnp.int32).at[safe_lp, new_lp].add(
                 move.astype(jnp.int32)), "lp")
+    if gather_row_bytes and D > 1:
+        # id-order reconstruction gathers (flock / repartition): their
+        # valid rows are real row payload, priced like the halo rows
+        vcnt = jax.lax.all_gather(n_valid, "lp")  # (D,)
+        wire = wire + (vcnt[:, None] * gather_row_bytes
+                       * (1 - jnp.eye(D, dtype=jnp.int32)))
     if cfg.gaia_on:
         hstate = {k: f[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
         hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
@@ -486,10 +660,32 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
             jnp.zeros((L, L), jnp.int32).at[safe_lp, dest].add(
                 admit.astype(jnp.int32)), "lp")
 
+    # 6. negotiate step t+1's halo on step t's tail (the double buffer):
+    # each device contributes its post-mobility occupancy plus the cells
+    # of rows pending toward each destination, psum ORs the bitmaps, and
+    # the dilation (3x3 + one step of motion) makes the stale footprint
+    # a sound superset of tomorrow's true need. This is the only global
+    # agreement the exchange requires, and it overlaps this step's
+    # compute instead of stalling the next step's head.
+    if _sparse_halo(spec):
+        pend = valid & (f["pending_dst"] >= 0)
+        pdev = dev_of_lp(jnp.maximum(f["pending_dst"], 0), spec)
+        safe_cell = jnp.where(valid, cellC, ncells)
+        contrib = jnp.zeros((D, ncells), bool)
+        contrib = contrib.at[jnp.full((C,), me), safe_cell].set(
+            True, mode="drop")
+        contrib = contrib.at[jnp.where(pend, pdev, D), safe_cell].set(
+            True, mode="drop")
+        occ_all = jax.lax.psum(contrib.astype(jnp.int32), "lp") > 0
+        f["halo_need"] = neighbors.dilate_mask(
+            occ_all.reshape(D, nc, nc),
+            _dilation_radius(spec, abm)).reshape(D, ncells)
+
     halo_total = jax.lax.psum(halo_n, "lp").astype(jnp.float32)
-    remote_slots = jax.lax.psum(remote_valid.sum(), "lp").astype(jnp.float32)
+    remote_slots = ((D - 1) * all_valid).astype(jnp.float32)
     overflow = jax.lax.psum(
-        (reshard_overflow | grid_overflow).astype(jnp.int32), "lp")
+        (reshard_overflow | grid_overflow | halo_overflow).astype(jnp.int32),
+        "lp")
     metrics = {
         "local_msgs": local.astype(jnp.float32),
         "remote_msgs": remote.astype(jnp.float32),
@@ -502,8 +698,14 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         "repartitions": reparts.astype(jnp.float32),
         # mean remote agents a shard actually needs (its halo), as a
         # fraction of all remote agents — GAIA's clustering drives this
-        # down; a ragged transport would realize the saving on the wire
+        # down, and the sparse exchange realizes the saving on the wire
         "halo_frac": halo_total / jnp.maximum(remote_slots, 1.0),
+        # exact per-step bytes of useful row payload exchanged (packed
+        # halo rows + admitted cross-device migrations + id-order
+        # reconstruction gathers); wire_flows is its per-device-pair
+        # breakdown, priced by costmodel.wct_env
+        "bytes_on_wire": wire.sum().astype(jnp.float32),
+        "wire_flows": wire,
         "shard_overflow": (overflow > 0).astype(jnp.float32),
     }
     return f, metrics
@@ -517,30 +719,43 @@ _FIELD_SPECS = {
     "ptr": P("lp"), "since_eval": P("lp"), "last_mig": P("lp"),
 }
 
-#: batched replicas: a leading (unsharded) replica axis in front of
-#: every per-SE field's spec — the "lp" mesh axis keeps sharding the
-#: slot dimension, replicas ride along inside each shard
-_BATCH_FIELD_SPECS = {k: P(None, *v) for k, v in _FIELD_SPECS.items()}
-
 _METRIC_SPECS = {k: P() for k in
                  ("local_msgs", "remote_msgs", "migrations", "heu_evals",
                   "lcr", "lp_flows", "mig_flows", "repartitions",
-                  "halo_frac", "shard_overflow")}
+                  "halo_frac", "bytes_on_wire", "wire_flows",
+                  "shard_overflow")}
+
+
+def _field_specs(spec: ShardSpec):
+    """Per-SE field specs for this layout; the sparse halo adds the
+    replicated `halo_need` double buffer to the carried state."""
+    specs = dict(_FIELD_SPECS)
+    if _sparse_halo(spec):
+        specs["halo_need"] = P()
+    return specs
+
+
+def _batch_field_specs(spec: ShardSpec):
+    """Batched replicas: a leading (unsharded) replica axis in front of
+    every per-SE field's spec — the "lp" mesh axis keeps sharding the
+    slot dimension, replicas ride along inside each shard."""
+    return {k: P(None, *v) for k, v in _field_specs(spec).items()}
 
 
 def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
     """One sharded timestep. Same contract as `engine.step`, on
-    slot-major state; metrics additionally report halo_frac and
-    shard_overflow."""
+    slot-major state; metrics additionally report halo_frac,
+    bytes_on_wire, wire_flows and shard_overflow."""
     if mf is None:
         mf = jnp.float32(cfg.heuristic.mf)
     key, k_move, k_send = jax.random.split(state["key"], 3)
-    fields = {k: state[k] for k in _FIELD_SPECS}
+    fspecs = _field_specs(spec)
+    fields = {k: state[k] for k in fspecs}
     fn = shard_map(
         partial(_shard_step, cfg=cfg, spec=spec),
         mesh=mesh,
-        in_specs=(_FIELD_SPECS, P(), P(), P(), P()),
-        out_specs=(_FIELD_SPECS, _METRIC_SPECS),
+        in_specs=(fspecs, P(), P(), P(), P()),
+        out_specs=(fspecs, _METRIC_SPECS),
         check_rep=False,  # psum'd outputs are replicated by construction
     )
     new_fields, metrics = fn(fields, jax.random.key_data(k_move),
@@ -559,13 +774,14 @@ def step_sharded_batch(state, cfg, spec: ShardSpec, mesh: Mesh, mfs):
     the (R,) per-replica Migration Factor vector."""
     ks = jax.vmap(lambda k: jax.random.split(k, 3))(state["key"])
     key, k_move, k_send = ks[:, 0], ks[:, 1], ks[:, 2]
-    fields = {k: state[k] for k in _FIELD_SPECS}
+    fspecs = _field_specs(spec)
+    fields = {k: state[k] for k in fspecs}
     fn = shard_map(
         jax.vmap(partial(_shard_step, cfg=cfg, spec=spec),
                  in_axes=(0, 0, 0, 0, 0)),
         mesh=mesh,
-        in_specs=(_BATCH_FIELD_SPECS, P(), P(), P(), P()),
-        out_specs=(_BATCH_FIELD_SPECS, _METRIC_SPECS),
+        in_specs=(_batch_field_specs(spec), P(), P(), P(), P()),
+        out_specs=(_batch_field_specs(spec), _METRIC_SPECS),
         check_rep=False,
     )
     new_fields, metrics = fn(fields, jax.random.key_data(k_move),
@@ -605,6 +821,9 @@ def _series_counters(series):
     counters = series_counters(series)
     counters["mean_halo_frac"] = float(series["halo_frac"].mean())
     counters["shard_overflow"] = float(series["shard_overflow"].sum())
+    wf = np.asarray(series["wire_flows"], np.int64)
+    counters["bytes_on_wire"] = float(wf.sum())
+    counters["wire_flows"] = wf.sum(axis=0).tolist()
     return counters
 
 
