@@ -102,6 +102,17 @@ TRACKED = {
         "loop_ratio": ("lower", TIMING_TOL),
         "metrics.mean_lcr": ("higher", REL_TOL),
     },
+    # scale smoke (benchmarks/scale_smoke.py, nightly): the million-SE
+    # hotspot tier must stay *exact* (grid_overflow_steps ~ 0 — the
+    # zero baseline makes ABS_TOL the effective bound, so any tripped
+    # step fails) and inside its per-SE memory envelope. bytes/SE is
+    # machine-sized but allocator-stable on the linux runners; the wide
+    # TIMING_TOL absorbs allocator/runner variance, not leaks — an
+    # O(N^2)-shaped regression blows past 60% immediately.
+    "BENCH_scale.json": {
+        "rss_per_se_bytes": ("lower", TIMING_TOL),
+        "grid_overflow_steps": ("lower", REL_TOL),
+    },
 }
 
 

@@ -17,20 +17,28 @@ Backends:
 
 Acceptance gate (tentpole): grid >= 5x faster than dense at N = 50k.
 
-    PYTHONPATH=src python benchmarks/exp4_scaling.py [quick|full]
+    PYTHONPATH=src python benchmarks/exp4_scaling.py [quick|full|scale]
 
 quick: dense up to 50k, grid up to 100k, no pallas (a few minutes on one
-CPU core). full: adds 100k dense and small-N pallas backends.
+CPU core). full: adds 100k dense and small-N pallas backends. scale:
+quick plus the million-SE tier — grid-only cells at SCALE_NS, run at the
+paper's *constant* density (the fixed-area sweep above densifies with N,
+which is a different experiment), two decades past the old 50k ceiling.
+Scale cells run the CSR candidate path under a hard memory budget and
+record the grid_overflow flag so the curve is exact-or-loud.
 """
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
 
 import jax
 
-from repro.core.abm import ABMConfig, interaction_counts
+from repro.core.abm import ABMConfig, interaction_counts, \
+    interaction_counts_overflow
+from repro.core.engine import clear_compiled_caches
 from repro.core.neighbors import dense_lp_counts_chunked
 from repro.core.stats import replica_stats
 
@@ -38,15 +46,21 @@ OUT = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_proximity.json")
 
 NS = (1_000, 10_000, 50_000, 100_000)
+#: million-SE tier: two decades past the 50k gate, constant density
+SCALE_NS = (500_000, 1_000_000, 5_000_000)
+#: paper density 1e-4 SE/unit^2 (10k SEs on the 10_000^2 torus):
+#: area(n) = sqrt(n / density) = 100 * sqrt(n)
+SCALE_DENSITY = 1e-4
+SCALE_BUDGET_MB = 512  # hard candidate-memory budget for scale cells
 DENSE_CHUNK_ABOVE = 4096  # row-chunk the dense sweep past this N
 PAPER = dict(n_lp=4, area=10_000.0, speed=11.0, interaction_range=250.0,
              p_interact=0.2)
 
 
-def _inputs(n, seed=0):
+def _inputs(n, seed=0, area=None):
     k = jax.random.key(seed)
     pos = jax.random.uniform(jax.random.fold_in(k, 0), (n, 2),
-                             maxval=PAPER["area"])
+                             maxval=area or PAPER["area"])
     lp = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0,
                             PAPER["n_lp"])
     sender = jax.random.bernoulli(jax.random.fold_in(k, 2),
@@ -91,6 +105,30 @@ def measure(n: int, backend: str, reps: int) -> dict:
     return row
 
 
+def measure_scale(n: int, reps: int) -> dict:
+    """One constant-density grid cell of the million-SE tier: CSR
+    candidate path under `SCALE_BUDGET_MB`, overflow flag recorded (the
+    curve is only meaningful where it is exact)."""
+    area = 100.0 * math.sqrt(n)  # n / area^2 == SCALE_DENSITY
+    cfg = ABMConfig(n_se=n, proximity_backend="grid",
+                    mem_budget_mb=SCALE_BUDGET_MB,
+                    **dict(PAPER, area=area))
+    args = _inputs(n, area=area)
+    fn = jax.jit(lambda p, l, s: interaction_counts(p, l, s, cfg))
+    times = _bench(fn, args, reps)
+    stats = replica_stats(times)
+    mean_s = stats["mean"]
+    _, ovf = interaction_counts_overflow(*args, cfg)
+    spec = cfg.grid_spec()
+    return {"n": n, "backend": "grid", "mean_s": round(mean_s, 4),
+            "time_s": {k: round(v, 4) for k, v in stats.items()},
+            "reps": reps, "pairs_per_s": round(n * n / mean_s),
+            "area": round(area, 1), "density": SCALE_DENSITY,
+            "mem_budget_mb": SCALE_BUDGET_MB,
+            "grid_overflow": bool(ovf),
+            "grid": {"ncell": spec.ncell, "capacity": spec.capacity}}
+
+
 def main(scale: str = "quick"):
     # reps >= 3 everywhere: BENCH time_s entries must carry a real
     # ci95 (the n >= 3 schema requirement), dense@50k included
@@ -109,6 +147,21 @@ def main(scale: str = "quick"):
         print(f"[exp4] N={n:<7} {backend:<12} {row['mean_s']:.4f}s "
               f"({row['pairs_per_s']:.3g} pair/s)")
 
+    scale_rows = []
+    if scale == "scale":
+        for n in SCALE_NS:
+            # drop every compiled program from the previous cell: the
+            # sweep's peak RSS must be one cell's, not the sum of all
+            clear_compiled_caches()
+            jax.clear_caches()
+            row = measure_scale(n, reps=2 if n < 5_000_000 else 1)
+            scale_rows.append(row)
+            print(f"[exp4] N={n:<9} grid(scale)  {row['mean_s']:.4f}s "
+                  f"({row['pairs_per_s']:.3g} pair/s, "
+                  f"overflow={row['grid_overflow']})")
+        assert not any(r["grid_overflow"] for r in scale_rows), \
+            "scale tier overflowed its budgeted capacity (curve not exact)"
+
     by = {(r["n"], r["backend"]): r["mean_s"] for r in rows}
     speedups = {str(n): round(by[(n, "dense")] / by[(n, "grid")], 2)
                 for n in NS if (n, "dense") in by and (n, "grid") in by}
@@ -120,6 +173,12 @@ def main(scale: str = "quick"):
         "results": rows,
         "grid_speedup_over_dense": speedups,
     }
+    if scale_rows:
+        result["scale_tier"] = {
+            "density_se_per_unit2": SCALE_DENSITY,
+            "mem_budget_mb": SCALE_BUDGET_MB,
+            "results": scale_rows,
+        }
     with open(OUT, "w") as f:
         json.dump(result, f, indent=2)
     s50 = speedups.get("50000")

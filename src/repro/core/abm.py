@@ -73,6 +73,12 @@ class ABMConfig:
     p_interact: float = 0.2  # pi: P(SE sends an interaction this timestep)
     proximity_backend: str = "grid"  # see PROXIMITY_BACKENDS
     grid_capacity: int = 0  # per-cell member cap; 0 = auto from density
+    # hard memory budget (MiB) for the proximity data structures: sizes
+    # the CSR sweep's chunk transients and clamps the auto grid capacity
+    # (neighbors.budget_capacity). 0 = unbudgeted (historical defaults).
+    # A budget too small for the true density is loud, never silent: the
+    # clamped capacity trips `grid_overflow`, exactness is re-checkable.
+    mem_budget_mb: int = 0
     use_pallas: bool = False  # DEPRECATED: use proximity_backend="pallas"
     # --- mobility scenario (see module docstring) -----------------------
     mobility: str = "rwp"  # see MOBILITY_MODELS
@@ -116,23 +122,36 @@ class ABMConfig:
         """Cell-list geometry for this config, or None if the world is
         too small to tessellate (grid backends then use dense math).
 
-        An explicit `grid_capacity` always wins. Otherwise the auto
-        capacity depends on the mobility model: RWP keeps the uniform
-        Poisson bound; the clustered models size for K blobs of n/K SEs
-        at the model's spatial scale (attractor dwell radius / member
-        offset radius / a cell for emergent flocks) — the uniform bound
-        would overflow and silently undercount there."""
+        An explicit `grid_capacity` always wins (never budget-clamped).
+        Otherwise the auto capacity is density-adaptive in two stages:
+        the mobility model picks the density bound — RWP keeps the
+        uniform Poisson bound; the clustered models size for K blobs of
+        n/K SEs at the model's spatial scale (attractor dwell radius /
+        member offset radius / a cell for emergent flocks), where the
+        uniform bound would overflow and silently undercount — and then
+        a positive `mem_budget_mb` clamps it to what the budget affords
+        (neighbors.budget_capacity). The clamp keeps the exact-or-loud
+        contract: an underbudgeted capacity trips `grid_overflow`."""
         spec = neighbors.make_grid_spec(self.n_se, self.area,
                                         self.interaction_range,
                                         capacity=self.grid_capacity)
-        if spec is None or self.grid_capacity > 0 or self.mobility == "rwp":
+        if spec is None or self.grid_capacity > 0:
             return spec
-        radius = {"hotspot": 0.5 * self.group_radius,
-                  "group": self.group_radius,
-                  "flock": spec.cell}[self.mobility]
-        cap = neighbors.clustered_capacity(self.n_se, spec.ncell, spec.cell,
-                                           self.n_groups, radius)
-        return dataclasses.replace(spec, capacity=max(spec.capacity, cap))
+        if self.mobility != "rwp":
+            radius = {"hotspot": 0.5 * self.group_radius,
+                      "group": self.group_radius,
+                      "flock": spec.cell}[self.mobility]
+            cap = neighbors.clustered_capacity(self.n_se, spec.ncell,
+                                               spec.cell, self.n_groups,
+                                               radius)
+            spec = dataclasses.replace(spec,
+                                       capacity=max(spec.capacity, cap))
+        if self.mem_budget_mb > 0:
+            cap = min(spec.capacity,
+                      neighbors.budget_capacity(spec.ncell,
+                                                self.mem_budget_mb))
+            spec = dataclasses.replace(spec, capacity=cap)
+        return spec
 
 
 def mobility_globals(cfg: ABMConfig) -> int:
@@ -403,10 +422,16 @@ def interaction_counts_overflow(pos, lp, sender_mask, cfg: ABMConfig):
         backend = "dense"  # world too small to tessellate: exact fallback
     n = pos.shape[0]
     if backend == "grid":
-        grid = neighbors.build_grid(pos, spec)
-        counts = neighbors.rows_grid_counts(
+        # CSR sweep in sorted cell order (see neighbors.grid_lp_counts):
+        # no member table, no (N, 9 * capacity) candidate matrix — peak
+        # memory is bounded by the chunk budget regardless of N
+        grid = neighbors.build_grid(pos, spec, with_table=False)
+        order = grid["order"]
+        out = neighbors.rows_grid_counts(
             pos, lp, cfg.n_lp, cfg.area, cfg.interaction_range, spec, grid,
-            pos, jnp.arange(n, dtype=jnp.int32), sender_mask)
+            pos[order], order.astype(jnp.int32), sender_mask[order],
+            neighbors.chunk_entries(cfg.mem_budget_mb))
+        counts = jnp.zeros((n, cfg.n_lp), jnp.int32).at[order].set(out)
         return counts, grid["overflow"]
     if backend == "pallas":
         from repro.kernels.proximity.ops import proximity_lp_counts

@@ -94,8 +94,17 @@ class EngineConfig:
     # transfer is priced by wct/wct_env exactly like GAIA migrations.
     # 0 = never (the default path is bit-identical to pre-registry runs).
     repartition_every: int = 0
+    # hard memory budget (MiB) for the scale tier: propagated into
+    # abm.mem_budget_mb (CSR chunk transients + grid-capacity clamp) and
+    # into the sharded layout's halo/migration slot buffers
+    # (lp_shard.make_shard_spec). 0 = unbudgeted historical defaults; an
+    # explicit abm.mem_budget_mb wins over the engine-level knob.
+    mem_budget_mb: int = 0
 
     def __post_init__(self):
+        if self.mem_budget_mb > 0 and self.abm.mem_budget_mb == 0:
+            object.__setattr__(self, "abm", dataclasses.replace(
+                self.abm, mem_budget_mb=self.mem_budget_mb))
         if self.sharding not in SHARDINGS:
             raise ValueError(
                 f"sharding={self.sharding!r} not in {SHARDINGS}")
@@ -181,10 +190,16 @@ def step(state, cfg: EngineConfig, mf=None):
         pcfg = part.from_engine(cfg)
         k_rep = jax.random.fold_in(k_move, REPART_SALT)
         do = (t > 0) & (t % cfg.repartition_every == 0)
+        # hysteresis-aware backends (part.uses_prev) see the current map;
+        # the others get prev=None so their dispatch is byte-identical
+        # to the historical call (and so the sharded mirror only pays
+        # the id-order LP gather when the backend actually reads it)
+        prev = lp if part.uses_prev(pcfg) else None
         new_lp = jax.lax.cond(
             do,
             lambda: part.partition(k_rep, pos,
-                                   jnp.ones((n,), jnp.float32), pcfg),
+                                   jnp.ones((n,), jnp.float32), pcfg,
+                                   prev=prev),
             lambda: lp)
         move = (new_lp != lp) & (pending_dst < 0)
         pending_dst = jnp.where(move, new_lp, pending_dst)
@@ -265,7 +280,31 @@ def window_key_cfg(cfg: EngineConfig) -> EngineConfig:
         heuristic=dataclasses.replace(cfg.heuristic, mf=0.0))
 
 
-@functools.lru_cache(maxsize=None)
+#: bound on each compiled-scan memo (engine window/batch + their sharded
+#: mirrors in parallel/lp_shard.py): a benchmark sweep leaks one compiled
+#: executable per (cfg shape, n_steps) under the old maxsize=None, which
+#: the extended scaling matrix turns from a nuisance into gigabytes —
+#: LRU eviction keeps the working set of any one sweep while old shapes
+#: age out. Harnesses that iterate many shapes call
+#: `clear_compiled_caches()` between cells instead of relying on it.
+COMPILED_CACHE_SIZE = 32
+
+
+def clear_compiled_caches() -> None:
+    """Drop every memoized compiled scan (oracle + batched, and the
+    sharded mirrors if parallel/lp_shard.py has been imported). The
+    benchmark harness calls this between config cells so a sweep's peak
+    memory is one cell's executables, not the whole matrix's."""
+    import sys
+    _compiled_window_cached.cache_clear()
+    _compiled_batch_cached.cache_clear()
+    lp_shard = sys.modules.get("repro.parallel.lp_shard")
+    if lp_shard is not None:
+        lp_shard._compiled_window_sharded.cache_clear()
+        lp_shard._compiled_batch_sharded.cache_clear()
+
+
+@functools.lru_cache(maxsize=COMPILED_CACHE_SIZE)
 def _compiled_window_cached(cfg: EngineConfig, n_steps: int):
     def fn(state, mf):
         def body(s, _):
@@ -369,7 +408,7 @@ def replica_series(series, r: int):
     return {k: v[:, r] for k, v in series.items()}
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=COMPILED_CACHE_SIZE)
 def _compiled_batch_cached(cfg: EngineConfig, n_steps: int):
     def fn(states, mfs):
         def body(s, _):

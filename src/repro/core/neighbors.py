@@ -12,9 +12,18 @@ Layout (all shapes static so the whole thing JITs and runs under
 `lax.scan` inside the engine):
 
   * SEs are sorted by cell id (`argsort`), giving contiguous per-cell
-    segments; `searchsorted` yields per-cell start offsets and counts.
-  * A fixed-capacity member table `table[c, k]` (padded with -1) is
-    scattered from the sorted order. `capacity` must bound the true max
+    segments; `searchsorted` yields per-cell start offsets and counts —
+    a CSR layout of the grid (`order` = column indices, `starts` = row
+    pointers). The hot candidate sweep (`rows_grid_counts`) works
+    directly off this CSR form: for each of the 9 neighbor offsets it
+    gathers one `capacity`-wide segment window per row, chunked under a
+    memory budget, so peak candidate memory is O(chunk * capacity)
+    regardless of N — never the padded (N, 9 * capacity) matrix
+    (`candidate_table`, kept for the Pallas kernels and as a parity
+    oracle in tests).
+  * A fixed-capacity member table `table[c, k]` (padded with -1) can be
+    scattered from the sorted order (`build_grid(..., with_table=True)`;
+    the CSR sweep does not need it). `capacity` must bound the true max
     cell occupancy for exact results; `build_grid` returns an `overflow`
     flag so callers outside jit can verify. The auto capacity
     (`default_capacity`) is sized many Poisson standard deviations above
@@ -43,6 +52,33 @@ _NEIGH_OFFSETS = [(di, dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)]
 
 #: auto-chunking target: max candidate-matrix entries resident at once
 _CHUNK_BUDGET = 1 << 22
+
+#: resident bytes per (row, candidate-slot) entry of one chunked sweep:
+#: the ~5 live (chunk, capacity) i32/f32 intermediates (indices, validity,
+#: gathered positions, distances, mask) — what `chunk_entries` divides a
+#: byte budget by to size the chunk
+_BYTES_PER_CAND_ENTRY = 20
+
+
+def chunk_entries(mem_budget_mb: int) -> int:
+    """Candidate-entry budget for the chunked sweeps from a byte budget.
+
+    0 (no budget set) keeps the historical `_CHUNK_BUDGET` default
+    (~84 MB of transients); a positive budget divides by the resident
+    bytes per entry, floored so a chunk always holds at least one row of
+    any sane capacity."""
+    if mem_budget_mb <= 0:
+        return _CHUNK_BUDGET
+    return max(1 << 12, (mem_budget_mb << 20) // _BYTES_PER_CAND_ENTRY)
+
+
+def budget_capacity(ncell: int, mem_budget_mb: int) -> int:
+    """Largest member-table capacity whose (ncell^2, capacity) i32 table
+    fits in half the byte budget (the other half is the chunked sweep's
+    transients). Callers clamp the density-derived capacity with this;
+    a clamp below the true peak occupancy is *loud* (the `grid_overflow`
+    flag / metric fires), never a silent undercount."""
+    return max(1, (mem_budget_mb << 19) // (4 * ncell * ncell))
 
 
 def toroidal_d2(a, b, area: float):
@@ -137,14 +173,18 @@ def cell_ids(pos, spec: GridSpec):
     return cxy[:, 0] * spec.ncell + cxy[:, 1]
 
 
-def build_grid(pos, spec: GridSpec, valid=None):
-    """Bin positions; returns dict with the sorted layout + member table.
+def build_grid(pos, spec: GridSpec, valid=None, with_table=True):
+    """Bin positions; returns dict with the sorted (CSR) layout and,
+    optionally, the scattered member table.
 
     Keys: cell (N,) i32 cell id per SE; order (N,) the sort permutation;
     starts/counts (ncell^2,) segment offsets; table (ncell^2, capacity)
-    member indices padded with -1; overflow () bool — True iff some cell
+    member indices padded with -1 (only when `with_table`, which the
+    O(N)-memory CSR sweep does not need — `rows_grid_counts` reads
+    order/starts/counts directly); overflow () bool — True iff some cell
     holds more than `capacity` SEs (members beyond capacity are dropped
-    from the table, so exactness requires overflow == False).
+    from the table / the CSR segment window, so exactness requires
+    overflow == False).
 
     `valid` (N,) bool optionally masks rows out of the structure
     entirely: invalid rows bin to the virtual cell ncell^2, so they
@@ -165,21 +205,23 @@ def build_grid(pos, spec: GridSpec, valid=None):
     cids = jnp.arange(ncells, dtype=cell_sorted.dtype)
     starts = jnp.searchsorted(cell_sorted, cids)
     counts = jnp.searchsorted(cell_sorted, cids, side="right") - starts
-    # virtual-cell rows sort to the tail; their rank value is irrelevant
-    # because the scatter below drops their out-of-bounds cell id
-    rank = jnp.arange(n) - starts[jnp.minimum(cell_sorted, ncells - 1)]
-    table = jnp.full((ncells, spec.capacity), -1, jnp.int32)
-    # ranks beyond capacity fall outside the table and are dropped
-    table = table.at[cell_sorted, rank].set(order.astype(jnp.int32),
-                                            mode="drop")
-    return {
+    out = {
         "cell": cell,
         "order": order,
         "starts": starts,
         "counts": counts,
-        "table": table,
         "overflow": counts.max() > spec.capacity,
     }
+    if with_table:
+        # virtual-cell rows sort to the tail; their rank value is
+        # irrelevant because the scatter below drops their out-of-bounds
+        # cell id
+        rank = jnp.arange(n) - starts[jnp.minimum(cell_sorted, ncells - 1)]
+        table = jnp.full((ncells, spec.capacity), -1, jnp.int32)
+        # ranks beyond capacity fall outside the table and are dropped
+        out["table"] = table.at[cell_sorted, rank].set(
+            order.astype(jnp.int32), mode="drop")
+    return out
 
 
 def neighbor_cells(cell, spec: GridSpec):
@@ -271,32 +313,93 @@ def rows_counts_chunked(pos, lp, n_lp: int, area: float, rng: float,
 
 
 def rows_grid_counts(pos, lp, n_lp: int, area: float, rng: float,
-                     spec: GridSpec, grid, row_pos, row_idx, row_sender):
-    """Cell-list counts for a row subset against a prebuilt global grid.
+                     spec: GridSpec, grid, row_pos, row_idx, row_sender,
+                     budget_entries: int = 0):
+    """Cell-list counts for a row subset against a prebuilt global grid,
+    via the CSR segment sweep — O(chunk * capacity) peak memory.
 
-    The shard-local query: each row gathers its 3x3 candidate block from
-    the (replicated) member table and tests only those — O(k) per row
-    regardless of how many agents other shards own."""
+    For each of the 9 static neighbor offsets, every row gathers one
+    `capacity`-wide window of the sorted order starting at its neighbor
+    cell's segment offset (`order[starts[c] : starts[c] + capacity]`,
+    masked by the segment count) and folds the in-range tests into the
+    per-LP histogram immediately. Nothing the size of the old padded
+    (R, 9 * capacity) candidate matrix is ever materialized: rows are
+    processed in `lax.map` chunks sized so one offset's transients stay
+    within `budget_entries` candidate entries (default `_CHUNK_BUDGET`;
+    see `chunk_entries` for the byte-budget mapping).
+
+    Segment windows are truncated at `capacity` exactly like the member
+    table was (first `capacity` members in sorted order), so results are
+    bit-identical to the dense oracle whenever `grid["overflow"]` is
+    False and identically-undercounted (loud, never silent) when it is
+    not. This is the query core of both the single-device grid backend
+    and the per-shard halo path in parallel/lp_shard.py."""
+    n = pos.shape[0]
+    nc, cap = spec.ncell, spec.capacity
+    order = grid["order"].astype(jnp.int32)
+    starts = grid["starts"]
+    # parity with the member table: members past `capacity` are dropped
+    seg_cnt = jnp.minimum(grid["counts"], cap)
     row_cell = cell_ids(row_pos, spec)
-    cand = grid["table"][neighbor_cells(row_cell, spec)]
-    cand = cand.reshape(cand.shape[0], -1)
-    return rows_counts_chunked(pos, lp, n_lp, area, rng, row_pos, row_idx,
-                               row_sender, cand)
+    karange = jnp.arange(cap)
+
+    def counts_for(rp, ri, rs, rc):
+        cx, cy = rc // nc, rc % nc
+        acc = jnp.zeros((rp.shape[0], n_lp), jnp.int32)
+        for di, dj in _NEIGH_OFFSETS:
+            ncid = ((cx + di) % nc) * nc + (cy + dj) % nc
+            idx = starts[ncid][:, None] + karange[None, :]
+            valid = karange[None, :] < seg_cnt[ncid][:, None]
+            j = order[jnp.clip(idx, 0, n - 1)]
+            valid = valid & (j != ri[:, None])
+            in_range = toroidal_d2(rp[:, None, :], pos[j],
+                                   area) <= rng * rng
+            mask = (in_range & valid & rs[:, None]).astype(jnp.int32)
+            lpj = lp[j]
+            # n_lp masked reductions, not a scatter-add: XLA lowers
+            # scatters serially on CPU (see _counts_for_rows)
+            acc = acc + jnp.stack(
+                [jnp.sum(mask * (lpj == l), axis=1) for l in range(n_lp)],
+                axis=1)
+        return acc
+
+    r = row_pos.shape[0]
+    budget = budget_entries if budget_entries > 0 else _CHUNK_BUDGET
+    chunk = max(1, budget // max(cap, 1))
+    if r <= chunk:
+        return counts_for(row_pos, row_idx, row_sender, row_cell)
+    n_chunks = -(-r // chunk)
+    pad = n_chunks * chunk - r
+    rp = jnp.pad(row_pos, ((0, pad), (0, 0)))
+    ri = jnp.pad(row_idx, (0, pad), constant_values=-1)
+    rs = jnp.pad(row_sender, (0, pad))  # padded rows: not senders
+    rc = jnp.pad(row_cell, (0, pad))
+    out = jax.lax.map(lambda a: counts_for(*a),
+                      (rp.reshape(n_chunks, chunk, 2),
+                       ri.reshape(n_chunks, chunk),
+                       rs.reshape(n_chunks, chunk),
+                       rc.reshape(n_chunks, chunk)))
+    return out.reshape(n_chunks * chunk, n_lp)[:r]
 
 
 def grid_lp_counts(pos, lp, sender_mask, n_lp: int, area: float, rng: float,
-                   spec: GridSpec):
+                   spec: GridSpec, budget_entries: int = 0):
     """Cell-list version of the dense LP histogram — bit-identical output.
 
     counts[i, l] = #{j != i : toroidal_dist(i, j) <= rng, lp[j] == l},
-    zeroed for non-senders. Delegates to the chunked row-query core with
-    every agent as a row.
+    zeroed for non-senders. Delegates to the CSR segment sweep with every
+    agent as a row, visited in sorted cell order (the sort is free — the
+    grid build computes it — and gives the sweep's segment gathers
+    spatial locality); the scatter back to id order is exact, and the
+    counts are integers, so row order never perturbs the result.
     """
     n = pos.shape[0]
-    cand, _ = candidate_table(pos, spec)
-    return rows_counts_chunked(pos, lp, n_lp, area, rng, pos,
-                               jnp.arange(n, dtype=jnp.int32),
-                               sender_mask, cand)
+    grid = build_grid(pos, spec, with_table=False)
+    order = grid["order"]
+    out = rows_grid_counts(pos, lp, n_lp, area, rng, spec, grid,
+                           pos[order], order.astype(jnp.int32),
+                           sender_mask[order], budget_entries)
+    return jnp.zeros((n, n_lp), jnp.int32).at[order].set(out)
 
 
 def halo_mask(cell_ref, row_cell, row_valid, spec: GridSpec):

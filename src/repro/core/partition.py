@@ -33,6 +33,19 @@ it to recompute the identical map on every device. Backends:
                   descending score — simultaneous best responses with
                   load feasibility enforced by construction rather than
                   by a price term (see DESIGN.md §Partitioning backends).
+  "voronoi"       toroidal Voronoi tessellation with fuzzy (c-means)
+                  membership, after Alrabeei et al. (arXiv:2103.16278:
+                  Voronoi + fuzzy clustering for large-scale fish
+                  schooling). Seeds relax by fuzzy c-means (membership
+                  u[i, l] ~ (1/d2)^(1/(m-1)), circular-mean seed update
+                  weighted by u^m); the hard assignment admits by
+                  descending membership under the capacity bounds. The
+                  *fuzzy margin is the migration hysteresis*: when the
+                  previous map `prev` is passed, each SE's current LP
+                  gets a membership bonus (`hysteresis`), so only SEs
+                  whose Voronoi membership clearly favours another LP
+                  move — boundary SEs with near-tied memberships stop
+                  ping-ponging between repartitions.
 
 Capacity discipline: all backends (except the exactly-balanced
 "random") bound per-LP load by `capacity_bounds(cfg, total_weight)` —
@@ -50,7 +63,13 @@ import jax.numpy as jnp
 
 from repro.core import neighbors
 
-PARTITION_BACKENDS = ("random", "stripe", "kmeans", "bestresponse")
+PARTITION_BACKENDS = ("random", "stripe", "kmeans", "bestresponse",
+                      "voronoi")
+
+#: backends whose map depends on the previous SE -> LP assignment (the
+#: hysteresis input `prev`); the sharded repartition hook only pays the
+#: id-order LP gather for these
+_USES_PREV = frozenset({"voronoi"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,9 +80,16 @@ class PartitionConfig:
     n_lp: int = 4
     area: float = 10_000.0  # toroidal square side
     interaction_range: float = 250.0  # bestresponse affinity-graph radius
-    iters: int = 8  # Lloyd / best-response rounds
+    iters: int = 8  # Lloyd / best-response / fuzzy c-means rounds
     imbalance: float = 0.0  # allowed load slack over the capacity share
     shares: Optional[Tuple[float, ...]] = None  # per-LP capacity shares
+    # --- voronoi (fuzzy c-means) ----------------------------------------
+    fuzzy_m: float = 2.0  # fuzzifier (> 1; -> 1 is hard Voronoi)
+    # membership bonus on an SE's previous LP when `prev` is passed to
+    # partition(): memberships are normalized to sum 1, so 0.1 means an
+    # SE only migrates when another LP's membership beats its current
+    # LP's by more than 0.1 — boundary churn suppression
+    hysteresis: float = 0.1
 
     def __post_init__(self):
         if self.backend not in PARTITION_BACKENDS:
@@ -74,6 +100,10 @@ class PartitionConfig:
                              f"n_lp={self.n_lp}")
         if self.imbalance < 0:
             raise ValueError("imbalance must be >= 0")
+        if self.fuzzy_m <= 1.0:
+            raise ValueError("fuzzy_m must be > 1 (the c-means fuzzifier)")
+        if self.hysteresis < 0:
+            raise ValueError("hysteresis must be >= 0")
 
     def share_array(self):
         if self.shares is None:
@@ -149,7 +179,7 @@ def capacity_assign(cost, weights, caps):
 # ---------------------------------------------------------------------------
 
 
-def _random(key, pos, weights, cfg: PartitionConfig):
+def _random(key, pos, weights, cfg: PartitionConfig, prev=None):
     # the paper's §5.1 baseline, verbatim from the pre-registry init_abm
     # line: a permuted round-robin (random but equal-sized). The exact
     # expression is a seed-compat contract (tests/test_partition.py).
@@ -157,7 +187,7 @@ def _random(key, pos, weights, cfg: PartitionConfig):
     return jax.random.permutation(key, jnp.arange(n) % cfg.n_lp)
 
 
-def _stripe(key, pos, weights, cfg: PartitionConfig):
+def _stripe(key, pos, weights, cfg: PartitionConfig, prev=None):
     # 1-D informed placement: rank along x (ties by y, then index) and
     # cut the ranked line into slabs at the shares' cumulative-weight
     # boundaries. Key unused: the map is a pure function of geometry.
@@ -178,7 +208,7 @@ def _toroidal_dist2(pos, cent, area):
     return (d ** 2).sum(-1)  # (N, L)
 
 
-def _kmeans(key, pos, weights, cfg: PartitionConfig):
+def _kmeans(key, pos, weights, cfg: PartitionConfig, prev=None):
     # Balanced Lloyd: capacity-constrained toroidal-distance assignment,
     # circular-mean centroid update (the mean of points on a torus is
     # the per-axis circular mean — a Euclidean mean would tear blobs
@@ -207,7 +237,7 @@ def _kmeans(key, pos, weights, cfg: PartitionConfig):
                            weights, caps)
 
 
-def _bestresponse(key, pos, weights, cfg: PartitionConfig):
+def _bestresponse(key, pos, weights, cfg: PartitionConfig, prev=None):
     # Kurve-style iterative node-level best response on the sampled
     # interaction graph: the proximity graph at the current positions IS
     # the expected interaction graph (every in-range SE is a recipient),
@@ -231,18 +261,78 @@ def _bestresponse(key, pos, weights, cfg: PartitionConfig):
                                                             weights, cfg))
 
 
+def _fuzzy_memberships(pos, seeds, cfg: PartitionConfig):
+    """(N, L) fuzzy c-means memberships of each SE in each Voronoi seed:
+    u[i, l] ~ (1 / d2(i, l))^(1 / (m - 1)), rows normalized to sum 1.
+    The epsilon regularizes an SE sitting exactly on a seed (its row
+    then concentrates on that seed, as the limit prescribes)."""
+    d2 = _toroidal_dist2(pos, seeds, cfg.area)
+    inv = (d2 + 1e-9) ** (-1.0 / (cfg.fuzzy_m - 1.0))
+    return inv / inv.sum(axis=1, keepdims=True)
+
+
+def _voronoi(key, pos, weights, cfg: PartitionConfig, prev=None):
+    # Toroidal Voronoi seeds relaxed by fuzzy c-means (Alrabeei et al.):
+    # soft memberships instead of Lloyd's hard assignment, circular-mean
+    # seed update weighted by u^m * weight. Seeds init uniformly from
+    # the key (permutation-equivariance, like _kmeans). The final map is
+    # the capacity-constrained admission by descending membership; with
+    # `prev`, the previous LP's membership gets the hysteresis bonus, so
+    # only clear wins migrate (see the module docstring).
+    L = cfg.n_lp
+    caps = capacity_bounds(cfg, weights.sum())
+    seeds = jax.random.uniform(key, (L, 2), maxval=cfg.area)
+    two_pi = 2.0 * jnp.pi
+
+    def relax(_, seeds):
+        um = (_fuzzy_memberships(pos, seeds, cfg) ** cfg.fuzzy_m) \
+            * weights[:, None]  # (N, L)
+        ang = pos * (two_pi / cfg.area)
+        s = um.T @ jnp.sin(ang)  # (L, 2)
+        c = um.T @ jnp.cos(ang)
+        new = (jnp.arctan2(s, c) % two_pi) * (cfg.area / two_pi)
+        # a weightless seed (tiny N) stays put, like an empty k-means
+        # cluster
+        return jnp.where(um.sum(0)[:, None] > 1e-12, new, seeds)
+
+    seeds = jax.lax.fori_loop(0, cfg.iters, relax, seeds)
+    u = _fuzzy_memberships(pos, seeds, cfg)
+    if prev is not None:
+        prev = jnp.asarray(prev)
+        hold = (prev >= 0) & (prev < L)  # unassigned rows get no bonus
+        bonus = jnp.where(hold[:, None],
+                          jax.nn.one_hot(jnp.clip(prev, 0, L - 1), L,
+                                         dtype=u.dtype) * cfg.hysteresis,
+                          0.0)
+        u = u + bonus
+    return capacity_assign(-u, weights, caps)
+
+
 _REGISTRY = {
     "random": _random,
     "stripe": _stripe,
     "kmeans": _kmeans,
     "bestresponse": _bestresponse,
+    "voronoi": _voronoi,
 }
 
 
-def partition(key, pos, weights, cfg: PartitionConfig):
+def uses_prev(cfg: PartitionConfig) -> bool:
+    """Does this backend read the previous SE -> LP map (`prev`)?
+    Callers that must *pay* for id-order LP reconstruction (the sharded
+    repartition hook) gate the gather on this, so prev-blind backends
+    keep their exact historical wire accounting."""
+    return cfg.backend in _USES_PREV
+
+
+def partition(key, pos, weights, cfg: PartitionConfig, prev=None):
     """Dispatch to the configured backend: (key, pos (N, 2),
-    weights (N,), cfg) -> lp (N,) int32. Pure and deterministic — the
-    sharded engine recomputes the identical map on every device."""
+    weights (N,), cfg[, prev (N,) int32]) -> lp (N,) int32. Pure and
+    deterministic — the sharded engine recomputes the identical map on
+    every device. `prev` is the current map for hysteresis-aware
+    backends (see `uses_prev`); the others ignore it, so passing it
+    never perturbs their output."""
     lp = _REGISTRY[cfg.backend](key, pos,
-                                jnp.asarray(weights, jnp.float32), cfg)
+                                jnp.asarray(weights, jnp.float32), cfg,
+                                prev=prev)
     return lp.astype(jnp.int32)

@@ -71,14 +71,27 @@ def summarize(reps: List[Dict], keys: Optional[Iterable[str]] = None,
     """Per-metric `replica_stats` over a list of per-replica counter
     dicts (engine `run_batch` output). Defaults to every scalar metric
     present in the first replica; matrix counters (nested lists) are
-    skipped. `ndigits` optionally rounds for JSON friendliness."""
+    skipped. `ndigits` optionally rounds for JSON friendliness.
+
+    Boolean counters are *flags*, not measurements — `bool` is an `int`
+    subclass in Python, so the naive numeric test would silently average
+    alarm flags like `grid_overflow`/`shard_overflow` into a meaningless
+    mean/std/ci95 dict. Flags are instead reported as
+    `{"any": bool, "count": int, "n": int}` (any replica tripped / how
+    many / out of how many) — a shape `is_stats` rejects, so the
+    regression gate can never mistake a flag for a statistic."""
     if not reps:
         raise ValueError("summarize needs at least one replica")
     if keys is None:
         keys = [k for k, v in reps[0].items() if isinstance(v, (int, float))]
     out = {}
     for k in keys:
-        st = replica_stats([r[k] for r in reps])
+        vals = [r[k] for r in reps]
+        if isinstance(reps[0][k], bool):
+            out[k] = {"any": any(vals),
+                      "count": sum(1 for v in vals if v), "n": len(vals)}
+            continue
+        st = replica_stats(vals)
         if ndigits is not None:
             st = {kk: (round(v, ndigits) if kk != "n" else v)
                   for kk, v in st.items()}

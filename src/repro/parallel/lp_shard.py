@@ -82,6 +82,7 @@ from repro.core import partition as part
 from repro.core.abm import (init_abm, max_step_displacement,
                             mobility_row_apply, mobility_row_draws,
                             mobility_step, row_local_mobility)
+from repro.core.engine import COMPILED_CACHE_SIZE
 
 #: per-SE state rows that migrate with an SE between shards ("mob" is
 #: the per-SE mobility state: member offset / heading — full-row packed)
@@ -152,6 +153,7 @@ def make_shard_spec(cfg) -> ShardSpec:
             f"sharding='lp_device' supports proximity_backend 'grid' and "
             f"'dense', not {backend!r} (the Pallas kernels are per-device "
             "TPU kernels; run them under sharding='none')")
+    budget_mb = cfg.abm.mem_budget_mb  # engine knob propagates into abm
     if cfg.shard_capacity > 0:
         cap = cfg.shard_capacity
     elif d == 1:
@@ -163,8 +165,20 @@ def make_shard_spec(cfg) -> ShardSpec:
         cap = min(n, -(-2 * n // d) + 8)
     # a device can never have more than `cap` same-step leavers, so an
     # explicit mig_capacity above that is clamped (not an error)
-    mig_cap = min(cap, cfg.mig_capacity) if cfg.mig_capacity > 0 \
-        else min(cap, max(32, cap // 2))
+    if cfg.mig_capacity > 0:
+        mig_cap = min(cap, cfg.mig_capacity)
+    else:
+        mig_cap = min(cap, max(32, cap // 2))
+        if budget_mb > 0 and d > 1:
+            # budgeted auto: the all-gathered migration buffer is
+            # (d * mig_cap) rows of _mig_row_bytes each per device —
+            # give it a quarter of the budget. Exact-or-loud: a
+            # same-step leaver burst beyond the buffer defers rows and
+            # raises shard_overflow, never drops SEs.
+            w = cfg.heuristic.kappa if cfg.heuristic.kind == 1 \
+                else cfg.heuristic.omega
+            rows = (budget_mb << 18) // (d * _mig_row_bytes(w, L))
+            mig_cap = min(mig_cap, max(16, rows))
     grid = None
     if backend == "grid":
         # the mobility-aware oracle geometry: the local view (own rows +
@@ -177,11 +191,21 @@ def make_shard_spec(cfg) -> ShardSpec:
         halo_cap = 1  # no exchange: dense fallback / single device
     elif cfg.halo_capacity > 0:
         halo_cap = min(cfg.halo_capacity, cap)
+    elif budget_mb > 0:
+        # budgeted auto instead of the worst case: send + recv buffers
+        # are 2 * d * halo_cap rows of HALO_ROW_BYTES per device — give
+        # them a quarter of the budget. Safe-by-alarm, not by bound: a
+        # peer needing more rows than this from one device trips
+        # shard_overflow (exact-or-loud), and GAIA's clustering is what
+        # keeps real needs far below the worst case.
+        rows = (budget_mb << 18) // (2 * d * HALO_ROW_BYTES)
+        halo_cap = min(cap, max(32, rows))
     else:
         # a peer can need every row a device owns (e.g. the random
         # initial partition scatters each LP across the whole torus), so
         # only cap itself is safe for arbitrary partitions; tighten via
-        # EngineConfig.halo_capacity once GAIA has clustered the shards
+        # EngineConfig.halo_capacity (or a mem_budget_mb) once GAIA has
+        # clustered the shards
         halo_cap = cap
     return ShardSpec(n_dev=d, n_lp=L, n_se=n, cap=cap, mig_cap=mig_cap,
                      halo_cap=halo_cap, grid=grid)
@@ -543,10 +567,18 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
             halo_n = ((recv_lp.reshape(-1) >= 0) & exact[cellR]).sum()
         else:
             view_pos, view_lp = f["pos"], f["lp"]
-        grid = neighbors.build_grid(view_pos, gspec, valid=view_lp >= 0)
-        counts = neighbors.rows_grid_counts(
+        grid = neighbors.build_grid(view_pos, gspec, valid=view_lp >= 0,
+                                    with_table=False)
+        # visit local rows in cell-sorted order (same trick as the
+        # engine path: the CSR segment gathers get spatial locality);
+        # integer counts scatter back to slot order exactly
+        row_order = jnp.argsort(jnp.where(valid, cellC, ncells),
+                                stable=True).astype(jnp.int32)
+        out = neighbors.rows_grid_counts(
             view_pos, view_lp, L, abm.area, abm.interaction_range, gspec,
-            grid, f["pos"], jnp.arange(C, dtype=jnp.int32), sender)
+            grid, f["pos"][row_order], row_order, sender[row_order],
+            neighbors.chunk_entries(abm.mem_budget_mb))
+        counts = jnp.zeros((C, L), jnp.int32).at[row_order].set(out)
         grid_overflow = grid["overflow"]
     else:
         # dense fallback (world too small to tessellate): the original
@@ -602,6 +634,13 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         else:
             gather_row_bytes += 8  # gid rode the flock gather: pos only
         rep_pos = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
+        rep_lp = None
+        if part.uses_prev(pcfg):
+            # hysteresis backends read the current id-order map too; the
+            # gather (a collective: outside the cond) is only paid — and
+            # only priced — when the backend actually consumes it
+            rep_lp = jax.lax.all_gather(f["lp"], "lp", axis=0, tiled=True)
+            gather_row_bytes += 4
         k_rep = jax.random.fold_in(k_move, REPART_SALT)
         do = (t > 0) & (t % cfg.repartition_every == 0)
 
@@ -609,8 +648,15 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
             tgt = jnp.where(gid_all >= 0, gid_all, n)  # pads -> dropped
             pos_n = jnp.zeros((n, 2), f["pos"].dtype).at[tgt].set(
                 rep_pos, mode="drop")
+            prev = None
+            if rep_lp is not None:
+                # every live SE appears in the gather, so the scatter
+                # rebuilds exactly the oracle's `lp` (bit-identity)
+                prev = jnp.full((n,), -1, jnp.int32).at[tgt].set(
+                    rep_lp, mode="drop")
             new_lp_n = part.partition(k_rep, pos_n,
-                                      jnp.ones((n,), jnp.float32), pcfg)
+                                      jnp.ones((n,), jnp.float32), pcfg,
+                                      prev=prev)
             return new_lp_n[safe_gid]
 
         new_lp = jax.lax.cond(do, _recompute, lambda: f["lp"])
@@ -794,7 +840,7 @@ def step_sharded_batch(state, cfg, spec: ShardSpec, mesh: Mesh, mfs):
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=COMPILED_CACHE_SIZE)
 def _compiled_window_sharded(key_cfg, n_steps: int):
     # mirror of engine._compiled_window: one jitted scan per config
     # shape, MF dynamic (key_cfg comes pre-normalized via
@@ -850,7 +896,7 @@ def run_sharded(key, cfg):
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=COMPILED_CACHE_SIZE)
 def _compiled_batch_sharded(key_cfg, n_steps: int):
     # mirror of engine._compiled_batch: one jitted batched scan per
     # config shape, per-replica MF dynamic (jit re-specializes per

@@ -117,6 +117,39 @@ def test_missing_baseline_metric_fails(tmp_path):
     assert [s for _, s, _ in rows] == ["fail"]
 
 
+def test_is_stats_as_stats_stay_in_sync():
+    """`repro.core.stats.is_stats` and `compare.as_stats` re-state the
+    same schema-detection rule on opposite sides of the PYTHONPATH
+    boundary (compare.py must import without src/). One shared fixture
+    sweeps the cases: whenever `as_stats` accepts a value, its
+    is_legacy flag must be the exact negation of `is_stats`; whenever
+    `as_stats` rejects (loud float() failure), `is_stats` must already
+    have said 'not a stats dict'."""
+    from repro.core import stats
+
+    fixtures = [
+        1.0,                                              # legacy float
+        3,                                                # legacy int
+        _stats(0.5, ci95=0.1),                            # full schema
+        {"mean": 7.5, "std": 0.0, "ci95": 0.0, "n": 1},   # n=1 point est.
+        {**_stats(0.5, ci95=0.1), "unit": "s"},           # extra keys ok
+        {"mean": 1.0},                                    # partial dict
+        {"mean": 1.0, "std": 0.0, "ci95": 0.0},           # missing n
+        {"any": True, "count": 1, "n": 3},                # flag shape
+        {"nested": {"mean": 1.0}},                        # mis-pointed path
+    ]
+    for v in fixtures:
+        try:
+            _, _, legacy = compare.as_stats(v)
+        except (TypeError, ValueError):
+            assert not stats.is_stats(v), v
+        else:
+            assert stats.is_stats(v) == (not legacy), v
+    # and the n=1 degenerate case really is a zero-width interval
+    mean, ci95, legacy = compare.as_stats(stats.replica_stats([7.5]))
+    assert (mean, ci95, legacy) == (7.5, 0.0, False)
+
+
 def test_main_exit_codes(tmp_path, capsys):
     basedir = tmp_path / "BENCH_baseline"
     basedir.mkdir()

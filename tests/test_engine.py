@@ -177,3 +177,39 @@ def test_toroidal_wraparound():
     counts = np.asarray(interaction_counts(
         pos, lp, jnp.array([True, True]), cfg))
     assert counts[0, 1] == 1 and counts[1, 0] == 1
+
+
+# ---------------------------------------------------------------------------
+# compiled-program caches (bounded + clearable)
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_caches_bounded_and_clearable():
+    """The per-(cfg, n_steps) compiled-window caches used to be
+    unbounded lru_caches: a benchmark sweeping N leaked every XLA
+    executable it ever built. They must be bounded, and
+    `clear_compiled_caches()` must empty every one of them — including
+    the sharded mirrors when lp_shard has been imported."""
+    from repro.core import engine
+    from repro.parallel import lp_shard
+
+    for fn in (engine._compiled_window_cached, engine._compiled_batch_cached,
+               lp_shard._compiled_window_sharded,
+               lp_shard._compiled_batch_sharded):
+        assert fn.cache_info().maxsize == engine.COMPILED_CACHE_SIZE
+
+    from repro.core.engine import run_window
+    cfg = EngineConfig(abm=SMALL, heuristic=HeuristicConfig(mf=1.2, mt=5),
+                       gaia_on=False, timesteps=4)
+    st = init_engine(jax.random.key(3), cfg)
+    run_window(st, cfg, 4)
+    assert engine._compiled_window_cached.cache_info().currsize > 0
+    engine.clear_compiled_caches()
+    for fn in (engine._compiled_window_cached, engine._compiled_batch_cached,
+               lp_shard._compiled_window_sharded,
+               lp_shard._compiled_batch_sharded):
+        assert fn.cache_info().currsize == 0
+    # cleared, not broken: the next call recompiles and still runs
+    st2, counters = run_window(st, cfg, 4)
+    assert counters["local_msgs"] + counters["remote_msgs"] >= 0
+    assert engine._compiled_window_cached.cache_info().currsize == 1

@@ -183,3 +183,136 @@ def test_use_pallas_shim_warns_and_maps():
 def test_invalid_backend_rejected():
     with pytest.raises(ValueError):
         ABMConfig(proximity_backend="voronoi")
+
+
+# ---------------------------------------------------------------------------
+# CSR candidate path (million-SE tier): bit-identity under any memory budget
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("budget_entries", [1, 37, 4096])
+def test_csr_chunk_budget_bit_identical(budget_entries):
+    """The lax.map chunk size is a pure memory knob: any budget — down to
+    one candidate entry (one row) per chunk, forcing ~200 sequential
+    chunks — must reproduce the dense oracle bit-for-bit."""
+    n, n_lp, area, rng = 200, 4, 1000.0, 80.0
+    pos, lp, sender = _case(9, n, n_lp, area, rng)
+    cfg = ABMConfig(n_se=n, n_lp=n_lp, area=area, interaction_range=rng)
+    ref = _dense_counts(pos, lp, sender, cfg)
+    spec = cfg.grid_spec()
+    got = neighbors.grid_lp_counts(pos, lp, sender, n_lp, area, rng, spec,
+                                   budget_entries=budget_entries)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("mobility", ["hotspot", "group", "flock"])
+def test_csr_parity_across_mobility_models(mobility):
+    """Property contract for the sparse candidate path: on every mobility
+    model's (clustered, non-uniform) initial layout, the CSR sweep with
+    the mobility-aware auto capacity is bit-identical to the dense
+    oracle."""
+    from repro.core.abm import init_abm
+
+    cfg = ABMConfig(n_se=256, n_lp=4, area=2000.0, interaction_range=100.0,
+                    mobility=mobility, n_groups=4, group_radius=150.0)
+    st = init_abm(jax.random.key(17), cfg)
+    pos, lp = st["pos"], st["lp"]
+    sender = jnp.ones((cfg.n_se,), bool)
+    ref = _dense_counts(pos, lp, sender, cfg)
+    got = interaction_counts(pos, lp, sender, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_csr_overflow_drop_set_matches_table_oracle():
+    """Adversarial layout that overflows the uniform capacity: the CSR
+    sweep must drop EXACTLY the members the padded candidate-table
+    oracle drops (both keep the first `capacity` members of each cell in
+    sorted-id order), so even the overflowed counts — not just the flag —
+    are bit-identical across representations."""
+    n, n_lp, area, rng = 240, 4, 1000.0, 100.0
+    k = jax.random.key(21)
+    # three tight blobs -> uniform capacity is guaranteed to overflow
+    centers = jnp.array([[100.0, 100.0], [500.0, 900.0], [900.0, 400.0]])
+    pos = (centers[jnp.arange(n) % 3]
+           + jax.random.normal(k, (n, 2)) * 15.0) % area
+    lp = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, n_lp)
+    sender = jnp.ones((n,), bool)
+    spec = neighbors.make_grid_spec(n, area, rng)
+    assert bool(neighbors.build_grid(pos, spec)["overflow"])
+
+    cand, _ = neighbors.candidate_table(pos, spec)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    table_counts = neighbors.rows_counts_chunked(
+        pos, lp, n_lp, area, rng, pos, idx, sender, cand)
+    csr_counts = neighbors.grid_lp_counts(pos, lp, sender, n_lp, area, rng,
+                                          spec)
+    np.testing.assert_array_equal(np.asarray(csr_counts),
+                                  np.asarray(table_counts))
+    # and both really are undercounts (the overflow is not hypothetical)
+    cfg = ABMConfig(n_se=n, n_lp=n_lp, area=area, interaction_range=rng)
+    ref = _dense_counts(pos, lp, sender, cfg)
+    assert int(np.asarray(csr_counts).sum()) < int(np.asarray(ref).sum())
+
+
+def test_mem_budget_clamp_is_loud():
+    """A hard memory budget may shrink the per-cell capacity below what
+    a clustered layout needs — the contract is exact-or-loud: the clamp
+    must trip the overflow flag, never silently undercount."""
+    from repro.core.abm import init_abm, interaction_counts_overflow
+
+    cfg = ABMConfig(n_se=1024, n_lp=4, area=4000.0, interaction_range=100.0,
+                    mobility="hotspot", n_groups=1, group_radius=100.0,
+                    mem_budget_mb=1)
+    spec = cfg.grid_spec()
+    unclamped = dataclasses.replace(cfg, mem_budget_mb=0).grid_spec()
+    assert spec.capacity == neighbors.budget_capacity(spec.ncell, 1)
+    assert spec.capacity < unclamped.capacity
+    st = init_abm(jax.random.key(4), cfg)
+    sender = jnp.ones((cfg.n_se,), bool)
+    _, overflow = interaction_counts_overflow(st["pos"], st["lp"], sender,
+                                              cfg)
+    assert bool(overflow)
+    # the unclamped (budget-free) spec is exact on the same layout
+    assert not bool(neighbors.build_grid(st["pos"], unclamped)["overflow"])
+
+
+def test_generous_budget_leaves_simulation_bit_identical():
+    """mem_budget_mb is a speed/memory knob, never a simulation knob: a
+    budget roomy enough not to clamp capacity must give bit-identical
+    engine trajectories (chunk boundaries move; counts must not)."""
+    abm = ABMConfig(n_se=150, n_lp=4, area=1000.0, speed=5.0,
+                    interaction_range=80.0, p_interact=0.3)
+    base = EngineConfig(abm=abm, heuristic=HeuristicConfig(mf=1.2, mt=5),
+                        gaia_on=True, timesteps=25)
+    st0, s0, _ = run(jax.random.key(13), base)
+    st1, s1, _ = run(jax.random.key(13),
+                     dataclasses.replace(base, mem_budget_mb=256))
+    np.testing.assert_array_equal(np.asarray(st0["pos"]),
+                                  np.asarray(st1["pos"]))
+    np.testing.assert_array_equal(np.asarray(st0["lp"]),
+                                  np.asarray(st1["lp"]))
+    for k in ("local_msgs", "remote_msgs", "migrations"):
+        np.testing.assert_array_equal(np.asarray(s0[k]), np.asarray(s1[k]))
+
+
+def test_budget_helpers():
+    # 0 = unlimited -> the fixed default chunk budget
+    assert neighbors.chunk_entries(0) == neighbors._CHUNK_BUDGET
+    # 1 MB / 20 bytes per candidate entry, floored at 4096 entries
+    assert neighbors.chunk_entries(1) == (1 << 20) // 20
+    assert neighbors.chunk_entries(-5) == neighbors._CHUNK_BUDGET
+    # capacity budget is monotone in the budget and never below 1
+    caps = [neighbors.budget_capacity(400, mb) for mb in (1, 8, 64)]
+    assert caps == sorted(caps) and caps[0] >= 1
+
+
+def test_engine_budget_propagates_to_abm():
+    abm = ABMConfig(n_se=64, n_lp=2, area=500.0, interaction_range=100.0)
+    cfg = EngineConfig(abm=abm, heuristic=HeuristicConfig(),
+                       mem_budget_mb=64)
+    assert cfg.abm.mem_budget_mb == 64
+    # an explicit per-ABM budget is not overridden by the engine knob
+    abm2 = dataclasses.replace(abm, mem_budget_mb=8)
+    cfg2 = EngineConfig(abm=abm2, heuristic=HeuristicConfig(),
+                        mem_budget_mb=64)
+    assert cfg2.abm.mem_budget_mb == 8

@@ -116,6 +116,9 @@ def test_backend_bit_identical_across_sharding(backend):
     # hotspot exercises the sharded hook's other gather path: it reuses
     # the id-order gid gather the non-RWP mobility branch already did
     ("kmeans", "hotspot"),
+    # voronoi exercises the prev-lp gather (uses_prev): the sharded hook
+    # must reassemble the id-order map before the fuzzy recompute
+    ("voronoi", "rwp"), ("voronoi", "hotspot"),
 ])
 def test_periodic_repartition_bit_identical_across_sharding(backend,
                                                             mobility):
@@ -196,6 +199,68 @@ def test_partitioner_validation():
         part.PartitionConfig(shares=(0.5, 0.5), n_lp=4)
     with pytest.raises(ValueError):
         dataclasses.replace(ENGINE, repartition_every=-1)
+    with pytest.raises(ValueError):
+        part.PartitionConfig(fuzzy_m=1.0)  # must be > 1 (m=1 is hard)
+    with pytest.raises(ValueError):
+        part.PartitionConfig(hysteresis=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# voronoi / fuzzy backend
+# ---------------------------------------------------------------------------
+
+
+def test_voronoi_registered_and_uses_prev():
+    assert "voronoi" in part.PARTITION_BACKENDS
+    assert part.uses_prev(part.PartitionConfig(backend="voronoi"))
+    assert not part.uses_prev(part.PartitionConfig(backend="kmeans"))
+
+
+def test_voronoi_hysteresis_reduces_churn():
+    """The fuzzy-membership bonus on the previous assignment must cut
+    migration churn: re-partitioning slightly-moved positions with the
+    old map as `prev` keeps strictly more SEs in place than a memoryless
+    recompute — and with hysteresis=0 the `prev` argument is inert."""
+    n, n_lp, area = 256, 4, 1000.0
+    k = jax.random.key(5)
+    pos = jax.random.uniform(k, (n, 2), maxval=area)
+    w = jnp.ones((n,), jnp.float32)
+    cfg = part.PartitionConfig(backend="voronoi", n_lp=n_lp, area=area,
+                               iters=5, hysteresis=0.3)
+    lp0 = part.partition(jax.random.key(7), pos, w, cfg)
+    # small drift, fresh seed key: plenty of borderline SEs to flip
+    pos2 = (pos + jax.random.normal(jax.random.fold_in(k, 1), (n, 2)) * 5.0
+            ) % area
+    k2 = jax.random.key(8)
+    churn_free = int((part.partition(k2, pos2, w, cfg) != lp0).sum())
+    churn_held = int((part.partition(k2, pos2, w, cfg, prev=lp0) != lp0)
+                     .sum())
+    assert churn_held < churn_free, (churn_held, churn_free)
+    cfg0 = dataclasses.replace(cfg, hysteresis=0.0)
+    np.testing.assert_array_equal(
+        np.asarray(part.partition(k2, pos2, w, cfg0, prev=lp0)),
+        np.asarray(part.partition(k2, pos2, w, cfg0)))
+
+
+def test_voronoi_geometry_informed():
+    """Fuzzy Voronoi must actually read the geometry: on four tight
+    blobs it should recover a near-perfect blob->LP map (every blob
+    dominated by one LP), which the random baseline cannot do."""
+    n_per, n_lp, area = 64, 4, 1000.0
+    centers = jnp.array([[200.0, 200.0], [800.0, 200.0],
+                         [200.0, 800.0], [800.0, 800.0]])
+    k = jax.random.key(9)
+    pos = (jnp.repeat(centers, n_per, axis=0)
+           + jax.random.normal(k, (4 * n_per, 2)) * 20.0) % area
+    w = jnp.ones((4 * n_per,), jnp.float32)
+    cfg = part.PartitionConfig(backend="voronoi", n_lp=n_lp, area=area,
+                               iters=10)
+    lp = np.asarray(part.partition(jax.random.key(1), pos, w, cfg))
+    purity = 0
+    for b in range(4):
+        blob = lp[b * n_per:(b + 1) * n_per]
+        purity += np.bincount(blob, minlength=n_lp).max()
+    assert purity >= 0.9 * 4 * n_per, purity / (4 * n_per)
 
 
 # ---------------------------------------------------------------------------

@@ -155,6 +155,29 @@ def test_summarize_skips_matrix_counters():
     assert not stats.is_stats({"mean": 1.0})
 
 
+def test_summarize_reports_bool_flags_not_stats():
+    """Regression: `bool` is an `int` subclass, so the naive numeric
+    test used to average alarm flags (grid_overflow etc.) into a
+    mean/std/ci95 — a meaningless 'mean overflow of 0.33'. Flags must
+    come out as any/count/n, a shape `is_stats` rejects, while genuine
+    int counters keep the replica-stats schema."""
+    reps = [{"grid_overflow": False, "migrations": 10},
+            {"grid_overflow": True, "migrations": 14},
+            {"grid_overflow": False, "migrations": 12}]
+    out = stats.summarize(reps)
+    assert out["grid_overflow"] == {"any": True, "count": 1, "n": 3}
+    assert not stats.is_stats(out["grid_overflow"])
+    assert stats.is_stats(out["migrations"])
+    assert out["migrations"]["mean"] == 12.0
+    # all-clear flags keep the shape (any=False), so dashboards can
+    # tell "never tripped" from "not recorded"
+    clear = stats.summarize([{"f": False}, {"f": False}])
+    assert clear["f"] == {"any": False, "count": 0, "n": 2}
+    # explicit key selection goes through the same flag path
+    sel = stats.summarize(reps, keys=["grid_overflow"])
+    assert sel["grid_overflow"]["count"] == 1
+
+
 # ---------------------------------------------------------------------------
 # hypothesis invariant: batched counters == stack of per-seed counters
 # ---------------------------------------------------------------------------

@@ -140,6 +140,54 @@ def test_shard_spec_validation():
         dataclasses.replace(SYM, sharding="rowwise")
 
 
+def test_budgeted_shard_buffers():
+    """mem_budget_mb sizes the halo/migration slot buffers instead of
+    the worst case. At real scale (spec arithmetic only — no arrays) a
+    modest budget must shrink both buffers below the capacity bound,
+    stay above the usefulness floors, and grow monotonically with the
+    budget; an explicit halo/mig capacity always wins over the budget."""
+    big = dataclasses.replace(
+        SYM, abm=dataclasses.replace(ABM, n_se=2_000_000, n_lp=8,
+                                     area=100_000.0, grid_capacity=64),
+        sharding="lp_device", n_devices=4)
+    free = lp_shard.make_shard_spec(big)
+    assert free.halo_cap == free.cap  # unbudgeted worst case
+    tight = lp_shard.make_shard_spec(dataclasses.replace(
+        big, mem_budget_mb=8))
+    assert 32 <= tight.halo_cap < free.halo_cap
+    assert 16 <= tight.mig_cap < free.mig_cap
+    assert tight.cap == free.cap  # slot capacity is not the budget's job
+    roomy = lp_shard.make_shard_spec(dataclasses.replace(
+        big, mem_budget_mb=64))
+    assert tight.halo_cap < roomy.halo_cap <= free.halo_cap
+    assert tight.mig_cap < roomy.mig_cap <= free.mig_cap
+    explicit = lp_shard.make_shard_spec(dataclasses.replace(
+        big, mem_budget_mb=8, halo_capacity=777, mig_capacity=555))
+    assert explicit.halo_cap == 777 and explicit.mig_cap == 555
+
+
+def test_generous_budget_sharded_bit_identical():
+    """A budget roomy enough not to clamp any buffer must leave the
+    sharded trajectory bit-identical to the budget-free oracle — the
+    knob trades memory for overflow risk, never simulation content."""
+    budgeted = dataclasses.replace(SYM, mem_budget_mb=256)
+    spec0 = lp_shard.make_shard_spec(
+        dataclasses.replace(SYM, sharding="lp_device", n_devices=4))
+    spec1 = lp_shard.make_shard_spec(
+        dataclasses.replace(budgeted, sharding="lp_device", n_devices=4))
+    assert spec0 == spec1  # 256 MB is roomy at n=96: nothing clamps
+    st0, s0, c0 = _run(SYM)
+    st1, s1, c1 = _run(dataclasses.replace(budgeted, sharding="lp_device",
+                                           n_devices=4))
+    assert c1["shard_overflow"] == 0.0
+    for k in STATE_KEYS:
+        np.testing.assert_array_equal(np.asarray(st0[k]), np.asarray(st1[k]),
+                                      err_msg=k)
+    for k in SERIES_KEYS:
+        np.testing.assert_array_equal(np.asarray(s0[k]), np.asarray(s1[k]),
+                                      err_msg=k)
+
+
 def test_selftune_runs_sharded():
     """run_window dispatches on cfg.sharding: the §5.5 intra-run tuner
     drives the sharded engine transparently."""
