@@ -10,7 +10,8 @@ Replicas: every performance claim in the paper is a statement about the
 *expected* behaviour of a stochastic simulation, so the statistical
 experiments take a `replicas` count (CLI `--replicas`; default 5 in
 quick mode, 10 at mid/paper scale). The R seeds run in ONE batched
-device pass (`engine.run_batch`, vmap over the seed axis — replica r is
+device pass (`Engine.run(seeds=...)`, vmap over the seed axis — replica
+r is
 bit-identical to a sequential run on seed r), and every reported metric
 carries mean/std/ci95/n (src/repro/core/stats.py).
 """
@@ -22,8 +23,9 @@ import os
 import time
 
 from repro.core.abm import ABMConfig
-from repro.core.engine import EngineConfig, run_batch
+from repro.core.engine import EngineConfig
 from repro.core.heuristics import HeuristicConfig
+from repro.core.service import Engine
 from repro.core.stats import replica_stats, summarize
 
 RESULTS = os.path.join(os.path.dirname(os.path.dirname(
@@ -78,7 +80,7 @@ def _batch_counters(cfg: EngineConfig, seeds: tuple):
     cost-model arithmetic and must never re-run the engine. run_cfg
     deep-copies on the way out, so callers can never corrupt the
     cached counters."""
-    _, _, reps = run_batch(cfg, seeds)
+    _, _, reps = Engine(cfg).run(seeds=seeds)
     return reps
 
 

@@ -16,6 +16,8 @@ Experiments (see DESIGN.md §Per-experiment index):
               (BENCH_partition)
     exp8      beyond-paper: batched-replica engine throughput
               (BENCH_replicas)
+    exp9      beyond-paper: resident engine service — open-world churn
+              throughput + request multiplexing (BENCH_service)
     tables23  Tables 2-3 + Figs. 8-9 — ΔWCT via the calibrated cost model
     gaiamoe   beyond-paper: adaptive MoE expert placement traffic
     roofline  assemble the §Roofline table from results/dryrun
@@ -49,8 +51,8 @@ def main() -> int:
 
     from benchmarks import (exp1_speed, exp2_lps, exp3_range, exp4_scaling,
                             exp5_sharded, exp6_scenarios, exp7_partition,
-                            exp8_replicas, tables23, gaia_moe_bench,
-                            roofline, selftune_bench)
+                            exp8_replicas, exp9_service, tables23,
+                            gaia_moe_bench, roofline, selftune_bench)
     # exp4..exp8 expose quick|full: paper-scale maps to their full sweep
     qf = "quick" if args.scale == "quick" else "full"
     rep = args.replicas
@@ -63,6 +65,7 @@ def main() -> int:
         "exp6": lambda: exp6_scenarios.main(qf, rep),
         "exp7": lambda: exp7_partition.main(qf, rep),
         "exp8": lambda: exp8_replicas.main(qf, rep),
+        "exp9": lambda: exp9_service.main(qf),
         "tables23": lambda: tables23.main(args.scale, rep),
         "gaiamoe": lambda: gaia_moe_bench.main(args.scale),
         "selftune": lambda: selftune_bench.main(args.scale),

@@ -20,11 +20,10 @@ statement, not an LCR aesthetic.
 import dataclasses
 import sys
 
-import jax
-
 from repro.core import costmodel as cm
 from repro.core.abm import ABMConfig
-from repro.core.engine import EngineConfig, run
+from repro.core.engine import EngineConfig
+from repro.core.service import Engine
 from repro.core.heuristics import HeuristicConfig
 
 
@@ -49,7 +48,7 @@ def main(mobility: str = "hotspot"):
 
     print(f"{'mode':18s} {'LCR':>6s} {'migs':>7s} {'TEC(lan)':>10s}")
     for name, cfg in runs:
-        _, _, c = run(jax.random.key(0), cfg)
+        _, _, c = Engine(cfg).run(seed=0)
         tec = cm.wct_env(c, cm.DISTRIBUTED, env, cfg.timesteps,
                          interaction_bytes=100, migration_bytes=256)["TEC"]
         print(f"{name:18s} {c['mean_lcr']:6.3f} {c['migrations']:7.0f} "

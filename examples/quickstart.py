@@ -11,11 +11,10 @@ For GAIA measured against partitioners that actually try (static and
 periodically recomputed stripe/kmeans/bestresponse maps), see
 examples/partition_run.py.
 """
-import jax
-
 from repro.core.abm import ABMConfig
 from repro.core.costmodel import SETUPS, wct
-from repro.core.engine import EngineConfig, run, run_batch
+from repro.core.engine import EngineConfig
+from repro.core.service import Engine
 from repro.core.heuristics import HeuristicConfig
 from repro.core.stats import summarize
 
@@ -31,7 +30,7 @@ def main():
     for gaia in (False, True):
         cfg = EngineConfig(abm=abm, heuristic=HeuristicConfig(mf=1.2, mt=10),
                            gaia_on=gaia, timesteps=ts)
-        _, _, counters = run(jax.random.key(0), cfg)
+        _, _, counters = Engine(cfg).run(seed=0)
         results[gaia] = counters
         tag = "GAIA ON " if gaia else "GAIA OFF"
         print(f"  {tag}: LCR={counters['mean_lcr']:.3f} "
@@ -53,7 +52,7 @@ def main():
     # sequential run on seed r) and report a confidence interval
     cfg = EngineConfig(abm=abm, heuristic=HeuristicConfig(mf=1.2, mt=10),
                        gaia_on=True, timesteps=ts)
-    _, _, reps = run_batch(cfg, seeds=range(5))
+    _, _, reps = Engine(cfg).run(seeds=range(5))
     lcr = summarize(reps)["mean_lcr"]
     print(f"\nGAIA ON over {lcr['n']} batched replicas: "
           f"LCR = {lcr['mean']:.3f} ± {lcr['ci95']:.3f} (95% CI)")

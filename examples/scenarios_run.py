@@ -14,12 +14,12 @@ the simulation does.
 import dataclasses
 import sys
 
-import jax
 import numpy as np
 
 from repro.core import costmodel as cm
 from repro.core.abm import ABMConfig
-from repro.core.engine import EngineConfig, run
+from repro.core.engine import EngineConfig
+from repro.core.service import Engine
 from repro.core.heuristics import HeuristicConfig
 
 
@@ -33,8 +33,8 @@ def main(mobility: str = "hotspot"):
     print(f"scenario: {mobility}")
     results = {}
     for gaia in (True, False):
-        _, series, counters = run(
-            jax.random.key(0), dataclasses.replace(cfg, gaia_on=gaia))
+        _, series, counters = Engine(
+            dataclasses.replace(cfg, gaia_on=gaia)).run(seed=0)
         results[gaia] = counters
         lcr = np.asarray(series["lcr"])
         tag = "GAIA on " if gaia else "GAIA off"

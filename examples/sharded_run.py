@@ -23,7 +23,8 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core.abm import ABMConfig  # noqa: E402
-from repro.core.engine import EngineConfig, run  # noqa: E402
+from repro.core.engine import EngineConfig  # noqa: E402
+from repro.core.service import Engine  # noqa: E402
 from repro.core.heuristics import HeuristicConfig  # noqa: E402
 
 
@@ -34,7 +35,7 @@ def main():
         heuristic=HeuristicConfig(mf=1.2, mt=10),
         gaia_on=True, timesteps=200, sharding="lp_device")
     print(f"devices: {jax.devices()}")
-    st, series, counters = run(jax.random.key(0), cfg)
+    st, series, counters = Engine(cfg).run(seed=0)
     lcr = np.asarray(series["lcr"])
     halo = np.asarray(series["halo_frac"])
     wire = np.asarray(series["bytes_on_wire"])

@@ -20,7 +20,15 @@ Paper -> module map (see README.md for the full table):
   batched per-replica tuners)
 - stats: replica statistics — the mean/std/ci95/n schema every
   benchmark metric carries (§5: repeated trials behind every number)
+- service: the resident engine facade (PR 8) — `Engine` unifies init /
+  stepping / open-world churn / device-state queries, `ReplicaService`
+  multiplexes requests over the replica batch axis
 - gaia_moe: the technique adapted to MoE expert placement (beyond-paper)
+
+The supported public surface is `__all__` (pinned by
+tests/test_api_surface.py); the old engine free functions (`run`,
+`run_batch`, ...) remain importable as DeprecationWarning shims but are
+no longer part of it.
 """
 from repro.core.abm import (ABMConfig, MOBILITY_MODELS,  # noqa: F401
                             PROXIMITY_BACKENDS)
@@ -29,7 +37,9 @@ from repro.core.costmodel import (DISTRIBUTED, PARALLEL, SETUPS,  # noqa: F401
                                   make_env, wct, wct_env, wire_cost)
 from repro.core.engine import (EngineConfig, run,  # noqa: F401
                                run_batch)
-from repro.core.stats import replica_stats, summarize  # noqa: F401
+from repro.core.service import Engine, ReplicaService  # noqa: F401
+from repro.core.stats import (merge_counters, percentile,  # noqa: F401
+                              replica_stats, summarize)
 from repro.core.heuristics import HeuristicConfig  # noqa: F401
 from repro.core.neighbors import (GridSpec, build_grid,  # noqa: F401
                                   grid_lp_counts, make_grid_spec)
@@ -38,3 +48,20 @@ from repro.core.neighbors import (GridSpec, build_grid,  # noqa: F401
 # `from repro.core.partition import partition`.
 from repro.core.partition import (PARTITION_BACKENDS,  # noqa: F401
                                   PartitionConfig)
+
+__all__ = [
+    # configs
+    "ABMConfig", "EngineConfig", "HeuristicConfig", "PartitionConfig",
+    # the resident engine service (the one stepping API)
+    "Engine", "ReplicaService",
+    # registries
+    "MOBILITY_MODELS", "PROXIMITY_BACKENDS", "PARTITION_BACKENDS",
+    "SETUPS", "DISTRIBUTED", "PARALLEL",
+    # cost model
+    "CostParams", "ExecutionEnvironment", "make_env", "wct", "wct_env",
+    "wire_cost",
+    # neighbor search
+    "GridSpec", "build_grid", "grid_lp_counts", "make_grid_spec",
+    # statistics
+    "merge_counters", "percentile", "replica_stats", "summarize",
+]

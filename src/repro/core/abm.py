@@ -47,7 +47,6 @@ per-step `grid_overflow` metric so runs can assert exactness.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -79,15 +78,23 @@ class ABMConfig:
     # A budget too small for the true density is loud, never silent: the
     # clamped capacity trips `grid_overflow`, exactness is re-checkable.
     mem_budget_mb: int = 0
-    use_pallas: bool = False  # DEPRECATED: use proximity_backend="pallas"
     # --- mobility scenario (see module docstring) -----------------------
     mobility: str = "rwp"  # see MOBILITY_MODELS
     n_groups: int = 8  # K attractors ("hotspot") / groups ("group")
     group_radius: float = 250.0  # cluster spatial scale (spaceunits)
     # --- initial SE -> LP map (core/partition.py registry) --------------
     partitioner: str = "random"  # see partition.PARTITION_BACKENDS
+    # REMOVED (was a PR 1 boolean, deprecated since PR 1/PR 5): passing
+    # it raises a TypeError naming `proximity_backend`. An InitVar keeps
+    # the keyword accepted long enough to fail with that message instead
+    # of dataclasses' generic "unexpected keyword argument".
+    use_pallas: dataclasses.InitVar[object] = None
 
-    def __post_init__(self):
+    def __post_init__(self, use_pallas=None):
+        if use_pallas is not None:
+            raise TypeError(
+                "ABMConfig.use_pallas was removed; set "
+                "proximity_backend='pallas' (or 'pallas_grid') instead")
         if self.proximity_backend not in PROXIMITY_BACKENDS:
             raise ValueError(
                 f"proximity_backend={self.proximity_backend!r} not in "
@@ -101,21 +108,25 @@ class ABMConfig:
                 f"mobility={self.mobility!r} not in {MOBILITY_MODELS}")
         if self.mobility in ("hotspot", "group") and self.n_groups < 1:
             raise ValueError("n_groups must be >= 1 for clustered mobility")
-        if self.use_pallas and self.proximity_backend != "grid":
-            # the shim must never silently override an explicit choice
+        if self.n_se < 1 or self.n_lp < 1:
             raise ValueError(
-                "use_pallas=True (deprecated) conflicts with "
-                f"proximity_backend={self.proximity_backend!r}; drop "
-                "use_pallas and set proximity_backend only")
+                f"n_se={self.n_se} and n_lp={self.n_lp} must be >= 1")
+        if self.area <= 0 or self.interaction_range <= 0:
+            raise ValueError(
+                f"area={self.area} and interaction_range="
+                f"{self.interaction_range} must be > 0")
+        if self.speed < 0 or self.group_radius <= 0:
+            raise ValueError("speed must be >= 0 and group_radius > 0")
+        if not 0.0 <= self.p_interact <= 1.0:
+            raise ValueError(
+                f"p_interact={self.p_interact} must be a probability")
+        if self.grid_capacity < 0 or self.mem_budget_mb < 0:
+            raise ValueError(
+                "grid_capacity and mem_budget_mb must be >= 0 (0 = auto)")
 
     def resolved_backend(self) -> str:
-        """Backend after the `use_pallas` deprecation shim."""
-        if self.use_pallas:
-            warnings.warn(
-                "ABMConfig.use_pallas is deprecated; use "
-                "proximity_backend='pallas' (or 'pallas_grid').",
-                DeprecationWarning, stacklevel=2)
-            return "pallas"
+        """The proximity backend (kept for callers of the historical
+        `use_pallas`-shim API; the field itself is gone)."""
         return self.proximity_backend
 
     def grid_spec(self):
@@ -348,19 +359,29 @@ def max_step_displacement(cfg: ABMConfig) -> float:
             "group": 1.25 * cfg.speed, "flock": cfg.speed}[cfg.mobility]
 
 
-def _flock_step(k_noise, pos, mob, cfg: ABMConfig):
+def _flock_step(k_noise, pos, mob, cfg: ABMConfig, valid=None):
     """Flocking-lite over the cell-list grid: steer by inertia +
     alignment with the 3x3-neighborhood mean heading + cohesion toward
     its centroid + noise; move at constant `speed` along the heading.
-    Degenerate worlds (no grid) flock against the global mean."""
+    Degenerate worlds (no grid) flock against the global mean. `valid`
+    (open-world engine) keeps departed rows out of the flock's cell
+    aggregates — a dead row must influence nobody."""
     n = pos.shape[0]
     spec = cfg.grid_spec()
     if spec is not None:
-        (cdelta, hmean) = neighbors.cell_block_mean(pos, mob, spec, cfg.area)
+        (cdelta, hmean) = neighbors.cell_block_mean(pos, mob, spec,
+                                                    cfg.area, valid=valid)
     else:  # un-tessellatable world: one global "cell" (non-toroidal mean)
-        csum = pos.sum(0) - pos
-        hsum = mob.sum(0) - mob
-        cnt = jnp.maximum(n - 1, 1)
+        if valid is not None:
+            vpos = jnp.where(valid[:, None], pos, 0.0)
+            vmob = jnp.where(valid[:, None], mob, 0.0)
+            csum = vpos.sum(0) - vpos
+            hsum = vmob.sum(0) - vmob
+            cnt = jnp.maximum(valid.sum() - 1, 1)
+        else:
+            csum = pos.sum(0) - pos
+            hsum = mob.sum(0) - mob
+            cnt = jnp.maximum(n - 1, 1)
         cdelta = csum / cnt - pos
         hmean = hsum / cnt
     cohere = _unit(cdelta) * jnp.minimum(
@@ -374,7 +395,8 @@ def _flock_step(k_noise, pos, mob, cfg: ABMConfig):
     return (pos + heading * cfg.speed) % cfg.area, heading
 
 
-def mobility_step(key, pos, waypoint, mob, mob_g, cfg: ABMConfig):
+def mobility_step(key, pos, waypoint, mob, mob_g, cfg: ABMConfig,
+                  valid=None):
     """One mobility timestep for all N SEs, in global-SE-id order.
 
     Returns (pos, waypoint, mob, mob_g). Pure in (key, state): the
@@ -382,14 +404,16 @@ def mobility_step(key, pos, waypoint, mob, mob_g, cfg: ABMConfig):
     function, and scatters rows back to its slots, so trajectories are
     bit-identical to the single-device oracle by construction (see
     parallel/lp_shard.py). Fields a model does not use pass through
-    untouched.
+    untouched. `valid` (open-world engine) masks departed rows out of
+    any *global* aggregate a model reads (flock's cell means); the
+    row-local models ignore it — the caller discards dead rows' moves.
     """
     if row_local_mobility(cfg):
         draws, mob_g = mobility_row_draws(key, pos.shape[0], mob_g, cfg)
         pos, waypoint = mobility_row_apply(pos, waypoint, mob, draws, cfg)
         return pos, waypoint, mob, mob_g
     k_noise = jax.random.fold_in(key, 2)  # flock
-    pos, mob = _flock_step(k_noise, pos, mob, cfg)
+    pos, mob = _flock_step(k_noise, pos, mob, cfg, valid=valid)
     return pos, waypoint, mob, mob_g
 
 
@@ -398,7 +422,8 @@ def _dense_counts(pos, lp, sender_mask, cfg: ABMConfig):
                                      cfg.area, cfg.interaction_range)
 
 
-def interaction_counts_overflow(pos, lp, sender_mask, cfg: ABMConfig):
+def interaction_counts_overflow(pos, lp, sender_mask, cfg: ABMConfig,
+                                valid=None):
     """Per-sender histogram of recipient LPs, plus the grid's overflow
     alarm.
 
@@ -411,6 +436,14 @@ def interaction_counts_overflow(pos, lp, sender_mask, cfg: ABMConfig):
     engine surfaces it as the per-step `grid_overflow` metric). The
     default grid backend reads the flag off the grid build it performs
     anyway; dense backends are always exact (False).
+
+    `valid` (open-world engine) masks departed rows out of the grid
+    build entirely: a dead row with lp = -1 already contributes to no
+    LP column (and must not be a sender — the caller folds `valid` into
+    `sender_mask`), but keeping it out of the cells also stops stale
+    positions from occupying capacity slots or tripping `overflow`. The
+    Pallas backends table every row, so they stay closed-world only
+    (EngineConfig validation rejects the combination).
 
     Dispatches on `cfg.proximity_backend`; every backend is bit-identical
     (dense is the oracle — see tests/test_neighbors.py and DESIGN.md
@@ -425,7 +458,8 @@ def interaction_counts_overflow(pos, lp, sender_mask, cfg: ABMConfig):
         # CSR sweep in sorted cell order (see neighbors.grid_lp_counts):
         # no member table, no (N, 9 * capacity) candidate matrix — peak
         # memory is bounded by the chunk budget regardless of N
-        grid = neighbors.build_grid(pos, spec, with_table=False)
+        grid = neighbors.build_grid(pos, spec, valid=valid,
+                                    with_table=False)
         order = grid["order"]
         out = neighbors.rows_grid_counts(
             pos, lp, cfg.n_lp, cfg.area, cfg.interaction_range, spec, grid,

@@ -100,6 +100,17 @@ class EngineConfig:
     # (lp_shard.make_shard_spec). 0 = unbudgeted historical defaults; an
     # explicit abm.mem_budget_mb wins over the engine-level knob.
     mem_budget_mb: int = 0
+    # --- open-world churn (core/service.py) -----------------------------
+    # open_world=True turns the fixed-N state into a slot universe of
+    # abm.n_se rows with a live/dead mask (lp >= 0 marks live; the
+    # sharded layer reuses its gid >= 0 mask): SEs arrive into and
+    # depart from free slots mid-run (Engine.arrive/.depart), every step
+    # phase masks dead rows, and with zero churn + a full population the
+    # trajectory stays bit-identical to the closed-world engine.
+    # n_active caps the initial live population (0 = all n_se live);
+    # abm.n_se - n_active slots start free for arrivals.
+    open_world: bool = False
+    n_active: int = 0
 
     def __post_init__(self):
         if self.mem_budget_mb > 0 and self.abm.mem_budget_mb == 0:
@@ -108,8 +119,30 @@ class EngineConfig:
         if self.sharding not in SHARDINGS:
             raise ValueError(
                 f"sharding={self.sharding!r} not in {SHARDINGS}")
+        if self.balance not in ("symmetric", "asymmetric"):
+            raise ValueError(
+                f"balance={self.balance!r} not in ('symmetric', "
+                "'asymmetric')")
+        if self.timesteps < 0 or self.migration_delay < 1:
+            raise ValueError("timesteps must be >= 0 and migration_delay "
+                             ">= 1")
+        if min(self.n_devices, self.shard_capacity, self.mig_capacity,
+               self.halo_capacity, self.mem_budget_mb) < 0:
+            raise ValueError("n_devices and the shard/mig/halo/memory "
+                             "capacities must be >= 0 (0 = auto)")
         if self.repartition_every < 0:
             raise ValueError("repartition_every must be >= 0")
+        if self.halo_capacity > 0 and self.mem_budget_mb > 0 and \
+                self.halo_capacity * 48 > (self.mem_budget_mb << 18):
+            # explicit halo_capacity wins over the budget-derived auto
+            # size (lp_shard.make_shard_spec), so the two knobs can
+            # contradict: reject a capacity whose per-pair send+recv
+            # buffers (2 peers x 2 buffers x 12 B/row) already exceed
+            # the quarter-budget the halo is allotted
+            raise ValueError(
+                f"halo_capacity={self.halo_capacity} needs more than "
+                f"mem_budget_mb={self.mem_budget_mb} affords the halo "
+                "buffers; raise the budget or drop one of the knobs")
         if self.env is not None and self.env.n_lp != self.abm.n_lp:
             raise ValueError(
                 f"env {self.env.name!r} has {self.env.n_lp} LPs but "
@@ -117,6 +150,18 @@ class EngineConfig:
         if self.balance == "asymmetric" and self.effective_capacity() is None:
             raise ValueError("asymmetric balance needs `capacity` or an "
                              "`env` to derive it from")
+        if not 0 <= self.n_active <= self.abm.n_se:
+            raise ValueError(
+                f"n_active={self.n_active} must be in [0, n_se="
+                f"{self.abm.n_se}] (0 = all live)")
+        if self.n_active > 0 and not self.open_world:
+            raise ValueError("n_active needs open_world=True")
+        if self.open_world and \
+                self.abm.proximity_backend.startswith("pallas"):
+            raise ValueError(
+                "open_world=True needs proximity_backend 'grid' or "
+                "'dense' (the Pallas kernels table every row and have "
+                "no dead-slot mask)")
 
     def effective_capacity(self) -> Optional[tuple]:
         """Asymmetric capacity shares: explicit `capacity` wins, else the
@@ -127,8 +172,15 @@ class EngineConfig:
             return self.env.capacity_shares()
         return None
 
+    def initial_live(self) -> int:
+        """Live SEs at t=0: `n_active` under open_world (0 = full), the
+        whole population otherwise."""
+        if self.open_world and self.n_active > 0:
+            return self.n_active
+        return self.abm.n_se
 
-def init_engine(key, cfg: EngineConfig):
+
+def _init_engine(key, cfg: EngineConfig):
     if cfg.sharding == "lp_device":
         from repro.parallel import lp_shard
         return lp_shard.init_sharded(key, cfg, lp_shard.make_shard_spec(cfg))
@@ -142,13 +194,30 @@ def init_engine(key, cfg: EngineConfig):
         "pending_dst": jnp.full((n,), -1, jnp.int32),
         "pending_eta": jnp.full((n,), -1, jnp.int32),
     })
+    live = cfg.initial_live()
+    if cfg.open_world and live < n:
+        # slots [live, n) start free: lp < 0 is THE oracle dead mask
+        # (mirroring the sharded layer's gid < 0). The PRNG consumption
+        # above is unchanged, so the live prefix is bit-identical to
+        # the closed-world rows 0..live-1 of the same seed.
+        dead = jnp.arange(n) >= live
+        st["lp"] = jnp.where(dead, -1, st["lp"])
     return st
 
 
 def step(state, cfg: EngineConfig, mf=None):
     """One timestep. Returns (state, per-step metrics). `mf` optionally
-    overrides cfg.heuristic.mf with a traced value (see run_window)."""
+    overrides cfg.heuristic.mf with a traced value (see run_window).
+
+    Open world (cfg.open_world): rows with lp < 0 are free slots — they
+    draw the same per-id randomness (shapes never depend on the
+    population, which is what keeps zero-churn runs bit-identical to
+    the closed-world path) but are masked out of every effect: they
+    never move, never send, never receive (lp = -1 one-hots to no
+    column and `valid` keeps them out of the grid), never evaluate, and
+    never migrate."""
     n, L = cfg.abm.n_se, cfg.abm.n_lp
+    ow = cfg.open_world
     t = state["t"]
     key, k_move, k_send = jax.random.split(state["key"], 3)
 
@@ -157,20 +226,30 @@ def step(state, cfg: EngineConfig, mf=None):
     lp = jnp.where(arrive, state["pending_dst"], state["lp"])
     pending_dst = jnp.where(arrive, -1, state["pending_dst"])
     pending_eta = jnp.where(arrive, -1, state["pending_eta"])
+    valid = (lp >= 0) if ow else None
 
     # 2. model evolution (identical regardless of partitioning)
     pos, wp, mob, mob_g = mobility_step(
         k_move, state["pos"], state["waypoint"], state["mob"],
-        state["mob_g"], cfg.abm)
+        state["mob_g"], cfg.abm, valid=valid)
+    if ow:  # dead rows hold their slot state (pure selection: no bits
+        # of any live row change when every row is live)
+        pos = jnp.where(valid[:, None], pos, state["pos"])
+        wp = jnp.where(valid[:, None], wp, state["waypoint"])
+        mob = jnp.where(valid[:, None], mob, state["mob"])
     sender = jax.random.bernoulli(k_send, cfg.abm.p_interact, (n,))
+    if ow:
+        sender = valid & sender
     counts, grid_ovf = interaction_counts_overflow(
-        pos, lp, sender, cfg.abm)  # (N, L), () bool
+        pos, lp, sender, cfg.abm, valid=valid)  # (N, L), () bool
 
     # 3. communication accounting: the per-pair flow matrix (src LP ->
     # dst LP; integer scatter-add, so sharded psum reproduces it
     # exactly) is the single source of truth — the scalar LCR terms are
-    # its trace and total
-    flows = jnp.zeros((L, L), jnp.int32).at[lp].add(counts)
+    # its trace and total. Dead rows' counts are all-zero, so clipping
+    # their lp = -1 to row 0 adds nothing.
+    safe_lp = jnp.clip(lp, 0, L - 1) if ow else lp
+    flows = jnp.zeros((L, L), jnp.int32).at[safe_lp].add(counts)
     local = jnp.trace(flows)
     total = flows.sum()
     remote = total - local
@@ -195,39 +274,48 @@ def step(state, cfg: EngineConfig, mf=None):
         # to the historical call (and so the sharded mirror only pays
         # the id-order LP gather when the backend actually reads it)
         prev = lp if part.uses_prev(pcfg) else None
+        # open world: dead rows get zero weight AND zero position, so
+        # the partitioner sees byte-identical inputs on both execution
+        # layers (the sharded mirror reconstructs dead ids as zeros)
+        weights = (valid.astype(jnp.float32) if ow
+                   else jnp.ones((n,), jnp.float32))
+        ppos = jnp.where(valid[:, None], pos, 0.0) if ow else pos
         new_lp = jax.lax.cond(
             do,
-            lambda: part.partition(k_rep, pos,
-                                   jnp.ones((n,), jnp.float32), pcfg,
-                                   prev=prev),
+            lambda: part.partition(k_rep, ppos, weights, pcfg, prev=prev),
             lambda: lp)
         move = (new_lp != lp) & (pending_dst < 0)
+        if ow:  # free slots never enter the migration machinery
+            move = move & valid
         pending_dst = jnp.where(move, new_lp, pending_dst)
         pending_eta = jnp.where(move, t + cfg.migration_delay, pending_eta)
         hstate = dict(hstate, last_mig=jnp.where(move, t,
                                                  hstate["last_mig"]))
         reparts = move.sum()
         migs = migs + reparts
-        mig_flows = mig_flows.at[lp, new_lp].add(move.astype(jnp.int32))
+        mig_flows = mig_flows.at[safe_lp, new_lp].add(move.astype(jnp.int32))
     if cfg.gaia_on:
         hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
         cand, dest, alpha, hstate, n_evals = heu.evaluate(
-            cfg.heuristic, hstate, lp, t, mf=mf)
+            cfg.heuristic, hstate, lp, t, valid=valid, mf=mf)
         cand = cand & (pending_dst < 0)  # not already in flight
-        cmat = bal.candidate_matrix(cand, lp, dest, L)
+        cmat = bal.candidate_matrix(cand, safe_lp, dest, L)
         if cfg.balance == "asymmetric":
             cap = jnp.asarray(cfg.effective_capacity(), jnp.float32)
-            current = jnp.bincount(lp, length=L)
+            # lp = -1 buckets into the extra row L, then drops
+            current = jnp.bincount(jnp.where(lp < 0, L, lp),
+                                   length=L + 1)[:L] if ow else \
+                jnp.bincount(lp, length=L)
             grants = bal.asymmetric_grants(cmat, current, cap)
         else:
             grants = bal.symmetric_grants(cmat)
-        admit = bal.select_migrations(cand, lp, dest, alpha, grants, L)
+        admit = bal.select_migrations(cand, safe_lp, dest, alpha, grants, L)
         pending_dst = jnp.where(admit, dest, pending_dst)
         pending_eta = jnp.where(admit, t + cfg.migration_delay, pending_eta)
         hstate = dict(hstate, last_mig=jnp.where(admit, t,
                                                  hstate["last_mig"]))
         migs = migs + admit.sum()
-        mig_flows = mig_flows.at[lp, dest].add(admit.astype(jnp.int32))
+        mig_flows = mig_flows.at[safe_lp, dest].add(admit.astype(jnp.int32))
 
     new_state = dict(state, key=key, t=t + 1, pos=pos, waypoint=wp, lp=lp,
                      mob=mob, mob_g=mob_g,
@@ -249,7 +337,62 @@ def step(state, cfg: EngineConfig, mf=None):
         # neighbors — the clustered mobility models are what can trip it
         "grid_overflow": grid_ovf.astype(jnp.float32),
     }
+    if ow:
+        # live population after this step's migration completions — the
+        # churn service's occupancy signal (series_counters -> mean_pop)
+        metrics["pop"] = valid.sum().astype(jnp.float32)
     return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# open-world churn ops (oracle layer; sharded mirrors in parallel/lp_shard)
+# ---------------------------------------------------------------------------
+
+
+def _clear_slot_history(st, tgt):
+    """Reset the per-slot protocol + heuristic history at rows `tgt`
+    (index n = dropped padding) to their init_state values, so a reused
+    slot carries nothing of its previous occupant."""
+    st["pending_dst"] = st["pending_dst"].at[tgt].set(-1, mode="drop")
+    st["pending_eta"] = st["pending_eta"].at[tgt].set(-1, mode="drop")
+    st["ring"] = st["ring"].at[:, tgt, :].set(0, mode="drop")
+    st["ptr"] = st["ptr"].at[tgt].set(0, mode="drop")
+    st["since_eval"] = st["since_eval"].at[tgt].set(0, mode="drop")
+    st["last_mig"] = st["last_mig"].at[tgt].set(-10**6, mode="drop")
+    return st
+
+
+def oracle_arrive(state, ids, rows):
+    """Insert a batch of SEs into free slots `ids` (int32; -1 entries
+    are padding and write nothing). `rows` supplies per-arrival "pos"
+    (B, 2) and "lp" (B,), optionally "waypoint" / "mob" (default: the
+    arrival position / zeros). O(B) scatter into device state — the
+    free-slot pool and overflow accounting are host-side
+    (core/service.py: Engine.arrive)."""
+    n = state["lp"].shape[0]
+    tgt = jnp.where(ids >= 0, ids, n)
+    pos = jnp.asarray(rows["pos"], jnp.float32)
+    st = dict(state)
+    st["pos"] = st["pos"].at[tgt].set(pos, mode="drop")
+    st["waypoint"] = st["waypoint"].at[tgt].set(
+        jnp.asarray(rows.get("waypoint", pos), jnp.float32), mode="drop")
+    st["mob"] = st["mob"].at[tgt].set(
+        jnp.asarray(rows.get("mob", jnp.zeros_like(pos)), jnp.float32),
+        mode="drop")
+    st["lp"] = st["lp"].at[tgt].set(
+        jnp.asarray(rows["lp"], jnp.int32), mode="drop")
+    return _clear_slot_history(st, tgt)
+
+
+def oracle_depart(state, ids):
+    """Remove the SEs in slots `ids` (int32; -1 = padding): lp = -1
+    frees the slot, and the slot history resets so the next occupant
+    starts clean. O(B) scatter."""
+    n = state["lp"].shape[0]
+    tgt = jnp.where(ids >= 0, ids, n)
+    st = dict(state)
+    st["lp"] = st["lp"].at[tgt].set(-1, mode="drop")
+    return _clear_slot_history(st, tgt)
 
 
 def series_counters(series) -> dict:
@@ -261,6 +404,8 @@ def series_counters(series) -> dict:
     counters = {k: float(series[k].sum()) for k in
                 ("local_msgs", "remote_msgs", "migrations", "heu_evals")}
     counters["mean_lcr"] = float(series["lcr"].mean())
+    if "pop" in series:
+        counters["mean_pop"] = float(series["pop"].mean())
     for k in ("grid_overflow", "repartitions"):
         if k in series:
             counters[k] = float(series[k].sum())
@@ -325,7 +470,7 @@ def _compiled_window(cfg: EngineConfig, n_steps: int):
     return _compiled_window_cached(window_key_cfg(cfg), n_steps)
 
 
-def run_window(state, cfg: EngineConfig, n_steps: int, mf=None):
+def _run_window(state, cfg: EngineConfig, n_steps: int, mf=None):
     """Advance an existing state by n_steps; returns (state, counters).
 
     Used by the §5.5 intra-run self-tuner, which re-parameterizes the
@@ -342,7 +487,7 @@ def run_window(state, cfg: EngineConfig, n_steps: int, mf=None):
     return state, series_counters(series)
 
 
-def run(key, cfg: EngineConfig):
+def _run(key, cfg: EngineConfig):
     """Run the full simulation; returns (final_state, stacked metrics,
     aggregate counters). With cfg.sharding="lp_device" the run executes
     LP-per-device on the JAX mesh (bit-identical result; extra
@@ -350,7 +495,7 @@ def run(key, cfg: EngineConfig):
     if cfg.sharding == "lp_device":
         from repro.parallel import lp_shard
         return lp_shard.run_sharded(key, cfg)
-    st = init_engine(key, cfg)
+    st = _init_engine(key, cfg)
     st, series = _compiled_window(cfg, cfg.timesteps)(
         st, jnp.float32(cfg.heuristic.mf))
     counters = series_counters(series)
@@ -381,18 +526,18 @@ def stack_states(states):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
-def init_batch(cfg: EngineConfig, seeds):
+def _init_batch(cfg: EngineConfig, seeds):
     """Stacked engine state for R replicas: every leaf of the single-
     replica state gains a leading replica axis (including `t`, which
     stays lockstep across replicas — they advance together).
 
-    The per-replica inits run through the very same (eager) init_engine
+    The per-replica inits run through the very same (eager) init
     a sequential run uses, then stack — deliberately NOT a vmapped
     jitted init: jit fuses the clustered-mobility position arithmetic
     with FMA and drifts ULPs off the eager path, which would break the
     per-seed bit-identity contract (tests/test_replicas.py). Init is a
     one-off O(N) cost; the scan is where batching pays."""
-    return stack_states([init_engine(k, cfg) for k in replica_keys(seeds)])
+    return stack_states([_init_engine(k, cfg) for k in replica_keys(seeds)])
 
 
 def _mf_vector(cfg: EngineConfig, mf, n_rep: int):
@@ -425,7 +570,7 @@ def _compiled_batch(cfg: EngineConfig, n_steps: int):
     return _compiled_batch_cached(window_key_cfg(cfg), n_steps)
 
 
-def run_window_batch(states, cfg: EngineConfig, n_steps: int, mf=None):
+def _run_window_batch(states, cfg: EngineConfig, n_steps: int, mf=None):
     """Advance R stacked replica states by n_steps in one batched scan.
 
     `mf` may be a scalar (all replicas) or an (R,) vector — the batched
@@ -443,25 +588,25 @@ def run_window_batch(states, cfg: EngineConfig, n_steps: int, mf=None):
                     for r in range(n_rep)]
 
 
-def run_batch(cfg: EngineConfig, seeds):
+def _run_batch(cfg: EngineConfig, seeds):
     """Run R independent replicas (one per seed) in a single batched
     device pass: `jax.vmap` over the leading seed axis of the memoized
     jitted scan. Heuristic windows, mobility state, pending migrations —
     the whole engine state — ride the batch axis, so replicas never
-    interact; replica r is bit-identical to `run(jax.random.key(seeds[r]),
-    cfg)` (tests/test_replicas.py).
+    interact; replica r is bit-identical to a sequential
+    `jax.random.key(seeds[r])` run (tests/test_replicas.py).
 
     Returns (states, series, reps): stacked final states (leading
     replica axis), the batched per-step metrics series (T, R, ...), and
-    one aggregate-counters dict per replica (the exact schema `run`
-    returns, `migration_ratio` included). With
+    one aggregate-counters dict per replica (the exact schema the
+    single-replica runner returns, `migration_ratio` included). With
     cfg.sharding="lp_device" the batch axis is vmapped *inside* each
     shard (parallel/lp_shard.py), so sharded replicas stay bit-identical
     to oracle replicas per seed."""
     if cfg.sharding == "lp_device":
         from repro.parallel import lp_shard
         return lp_shard.run_batch_sharded(cfg, seeds)
-    states = init_batch(cfg, seeds)
+    states = _init_batch(cfg, seeds)
     states, series = _compiled_batch(cfg, cfg.timesteps)(
         states, _mf_vector(cfg, None, len(seeds)))
     reps = []
@@ -470,3 +615,55 @@ def run_batch(cfg: EngineConfig, seeds):
         c["migration_ratio"] = _migration_ratio(c, cfg)
         reps.append(c)
     return states, series, reps
+
+
+# ---------------------------------------------------------------------------
+# deprecated free-function API (PR 8): the six runners collapsed into
+# the repro.core.Engine facade (core/service.py). The shims delegate so
+# old callers keep their exact bits; new code goes through Engine.
+# ---------------------------------------------------------------------------
+
+
+def _deprecated(old: str, hint: str):
+    import warnings
+    warnings.warn(
+        f"repro.core.engine.{old} is deprecated; use {hint} "
+        "(see README §Service API)",
+        DeprecationWarning, stacklevel=3)
+
+
+def init_engine(key, cfg: EngineConfig):
+    """Deprecated: use `repro.core.Engine(cfg).init(seed=...)`."""
+    _deprecated("init_engine", "repro.core.Engine(cfg).init()")
+    return _init_engine(key, cfg)
+
+
+def run_window(state, cfg: EngineConfig, n_steps: int, mf=None):
+    """Deprecated: use `repro.core.Engine.step(n, mf=...)`."""
+    _deprecated("run_window", "repro.core.Engine.step(n)")
+    return _run_window(state, cfg, n_steps, mf=mf)
+
+
+def run(key, cfg: EngineConfig):
+    """Deprecated: use `repro.core.Engine(cfg).init().step(...)`."""
+    _deprecated("run", "repro.core.Engine(cfg).run()")
+    return _run(key, cfg)
+
+
+def init_batch(cfg: EngineConfig, seeds):
+    """Deprecated: use `repro.core.Engine(cfg).init(seeds=[...])`."""
+    _deprecated("init_batch", "repro.core.Engine(cfg).init(seeds=[...])")
+    return _init_batch(cfg, seeds)
+
+
+def run_window_batch(states, cfg: EngineConfig, n_steps: int, mf=None):
+    """Deprecated: use `repro.core.Engine.step(n, mf=...)` on a batched
+    Engine (`init(seeds=[...])`)."""
+    _deprecated("run_window_batch", "repro.core.Engine.step(n)")
+    return _run_window_batch(states, cfg, n_steps, mf=mf)
+
+
+def run_batch(cfg: EngineConfig, seeds):
+    """Deprecated: use `repro.core.Engine(cfg).run(seeds=[...])`."""
+    _deprecated("run_batch", "repro.core.Engine(cfg).run(seeds=[...])")
+    return _run_batch(cfg, seeds)

@@ -32,6 +32,17 @@ class HeuristicConfig:
     omega: int = 8  # #2/#3: window length in sending events
     zeta: int = 16  # #3: interactions between evaluations
 
+    def __post_init__(self):
+        if self.kind not in (1, 2, 3):
+            raise ValueError(f"heuristic kind={self.kind} not in (1, 2, 3)")
+        if self.mf < 0:
+            raise ValueError("mf (Migration Factor) must be >= 0")
+        if self.mt < 0:
+            raise ValueError("mt (Migration Threshold) must be >= 0")
+        if self.kappa < 1 or self.omega < 1 or self.zeta < 1:
+            raise ValueError("window parameters kappa/omega/zeta must "
+                             "be >= 1")
+
 
 def init_state(cfg: HeuristicConfig, n_se: int, n_lp: int):
     w = cfg.kappa if cfg.kind == 1 else cfg.omega

@@ -382,6 +382,39 @@ def rows_grid_counts(pos, lp, n_lp: int, area: float, rng: float,
     return out.reshape(n_chunks * chunk, n_lp)[:r]
 
 
+def rows_grid_neighbor_ids(pos, area: float, rng: float, spec: GridSpec,
+                           grid, q_pos, q_row):
+    """Indices (into `pos`) of every agent within `rng` of each query
+    point, via the CSR cell list: (Q, 9 * capacity) i32, padded with -1.
+
+    `q_row` is each query's own row index in `pos` (or -1), excluded
+    from its result. Rows masked out of `grid` at build time (the
+    open-world engine's dead slots) occupy no segment, so they can
+    never appear. Segment windows truncate at `capacity` exactly like
+    the counting sweep, so results are exact whenever
+    `grid["overflow"]` is False. This is the query core of the service
+    API's `query_neighbors` (repro.core.service) — Q is a request
+    batch, not the population, so no chunking is needed."""
+    n = pos.shape[0]
+    nc, cap = spec.ncell, spec.capacity
+    order = grid["order"].astype(jnp.int32)
+    starts = grid["starts"]
+    seg_cnt = jnp.minimum(grid["counts"], cap)
+    rc = cell_ids(q_pos, spec)
+    cx, cy = rc // nc, rc % nc
+    karange = jnp.arange(cap)
+    cols = []
+    for di, dj in _NEIGH_OFFSETS:
+        ncid = ((cx + di) % nc) * nc + (cy + dj) % nc
+        idx = starts[ncid][:, None] + karange[None, :]
+        ok = karange[None, :] < seg_cnt[ncid][:, None]
+        j = order[jnp.clip(idx, 0, n - 1)]
+        ok = ok & (j != q_row[:, None])
+        ok = ok & (toroidal_d2(q_pos[:, None, :], pos[j], area) <= rng * rng)
+        cols.append(jnp.where(ok, j, -1))
+    return jnp.concatenate(cols, axis=1)
+
+
 def grid_lp_counts(pos, lp, sender_mask, n_lp: int, area: float, rng: float,
                    spec: GridSpec, budget_entries: int = 0):
     """Cell-list version of the dense LP histogram — bit-identical output.
@@ -445,7 +478,7 @@ def dilate_mask(occ, r: int):
     return out
 
 
-def cell_block_mean(pos, vec, spec: GridSpec, area: float):
+def cell_block_mean(pos, vec, spec: GridSpec, area: float, valid=None):
     """Per-SE mean of positions and of `vec` over the 3x3 cell block.
 
     The flocking-lite sensing kernel: returns (cdelta, vmean) where
@@ -454,6 +487,11 @@ def cell_block_mean(pos, vec, spec: GridSpec, area: float):
     (N, 2) is their mean `vec` (e.g. heading). O(N + ncell^2): one
     scatter-add binning pass plus nine rolled-grid accumulations — no
     member table, so grid capacity is irrelevant here.
+
+    `valid` (open-world engine) drops dead rows from every aggregate
+    (they bin to an out-of-bounds cell the scatter discards); their own
+    output rows are garbage the caller must mask. With valid=None (or
+    all True) results are unchanged.
 
     Torus correctness: position sums from cells rolled across the seam
     are shifted by ±area on the wrapped axis, so every block is summed
@@ -466,10 +504,12 @@ def cell_block_mean(pos, vec, spec: GridSpec, area: float):
     """
     n, nc = pos.shape[0], spec.ncell
     cell = cell_ids(pos, spec)
+    if valid is not None:
+        cell = jnp.where(valid, cell, nc * nc)  # out of bounds -> dropped
 
     def bin2d(vals):
-        return jnp.zeros((nc * nc,), jnp.float32).at[cell].add(vals) \
-            .reshape(nc, nc)
+        return jnp.zeros((nc * nc,), jnp.float32).at[cell].add(
+            vals, mode="drop").reshape(nc, nc)
 
     cnt = bin2d(jnp.ones((n,), jnp.float32))
     sx, sy = bin2d(pos[:, 0]), bin2d(pos[:, 1])

@@ -95,6 +95,12 @@ class PartitionConfig:
         if self.backend not in PARTITION_BACKENDS:
             raise ValueError(f"partition backend {self.backend!r} not in "
                              f"{PARTITION_BACKENDS}")
+        if self.n_lp < 1:
+            raise ValueError(f"n_lp={self.n_lp} must be >= 1")
+        if self.area <= 0 or self.interaction_range <= 0:
+            raise ValueError("area and interaction_range must be > 0")
+        if self.iters < 1:
+            raise ValueError(f"iters={self.iters} must be >= 1")
         if self.shares is not None and len(self.shares) != self.n_lp:
             raise ValueError(f"shares has {len(self.shares)} entries for "
                              f"n_lp={self.n_lp}")

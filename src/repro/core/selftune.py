@@ -33,8 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.costmodel import CostParams, SETUPS, wct, wct_env
-from repro.core.engine import (EngineConfig, init_batch, init_engine,
-                               run_window, run_window_batch)
+from repro.core.engine import (EngineConfig, _init_batch, _init_engine,
+                               _run_window, _run_window_batch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +74,7 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
     (window_index, mf, window_lcr, window_tec_per_step)."""
     total = total_steps or cfg.timesteps
     params = SETUPS[tc.setup]
-    state = init_engine(key, cfg)
+    state = _init_engine(key, cfg)
     mf = tc.mf0
     step = tc.step0
     direction = -1.0  # start by migrating more aggressively
@@ -85,7 +85,7 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
     for w in range(n_windows):
         # mf rides as a dynamic argument: every window (and every MF the
         # hill descent visits) reuses one compiled window scan
-        state, counters = run_window(state, cfg, tc.window, mf=mf)
+        state, counters = _run_window(state, cfg, tc.window, mf=mf)
         tec = _price(counters, params, cfg, tc.window, tc) / tc.window
         history.append((w, mf, counters["mean_lcr"], tec))
         if prev is not None and tec > prev * 1.001:
@@ -115,7 +115,7 @@ def intra_run_tune_batch(cfg: EngineConfig, tc: SelfTuneConfig, seeds,
     total = total_steps or cfg.timesteps
     params = SETUPS[tc.setup]
     n_rep = len(seeds)
-    states = init_batch(cfg, seeds)
+    states = _init_batch(cfg, seeds)
     mf = [tc.mf0] * n_rep
     step = [tc.step0] * n_rep
     direction = [-1.0] * n_rep
@@ -124,7 +124,7 @@ def intra_run_tune_batch(cfg: EngineConfig, tc: SelfTuneConfig, seeds,
         [[] for _ in range(n_rep)]
 
     for w in range(total // tc.window):
-        states, reps = run_window_batch(
+        states, reps = _run_window_batch(
             states, cfg, tc.window, mf=jnp.asarray(mf, jnp.float32))
         for r, counters in enumerate(reps):
             tec = _price(counters, params, cfg, tc.window, tc) / tc.window
@@ -160,8 +160,8 @@ def inter_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
         mf = math.exp(log_mf)
         # one full replica per probe, MF dynamic: all probes share one
         # compiled scan (a fresh run() per probe would recompile each)
-        state = init_engine(jax.random.fold_in(key, i), cfg)
-        _, counters = run_window(state, cfg, cfg.timesteps, mf=mf)
+        state = _init_engine(jax.random.fold_in(key, i), cfg)
+        _, counters = _run_window(state, cfg, cfg.timesteps, mf=mf)
         tec = _price(counters, params, cfg, cfg.timesteps, tc)
         trials.append((mf, tec))
         return tec

@@ -66,6 +66,58 @@ def is_stats(obj) -> bool:
     return isinstance(obj, dict) and {"mean", "std", "ci95", "n"} <= set(obj)
 
 
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy's default method), math
+    only — the service benchmark reports p50/p99 step latency with it
+    and `benchmarks/compare.py` must stay importable without numpy."""
+    xs = sorted(float(v) for v in values)
+    if not xs:
+        raise ValueError("percentile needs at least one value")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"q must be in [0, 100], got {q}")
+    k = (len(xs) - 1) * (q / 100.0)
+    lo = math.floor(k)
+    hi = math.ceil(k)
+    return xs[lo] + (xs[hi] - xs[lo]) * (k - lo)
+
+
+#: run-counter keys that aggregate as step-weighted means when windows
+#: merge (everything else numeric sums; nested lists add elementwise)
+_MEAN_KEYS = ("mean_lcr", "mean_halo_frac", "mean_pop")
+
+
+def merge_counters(parts: Sequence[Dict], weights: Sequence[float]) -> Dict:
+    """Merge per-window run-counter dicts into one run's counters.
+
+    The resident engine (`repro.core.service.Engine`) advances in
+    windows, each yielding the `engine.series_counters` schema; merging
+    w windows must reproduce what one (sum-of-lengths)-step window would
+    have reported: counter keys sum, `mean_*` keys combine as
+    window-length-weighted means, and matrix counters (nested lists —
+    the per-pair flow matrices) add elementwise. Integer-sum counters
+    merge exactly; weighted means are float-associative only, so they
+    can differ from a single window in the last ulp."""
+    if not parts:
+        raise ValueError("merge_counters needs at least one window")
+    if len(parts) != len(weights):
+        raise ValueError("one weight (window length) per counters dict")
+    out: Dict = {}
+    total_w = float(sum(weights))
+    for c, w in zip(parts, weights):
+        for k, v in c.items():
+            if isinstance(v, list):
+                if k not in out:
+                    out[k] = [row[:] for row in v]
+                else:
+                    out[k] = [[a + b for a, b in zip(ra, rb)]
+                              for ra, rb in zip(out[k], v)]
+            elif k in _MEAN_KEYS:
+                out[k] = out.get(k, 0.0) + float(v) * (w / max(total_w, 1.0))
+            else:
+                out[k] = out.get(k, 0.0) + float(v)
+    return out
+
+
 def summarize(reps: List[Dict], keys: Optional[Iterable[str]] = None,
               ndigits: Optional[int] = None) -> Dict[str, Dict[str, float]]:
     """Per-metric `replica_stats` over a list of per-replica counter

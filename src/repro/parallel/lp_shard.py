@@ -312,6 +312,15 @@ def init_sharded(key, cfg, spec: ShardSpec):
         "key": k2,
         "t": jnp.int32(0),
     }
+    live = cfg.initial_live()
+    if cfg.open_world and live < n:
+        # open world: ids [live, n) start as free slots (gid = lp = -1),
+        # mirroring the oracle's lp < 0 dead mask. Every SE was scattered
+        # first so the initial placement (and the live prefix's bits)
+        # matches the oracle's row-for-row.
+        dead = state["gid"] >= live
+        state["gid"] = jnp.where(dead, -1, state["gid"])
+        state["lp"] = jnp.where(dead, -1, state["lp"])
     if _sparse_halo(spec):
         state["halo_need"] = halo_need_bitmaps(
             state["pos"], state["gid"] >= 0, state["pending_dst"], spec,
@@ -512,8 +521,14 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         mob_n = jnp.zeros((n, 2), f["mob"].dtype).at[tgt].set(
             mob_all, mode="drop")
         wp_n = jnp.zeros((n, 2), jnp.float32)  # unused by flock
+        # open world: the flock aggregates must exclude dead ids exactly
+        # like the oracle's valid mask (live rows scatter True; dead ids
+        # stay False because only live rows ride the gather)
+        valid_n = jnp.zeros((n,), bool).at[tgt].set(
+            True, mode="drop") if cfg.open_world else None
         pos_n, _, mob_n, mob_g = mobility_step(k_move, pos_n, wp_n, mob_n,
-                                               f["mob_g"], abm)
+                                               f["mob_g"], abm,
+                                               valid=valid_n)
         f["pos"] = jnp.where(valid[:, None], pos_n[safe_gid], f["pos"])
         f["mob"] = jnp.where(valid[:, None], mob_n[safe_gid], f["mob"])
         f["mob_g"] = mob_g
@@ -654,8 +669,13 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
                 # rebuilds exactly the oracle's `lp` (bit-identity)
                 prev = jnp.full((n,), -1, jnp.int32).at[tgt].set(
                     rep_lp, mode="drop")
-            new_lp_n = part.partition(k_rep, pos_n,
-                                      jnp.ones((n,), jnp.float32), pcfg,
+            # open world: dead ids carry zero weight (and zero position —
+            # the oracle zeroes them too, so both layers feed the
+            # partitioner byte-identical inputs)
+            weights = jnp.zeros((n,), jnp.float32).at[tgt].set(
+                1.0, mode="drop") if cfg.open_world else \
+                jnp.ones((n,), jnp.float32)
+            new_lp_n = part.partition(k_rep, pos_n, weights, pcfg,
                                       prev=prev)
             return new_lp_n[safe_gid]
 
@@ -754,6 +774,9 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         "wire_flows": wire,
         "shard_overflow": (overflow > 0).astype(jnp.float32),
     }
+    if cfg.open_world:
+        # live population (post-arrival), mirroring engine.step's "pop"
+        metrics["pop"] = all_valid.astype(jnp.float32)
     return f, metrics
 
 
@@ -781,6 +804,14 @@ def _field_specs(spec: ShardSpec):
     return specs
 
 
+def _metric_specs(cfg):
+    """Metric output specs: open-world runs add the `pop` series."""
+    specs = dict(_METRIC_SPECS)
+    if cfg.open_world:
+        specs["pop"] = P()
+    return specs
+
+
 def _batch_field_specs(spec: ShardSpec):
     """Batched replicas: a leading (unsharded) replica axis in front of
     every per-SE field's spec — the "lp" mesh axis keeps sharding the
@@ -801,7 +832,7 @@ def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
         partial(_shard_step, cfg=cfg, spec=spec),
         mesh=mesh,
         in_specs=(fspecs, P(), P(), P(), P()),
-        out_specs=(fspecs, _METRIC_SPECS),
+        out_specs=(fspecs, _metric_specs(cfg)),
         check_rep=False,  # psum'd outputs are replicated by construction
     )
     new_fields, metrics = fn(fields, jax.random.key_data(k_move),
@@ -827,12 +858,148 @@ def step_sharded_batch(state, cfg, spec: ShardSpec, mesh: Mesh, mfs):
                  in_axes=(0, 0, 0, 0, 0)),
         mesh=mesh,
         in_specs=(_batch_field_specs(spec), P(), P(), P(), P()),
-        out_specs=(_batch_field_specs(spec), _METRIC_SPECS),
+        out_specs=(_batch_field_specs(spec), _metric_specs(cfg)),
         check_rep=False,
     )
     new_fields, metrics = fn(fields, jax.random.key_data(k_move),
                              jax.random.key_data(k_send), state["t"], mfs)
     return dict(new_fields, key=key, t=state["t"] + 1), metrics
+
+
+# ---------------------------------------------------------------------------
+# open-world churn ops (mirror engine.oracle_arrive / oracle_depart)
+# ---------------------------------------------------------------------------
+
+
+def _vacate_slots(f, hit):
+    """Free the slots in `hit`: gid = lp = -1 plus a full slot-history
+    reset (ring included, matching engine.oracle_depart — a reused slot
+    carries nothing of its previous occupant)."""
+    f = dict(f)
+    f["gid"] = jnp.where(hit, -1, f["gid"])
+    f["lp"] = jnp.where(hit, -1, f["lp"])
+    f["pending_dst"] = jnp.where(hit, -1, f["pending_dst"])
+    f["pending_eta"] = jnp.where(hit, -1, f["pending_eta"])
+    f["last_mig"] = jnp.where(hit, -10**6, f["last_mig"])
+    f["ptr"] = jnp.where(hit, 0, f["ptr"])
+    f["since_eval"] = jnp.where(hit, 0, f["since_eval"])
+    f["ring"] = jnp.where(hit[None, :, None], 0, f["ring"])
+    return f
+
+
+def _shard_depart(f, ids, spec: ShardSpec):
+    """Per-device body: vacate the slots holding global ids `ids`
+    ((B,) replicated; -1 = padding). Returns (fields, found) with
+    `found` the psum'd (B,) per-id located mask — the facade's
+    exact-or-loud check against the requested batch."""
+    eq = (f["gid"][:, None] == ids[None, :]) & (f["gid"] >= 0)[:, None]
+    hit = eq.any(axis=1)
+    found = jax.lax.psum(eq.any(axis=0).astype(jnp.int32), "lp") > 0
+    return _vacate_slots(f, hit), found
+
+
+def _shard_arrive(f, ids, pos, wp, mob, lps, cfg, spec: ShardSpec):
+    """Per-device body: insert B SEs (all args replicated; ids = -1 is
+    padding). Each device claims the arrivals whose destination LP it
+    owns and packs them into its free slots in ascending-slot order.
+    Returns (fields, admitted): refusals (no free slot on the owning
+    device) write nothing, and `admitted` is the psum'd (B,) per-arrival
+    mask — the facade raises on any refusal, exact-or-loud, naming
+    shard_capacity. Admitted arrival cells are OR'd (dilated) into the
+    owning device's halo-need bitmap so the very next step's exchange
+    already covers them."""
+    me = jax.lax.axis_index("lp")
+    real = ids >= 0
+    mine = real & (dev_of_lp(jnp.maximum(lps, 0), spec) == me)
+    free = f["gid"] < 0
+    free_order = jnp.argsort(~free, stable=True)  # free slots first, asc
+    arr_rank = jnp.cumsum(mine) - 1
+    admitted = mine & (arr_rank < free.sum())
+    target = jnp.where(admitted,
+                       free_order[jnp.clip(arr_rank, 0, spec.cap - 1)],
+                       spec.cap)
+
+    f = dict(f)
+    f["pos"] = f["pos"].at[target].set(pos, mode="drop")
+    f["waypoint"] = f["waypoint"].at[target].set(wp, mode="drop")
+    f["mob"] = f["mob"].at[target].set(mob, mode="drop")
+    f["gid"] = f["gid"].at[target].set(ids, mode="drop")
+    f["lp"] = f["lp"].at[target].set(lps, mode="drop")
+    f["pending_dst"] = f["pending_dst"].at[target].set(-1, mode="drop")
+    f["pending_eta"] = f["pending_eta"].at[target].set(-1, mode="drop")
+    f["ring"] = f["ring"].at[:, target, :].set(0, mode="drop")
+    f["ptr"] = f["ptr"].at[target].set(0, mode="drop")
+    f["since_eval"] = f["since_eval"].at[target].set(0, mode="drop")
+    f["last_mig"] = f["last_mig"].at[target].set(-10**6, mode="drop")
+    adm = jax.lax.psum(admitted.astype(jnp.int32), "lp") > 0
+
+    if _sparse_halo(spec):
+        # the negotiated need bitmaps predate this arrival; OR its
+        # dilated cell into the owner's footprint so step t+1's exchange
+        # is sound without waiting a step (departures only shrink the
+        # true need, so their stale superset stays sound untouched)
+        g = spec.grid
+        ncells = g.ncell * g.ncell
+        cell = neighbors.cell_ids(pos, g)
+        contrib = jnp.zeros((spec.n_dev, ncells), bool)
+        dev = dev_of_lp(jnp.maximum(lps, 0), spec)
+        contrib = contrib.at[jnp.where(real, dev, spec.n_dev),
+                             cell].set(True, mode="drop")
+        contrib = jax.lax.psum(contrib.astype(jnp.int32), "lp") > 0
+        f["halo_need"] = f["halo_need"] | neighbors.dilate_mask(
+            contrib.reshape(spec.n_dev, g.ncell, g.ncell),
+            _dilation_radius(spec, cfg.abm)).reshape(spec.n_dev, ncells)
+    return f, adm
+
+
+@functools.lru_cache(maxsize=COMPILED_CACHE_SIZE)
+def _compiled_depart_sharded(key_cfg):
+    spec = make_shard_spec(key_cfg)
+    mesh = make_mesh(spec)
+    fspecs = _field_specs(spec)
+    fn = shard_map(partial(_shard_depart, spec=spec), mesh=mesh,
+                   in_specs=(fspecs, P()), out_specs=(fspecs, P()),
+                   check_rep=False)
+    return jax.jit(fn), spec
+
+
+@functools.lru_cache(maxsize=COMPILED_CACHE_SIZE)
+def _compiled_arrive_sharded(key_cfg):
+    spec = make_shard_spec(key_cfg)
+    mesh = make_mesh(spec)
+    fspecs = _field_specs(spec)
+    fn = shard_map(partial(_shard_arrive, cfg=key_cfg, spec=spec),
+                   mesh=mesh,
+                   in_specs=(fspecs, P(), P(), P(), P(), P()),
+                   out_specs=(fspecs, P()), check_rep=False)
+    return jax.jit(fn), spec
+
+
+def depart_sharded(state, cfg, ids):
+    """Vacate the slots of global ids `ids` (-1 = padding). Returns
+    (state, found): the (B,) per-id located mask."""
+    from repro.core.engine import window_key_cfg
+    fn, spec = _compiled_depart_sharded(window_key_cfg(cfg))
+    fields = {k: state[k] for k in _field_specs(spec)}
+    new_fields, found = fn(fields, jnp.asarray(ids, jnp.int32))
+    return dict(new_fields, key=state["key"], t=state["t"]), found
+
+
+def arrive_sharded(state, cfg, ids, rows):
+    """Insert SEs with global ids `ids` (-1 = padding) into free slots
+    of the devices owning rows["lp"]. Returns (state, admitted): the
+    (B,) per-arrival admission mask — refused arrivals wrote nothing
+    (see Engine.arrive for the loud path)."""
+    from repro.core.engine import window_key_cfg
+    fn, spec = _compiled_arrive_sharded(window_key_cfg(cfg))
+    fields = {k: state[k] for k in _field_specs(spec)}
+    pos = jnp.asarray(rows["pos"], jnp.float32)
+    new_fields, adm = fn(
+        fields, jnp.asarray(ids, jnp.int32), pos,
+        jnp.asarray(rows.get("waypoint", pos), jnp.float32),
+        jnp.asarray(rows.get("mob", jnp.zeros_like(pos)), jnp.float32),
+        jnp.asarray(rows["lp"], jnp.int32))
+    return dict(new_fields, key=state["key"], t=state["t"]), adm
 
 
 # ---------------------------------------------------------------------------

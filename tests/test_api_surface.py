@@ -1,0 +1,53 @@
+"""Pin the supported public surface of `repro.core`.
+
+`repro.core.__all__` is the contract the README documents and the
+deprecation policy protects: names leave it only through a deprecation
+cycle, and new names join it deliberately. This snapshot makes either
+move an explicit diff in review instead of an accident.
+"""
+import warnings
+
+import repro.core
+
+#: the pinned surface — update ONLY alongside README §Service API
+PINNED = sorted([
+    # configs
+    "ABMConfig", "EngineConfig", "HeuristicConfig", "PartitionConfig",
+    # the resident engine service
+    "Engine", "ReplicaService",
+    # registries
+    "MOBILITY_MODELS", "PROXIMITY_BACKENDS", "PARTITION_BACKENDS",
+    "SETUPS", "DISTRIBUTED", "PARALLEL",
+    # cost model
+    "CostParams", "ExecutionEnvironment", "make_env", "wct", "wct_env",
+    "wire_cost",
+    # neighbor search
+    "GridSpec", "build_grid", "grid_lp_counts", "make_grid_spec",
+    # statistics
+    "merge_counters", "percentile", "replica_stats", "summarize",
+])
+
+
+def test_public_surface_is_pinned():
+    assert sorted(repro.core.__all__) == PINNED
+
+
+def test_every_public_name_resolves():
+    for name in repro.core.__all__:
+        assert getattr(repro.core, name) is not None, name
+
+
+def test_public_names_do_not_warn_on_access():
+    # touching the supported surface must never trip a DeprecationWarning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        for name in repro.core.__all__:
+            getattr(repro.core, name)
+
+
+def test_legacy_names_remain_importable_outside_all():
+    # the shims stay importable for one deprecation cycle, but are
+    # deliberately NOT part of the supported surface
+    for legacy in ("run", "run_batch"):
+        assert hasattr(repro.core, legacy)
+        assert legacy not in repro.core.__all__

@@ -173,11 +173,12 @@ def test_engine_evolution_identical_across_backends():
                                       np.asarray(series_g[k]))
 
 
-def test_use_pallas_shim_warns_and_maps():
-    cfg = ABMConfig(n_se=64, n_lp=2, area=500.0, interaction_range=100.0,
-                    use_pallas=True)
-    with pytest.warns(DeprecationWarning):
-        assert cfg.resolved_backend() == "pallas"
+def test_use_pallas_removed_fails_loudly():
+    # the PR-4 shim era is over: stale call sites must fail with a
+    # message naming the replacement knob, not silently ignore the flag
+    with pytest.raises(TypeError, match="proximity_backend"):
+        ABMConfig(n_se=64, n_lp=2, area=500.0, interaction_range=100.0,
+                  use_pallas=True)
 
 
 def test_invalid_backend_rejected():
