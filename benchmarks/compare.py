@@ -41,7 +41,8 @@ locally:
 Refreshing baselines after an intentional change:
 
     cp BENCH_proximity.json BENCH_sharded.json BENCH_scenarios.json \
-        BENCH_partition.json BENCH_replicas.json BENCH_baseline/
+        BENCH_partition.json BENCH_replicas.json BENCH_service.json \
+        BENCH_obs.json BENCH_baseline/
 """
 from __future__ import annotations
 
@@ -122,6 +123,13 @@ TRACKED = {
         "churn.p99_over_p50": ("lower", TIMING_TOL),
         "service.service_vs_sequential": ("lower", TIMING_TOL),
     },
+    # exp10 (telemetry): wall ratio of the instrumented run over the
+    # bare run at drain_every=10 — a time/time ratio, TIMING_TOL width.
+    # The absolute < 1.10 bar is asserted by the bench itself; this
+    # entry catches slower drift that stays under the hard bar.
+    "BENCH_obs.json": {
+        "obs.overhead_ratio": ("lower", TIMING_TOL),
+    },
 }
 
 
@@ -178,6 +186,21 @@ def _fmt(v):
     return f"{m:.4g}" if legacy or ci == 0.0 else f"{m:.4g}±{ci:.4g}"
 
 
+def _interval(v) -> str:
+    m, ci, _ = as_stats(v)
+    return f"[{m - ci:.4g}, {m + ci:.4g}]"
+
+
+def fail_line(metric: str, direction: str, cur, base) -> str:
+    """The one-line gate-failure summary: the tracked-key path plus
+    both 95% confidence intervals, so a CI log grep ("GATE FAIL")
+    yields everything needed to judge the regression without opening
+    either JSON."""
+    return (f"GATE FAIL {metric}: candidate {_fmt(cur)} "
+            f"ci95 {_interval(cur)} vs baseline {_fmt(base)} "
+            f"ci95 {_interval(base)} ({direction} is better)")
+
+
 def compare_file(cur_path: str, base_path: str, metrics: dict):
     """Yields (metric, status, message) rows for one benchmark file.
 
@@ -220,6 +243,9 @@ def compare_file(cur_path: str, base_path: str, metrics: dict):
         word = ">=" if direction == "higher" else "<="
         msg = (f"{_fmt(cur)} (baseline {_fmt(base)}, "
                f"needs {word} {bound:.4g}){note}")
+        if not ok:
+            msg += "\n[compare] " + fail_line(f"{name}:{path}",
+                                              direction, cur, base)
         yield f"{name}:{path}", "ok" if ok else "fail", msg
 
 

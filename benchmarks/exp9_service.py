@@ -13,6 +13,14 @@ Two claims behind the PR-8 service API are measured here:
    slots must not lose throughput against running them one by one, and
    each request's counters must match its solo run *exactly* (the
    integer counters are bit-exact; see tests/test_service.py).
+3. **Sharded churn** — the same open-world churn loop on the
+   `sharding="lp_device"` layer (arrivals packed into per-device free
+   slots, departures located by global id): measured in a 2-device
+   subprocess (the main process owns a different device topology) and
+   reported as arrivals+departures/s next to the oracle's number. No
+   absolute gate — the sharded layer pays per-device slot bookkeeping
+   for its memory locality, and the number is machine-sized; it is
+   recorded so the ratio is visible in BENCH_service.json.
 
 Timing protocol follows exp8: everything is warmed first (the compiled
 windows are (config, length)-memoized, so the timed region only
@@ -34,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -117,6 +126,87 @@ def churn_section(scale: str):
     }
 
 
+SHARDED_DEVS = 2
+SHARDED_ITERS = {"quick": 25, "full": 60}
+
+# child process template (exp5 protocol: own XLA device topology, one
+# RESULT line on stdout). Runs the churn_section loop on the sharded
+# layer: depart CHURN_BATCH by global id, admit CHURN_BATCH into
+# per-device free slots, advance one step.
+_SHARDED_CHURN_CODE = """
+import dataclasses, json, time
+import numpy as np
+from benchmarks.common import engine_cfg
+from repro.core.service import Engine
+
+batch, iters = {batch}, {iters}
+cfg = dataclasses.replace(
+    engine_cfg("quick"), sharding="lp_device", n_devices={n_dev},
+    open_world=True, n_active=engine_cfg("quick").abm.n_se - batch)
+rng = np.random.default_rng(0)
+area = cfg.abm.area
+
+e = Engine(cfg).init(seed=0)
+e.step(1)
+warm = e.arrive({{"pos": rng.uniform(0, area, (batch, 2))}})
+e.depart(warm)
+
+migrations = 0.0
+t0 = time.time()
+for _ in range(iters):
+    victims = rng.choice(e.live_ids(), batch, replace=False)
+    e.depart(victims)
+    e.arrive({{"pos": rng.uniform(0, area, (batch, 2))}})
+    migrations += e.step(1)["migrations"]
+wall = time.time() - t0
+events = 2 * batch * iters
+print("RESULT " + json.dumps({{
+    "n_devices": {n_dev}, "batch": batch, "iters": iters,
+    "events": events, "wall_s": round(wall, 3),
+    "events_per_s": round(events / wall, 1),
+    "migrations": migrations, "population": e.population(),
+}}))
+"""
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_child(code: str, n_dev: int) -> dict:
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(_REPO, "src"), _REPO,
+             os.environ.get("PYTHONPATH", "")]),
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+        XLA_PYTHON_CLIENT_PREALLOCATE="false",
+    )
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=3600, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(r.stdout + r.stderr)
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"no RESULT line in: {r.stdout!r}")
+
+
+def sharded_churn_section(scale: str):
+    """Churn loop on the LP-per-device layer, in a SHARDED_DEVS-device
+    subprocess."""
+    row = _run_child(
+        _SHARDED_CHURN_CODE.format(batch=CHURN_BATCH,
+                                   iters=SHARDED_ITERS[scale],
+                                   n_dev=SHARDED_DEVS),
+        SHARDED_DEVS)
+    print(f"[exp9] sharded churn (D={SHARDED_DEVS}): {row['events']} "
+          f"events in {row['wall_s']:.2f}s -> "
+          f"{row['events_per_s']:,.0f} events/s, "
+          f"{row['migrations']:.0f} migrations, pop {row['population']}")
+    assert row["migrations"] > 0, \
+        "sharded GAIA made no migrations under churn — heuristic dead?"
+    return row
+
+
 def service_section():
     """Q = 2R equal-length requests drained through R slots vs the same
     jobs run solo, with an exact integer-counter cross-check."""
@@ -182,6 +272,7 @@ def service_section():
 
 def main(scale: str = "quick"):
     churn = churn_section(scale)
+    sharded = sharded_churn_section(scale)
     service = service_section()
 
     on_cpu = jax.default_backend() == "cpu"
@@ -192,6 +283,7 @@ def main(scale: str = "quick"):
                        n_se=engine_cfg("quick").abm.n_se,
                        churn_batch=CHURN_BATCH),
         "churn": churn,
+        "sharded_churn": sharded,
         "service": service,
         "gate": {
             "events_per_s": {"value": churn["events_per_s"],

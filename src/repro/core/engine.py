@@ -46,6 +46,9 @@ from repro.core.abm import (ABMConfig, init_abm,
 from repro.core.costmodel import ExecutionEnvironment
 from repro.core.heuristics import HeuristicConfig
 from repro.core import heuristics as heu
+from repro.obs.config import ObsConfig
+from repro.obs import ledger as obs_ledger
+from repro.obs import runtime as obs_runtime
 
 
 SHARDINGS = ("none", "lp_device")
@@ -111,6 +114,15 @@ class EngineConfig:
     # abm.n_se - n_active slots start free for arrivals.
     open_world: bool = False
     n_active: int = 0
+    # --- runtime telemetry (repro.obs) ----------------------------------
+    # obs.enabled=True threads the per-step metrics ledger through the
+    # compiled scan (ring buffer + async drain every obs.drain_every
+    # steps) and lets the service layer synthesize events. Disabled, the
+    # compiled program is byte-identical to a config without the field
+    # (window_key_cfg normalizes a disabled ObsConfig away); enabled, it
+    # legitimately changes the traced scan and so splits the cache.
+    # Either way results are bit-identical (tests/test_obs.py).
+    obs: ObsConfig = ObsConfig()
 
     def __post_init__(self):
         if self.mem_budget_mb > 0 and self.abm.mem_budget_mb == 0:
@@ -205,69 +217,86 @@ def _init_engine(key, cfg: EngineConfig):
     return st
 
 
-def step(state, cfg: EngineConfig, mf=None):
-    """One timestep. Returns (state, per-step metrics). `mf` optionally
-    overrides cfg.heuristic.mf with a traced value (see run_window).
+def step_phases(cfg: EngineConfig):
+    """Ordered (name, fn) phase decomposition of one oracle timestep.
 
-    Open world (cfg.open_world): rows with lp < 0 are free slots — they
-    draw the same per-id randomness (shapes never depend on the
-    population, which is what keeps zero-churn runs bit-identical to
-    the closed-world path) but are masked out of every effect: they
-    never move, never send, never receive (lp = -1 one-hots to no
-    column and `valid` keeps them out of the grid), never evaluate, and
-    never migrate."""
+    Each phase is a pure function over a growing "phase context" dict
+    `px` (state under "st", plus the intermediates earlier phases
+    added). `step` composes the phases fused — same ops, same order, so
+    the compiled scan is the historical program — while the trace
+    executor (repro.obs.trace) jits each phase separately to time it
+    and emit per-phase timeline spans. Inactive phases (repartition
+    with repartition_every=0, heuristic with gaia_on=False) are simply
+    absent from the list."""
     n, L = cfg.abm.n_se, cfg.abm.n_lp
     ow = cfg.open_world
-    t = state["t"]
-    key, k_move, k_send = jax.random.split(state["key"], 3)
 
-    # 1. complete in-flight migrations
-    arrive = state["pending_eta"] == t
-    lp = jnp.where(arrive, state["pending_dst"], state["lp"])
-    pending_dst = jnp.where(arrive, -1, state["pending_dst"])
-    pending_eta = jnp.where(arrive, -1, state["pending_eta"])
-    valid = (lp >= 0) if ow else None
+    def ph_migrate(px):
+        # 1. complete in-flight migrations
+        st = px["st"]
+        t = st["t"]
+        key, k_move, k_send = jax.random.split(st["key"], 3)
+        arrive = st["pending_eta"] == t
+        lp = jnp.where(arrive, st["pending_dst"], st["lp"])
+        pending_dst = jnp.where(arrive, -1, st["pending_dst"])
+        pending_eta = jnp.where(arrive, -1, st["pending_eta"])
+        valid = (lp >= 0) if ow else None
+        return dict(px, t=t, key=key, k_move=k_move, k_send=k_send, lp=lp,
+                    pending_dst=pending_dst, pending_eta=pending_eta,
+                    valid=valid)
 
-    # 2. model evolution (identical regardless of partitioning)
-    pos, wp, mob, mob_g = mobility_step(
-        k_move, state["pos"], state["waypoint"], state["mob"],
-        state["mob_g"], cfg.abm, valid=valid)
-    if ow:  # dead rows hold their slot state (pure selection: no bits
-        # of any live row change when every row is live)
-        pos = jnp.where(valid[:, None], pos, state["pos"])
-        wp = jnp.where(valid[:, None], wp, state["waypoint"])
-        mob = jnp.where(valid[:, None], mob, state["mob"])
-    sender = jax.random.bernoulli(k_send, cfg.abm.p_interact, (n,))
-    if ow:
-        sender = valid & sender
-    counts, grid_ovf = interaction_counts_overflow(
-        pos, lp, sender, cfg.abm, valid=valid)  # (N, L), () bool
+    def ph_mobility(px):
+        # 2. model evolution (identical regardless of partitioning)
+        st, valid = px["st"], px["valid"]
+        pos, wp, mob, mob_g = mobility_step(
+            px["k_move"], st["pos"], st["waypoint"], st["mob"],
+            st["mob_g"], cfg.abm, valid=valid)
+        if ow:  # dead rows hold their slot state (pure selection: no
+            # bits of any live row change when every row is live)
+            pos = jnp.where(valid[:, None], pos, st["pos"])
+            wp = jnp.where(valid[:, None], wp, st["waypoint"])
+            mob = jnp.where(valid[:, None], mob, st["mob"])
+        sender = jax.random.bernoulli(px["k_send"], cfg.abm.p_interact, (n,))
+        if ow:
+            sender = valid & sender
+        return dict(px, pos=pos, wp=wp, mob=mob, mob_g=mob_g, sender=sender)
 
-    # 3. communication accounting: the per-pair flow matrix (src LP ->
-    # dst LP; integer scatter-add, so sharded psum reproduces it
-    # exactly) is the single source of truth — the scalar LCR terms are
-    # its trace and total. Dead rows' counts are all-zero, so clipping
-    # their lp = -1 to row 0 adds nothing.
-    safe_lp = jnp.clip(lp, 0, L - 1) if ow else lp
-    flows = jnp.zeros((L, L), jnp.int32).at[safe_lp].add(counts)
-    local = jnp.trace(flows)
-    total = flows.sum()
-    remote = total - local
+    def ph_proximity(px):
+        counts, grid_ovf = interaction_counts_overflow(
+            px["pos"], px["lp"], px["sender"], cfg.abm,
+            valid=px["valid"])  # (N, L), () bool
+        return dict(px, counts=counts, grid_ovf=grid_ovf)
 
-    # 4/5. self-clustering + periodic global repartition
-    hstate = {k: state[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
-    migs = jnp.int32(0)
-    n_evals = jnp.int32(0)
-    mig_flows = jnp.zeros((L, L), jnp.int32)
-    reparts = jnp.int32(0)
-    if cfg.repartition_every > 0:
+    def ph_account(px):
+        # 3. communication accounting: the per-pair flow matrix (src LP
+        # -> dst LP; integer scatter-add, so sharded psum reproduces it
+        # exactly) is the single source of truth — the scalar LCR terms
+        # are its trace and total. Dead rows' counts are all-zero, so
+        # clipping their lp = -1 to row 0 adds nothing.
+        lp = px["lp"]
+        safe_lp = jnp.clip(lp, 0, L - 1) if ow else lp
+        flows = jnp.zeros((L, L), jnp.int32).at[safe_lp].add(px["counts"])
+        local = jnp.trace(flows)
+        total = flows.sum()
+        st = px["st"]
+        hstate = {k: st[k] for k in ("ring", "ptr", "since_eval",
+                                     "last_mig")}
+        return dict(px, safe_lp=safe_lp, flows=flows, local=local,
+                    total=total, remote=total - local, hstate=hstate,
+                    migs=jnp.int32(0), n_evals=jnp.int32(0),
+                    mig_flows=jnp.zeros((L, L), jnp.int32),
+                    reparts=jnp.int32(0))
+
+    def ph_repartition(px):
         # every R steps the configured backend recomputes the global map
         # from current geometry; the delta enters the ordinary in-flight
         # migration machinery (and the migration counters, so wct/wct_env
         # price the state transfer). SEs already in flight are skipped —
         # their pending move completes first.
+        lp, valid, pos, t = px["lp"], px["valid"], px["pos"], px["t"]
+        pending_dst, pending_eta = px["pending_dst"], px["pending_eta"]
         pcfg = part.from_engine(cfg)
-        k_rep = jax.random.fold_in(k_move, REPART_SALT)
+        k_rep = jax.random.fold_in(px["k_move"], REPART_SALT)
         do = (t > 0) & (t % cfg.repartition_every == 0)
         # hysteresis-aware backends (part.uses_prev) see the current map;
         # the others get prev=None so their dispatch is byte-identical
@@ -289,15 +318,23 @@ def step(state, cfg: EngineConfig, mf=None):
             move = move & valid
         pending_dst = jnp.where(move, new_lp, pending_dst)
         pending_eta = jnp.where(move, t + cfg.migration_delay, pending_eta)
-        hstate = dict(hstate, last_mig=jnp.where(move, t,
-                                                 hstate["last_mig"]))
+        hstate = dict(px["hstate"],
+                      last_mig=jnp.where(move, t, px["hstate"]["last_mig"]))
         reparts = move.sum()
-        migs = migs + reparts
-        mig_flows = mig_flows.at[safe_lp, new_lp].add(move.astype(jnp.int32))
-    if cfg.gaia_on:
-        hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
+        mig_flows = px["mig_flows"].at[px["safe_lp"], new_lp].add(
+            move.astype(jnp.int32))
+        return dict(px, pending_dst=pending_dst, pending_eta=pending_eta,
+                    hstate=hstate, reparts=reparts,
+                    migs=px["migs"] + reparts, mig_flows=mig_flows)
+
+    def ph_heuristic(px):
+        # 4/5. self-clustering: window update, evaluation, balancing
+        lp, valid, t, safe_lp = px["lp"], px["valid"], px["t"], px["safe_lp"]
+        pending_dst, pending_eta = px["pending_dst"], px["pending_eta"]
+        hstate = heu.update_window(cfg.heuristic, px["hstate"],
+                                   px["counts"], px["sender"], t)
         cand, dest, alpha, hstate, n_evals = heu.evaluate(
-            cfg.heuristic, hstate, lp, t, valid=valid, mf=mf)
+            cfg.heuristic, hstate, lp, t, valid=valid, mf=px["mf"])
         cand = cand & (pending_dst < 0)  # not already in flight
         cmat = bal.candidate_matrix(cand, safe_lp, dest, L)
         if cfg.balance == "asymmetric":
@@ -314,34 +351,71 @@ def step(state, cfg: EngineConfig, mf=None):
         pending_eta = jnp.where(admit, t + cfg.migration_delay, pending_eta)
         hstate = dict(hstate, last_mig=jnp.where(admit, t,
                                                  hstate["last_mig"]))
-        migs = migs + admit.sum()
-        mig_flows = mig_flows.at[safe_lp, dest].add(admit.astype(jnp.int32))
+        mig_flows = px["mig_flows"].at[safe_lp, dest].add(
+            admit.astype(jnp.int32))
+        return dict(px, pending_dst=pending_dst, pending_eta=pending_eta,
+                    hstate=hstate, n_evals=n_evals,
+                    migs=px["migs"] + admit.sum(), mig_flows=mig_flows)
 
-    new_state = dict(state, key=key, t=t + 1, pos=pos, waypoint=wp, lp=lp,
-                     mob=mob, mob_g=mob_g,
-                     pending_dst=pending_dst, pending_eta=pending_eta,
-                     **hstate)
-    metrics = {
-        "local_msgs": local.astype(jnp.float32),
-        "remote_msgs": remote.astype(jnp.float32),
-        "migrations": migs.astype(jnp.float32),
-        "heu_evals": n_evals.astype(jnp.float32),
-        "lcr": local.astype(jnp.float32)
-               / jnp.maximum(total.astype(jnp.float32), 1.0),
-        "lp_flows": flows,
-        "mig_flows": mig_flows,
-        # bulk moves issued by the periodic global repartition (a subset
-        # of `migrations`: they ride the same machinery and pricing)
-        "repartitions": reparts.astype(jnp.float32),
-        # exactness alarm: a grid cell over capacity silently undercounts
-        # neighbors — the clustered mobility models are what can trip it
-        "grid_overflow": grid_ovf.astype(jnp.float32),
-    }
-    if ow:
-        # live population after this step's migration completions — the
-        # churn service's occupancy signal (series_counters -> mean_pop)
-        metrics["pop"] = valid.sum().astype(jnp.float32)
-    return new_state, metrics
+    def ph_finalize(px):
+        new_state = dict(px["st"], key=px["key"], t=px["t"] + 1,
+                         pos=px["pos"], waypoint=px["wp"], lp=px["lp"],
+                         mob=px["mob"], mob_g=px["mob_g"],
+                         pending_dst=px["pending_dst"],
+                         pending_eta=px["pending_eta"], **px["hstate"])
+        local, total = px["local"], px["total"]
+        metrics = {
+            "local_msgs": local.astype(jnp.float32),
+            "remote_msgs": px["remote"].astype(jnp.float32),
+            "migrations": px["migs"].astype(jnp.float32),
+            "heu_evals": px["n_evals"].astype(jnp.float32),
+            "lcr": local.astype(jnp.float32)
+                   / jnp.maximum(total.astype(jnp.float32), 1.0),
+            "lp_flows": px["flows"],
+            "mig_flows": px["mig_flows"],
+            # bulk moves issued by the periodic global repartition (a
+            # subset of `migrations`: same machinery and pricing)
+            "repartitions": px["reparts"].astype(jnp.float32),
+            # exactness alarm: a grid cell over capacity silently
+            # undercounts neighbors — the clustered mobility models are
+            # what can trip it
+            "grid_overflow": px["grid_ovf"].astype(jnp.float32),
+        }
+        if ow:
+            # live population after this step's migration completions —
+            # the churn service's occupancy signal (-> mean_pop)
+            metrics["pop"] = px["valid"].sum().astype(jnp.float32)
+        return dict(px, new_state=new_state, metrics=metrics)
+
+    phases = [("migrate", ph_migrate), ("mobility", ph_mobility),
+              ("proximity", ph_proximity), ("accounting", ph_account)]
+    if cfg.repartition_every > 0:
+        phases.append(("repartition", ph_repartition))
+    if cfg.gaia_on:
+        phases.append(("heuristic", ph_heuristic))
+    phases.append(("finalize", ph_finalize))
+    return phases
+
+
+def step(state, cfg: EngineConfig, mf=None):
+    """One timestep. Returns (state, per-step metrics). `mf` optionally
+    overrides cfg.heuristic.mf with a traced value (see run_window).
+
+    Open world (cfg.open_world): rows with lp < 0 are free slots — they
+    draw the same per-id randomness (shapes never depend on the
+    population, which is what keeps zero-churn runs bit-identical to
+    the closed-world path) but are masked out of every effect: they
+    never move, never send, never receive (lp = -1 one-hots to no
+    column and `valid` keeps them out of the grid), never evaluate, and
+    never migrate.
+
+    The body is the fused composition of `step_phases` (the named-scope
+    annotations show up in jax.profiler timelines; they add no ops)."""
+    px = {"st": state, "mf": mf}
+    for name, fn in step_phases(cfg):
+        with jax.named_scope(f"step.{name}"):
+            px = fn(px)
+    return px["new_state"], px["metrics"]
 
 
 # ---------------------------------------------------------------------------
@@ -419,10 +493,28 @@ def series_counters(series) -> dict:
 def window_key_cfg(cfg: EngineConfig) -> EngineConfig:
     """Normalize a config to its compiled-scan cache key: MF is a
     dynamic argument and the scan length comes from n_steps, so neither
-    may split the cache. Shared by the oracle and sharded runners."""
+    may split the cache. A *disabled* ObsConfig is normalized to the
+    default one — whatever drain/threshold knobs it carries are host
+    policy that never reaches the traced program, so configs differing
+    only there share one executable (this identity is also the
+    telemetry-off zero-op proof tests/test_obs.py leans on). An
+    *enabled* ObsConfig stays: it legitimately changes the program.
+    Shared by the oracle and sharded runners."""
     return dataclasses.replace(
         cfg, timesteps=0,
-        heuristic=dataclasses.replace(cfg.heuristic, mf=0.0))
+        heuristic=dataclasses.replace(cfg.heuristic, mf=0.0),
+        obs=cfg.obs if cfg.obs.enabled else ObsConfig())
+
+
+def strip_obs(cfg: EngineConfig) -> EngineConfig:
+    """Drop telemetry from a config: the batched replica scans and the
+    sharded churn kernels are deliberately un-instrumented (the ledger
+    covers the single-replica resident paths — see DESIGN.md
+    §Observability), so their compiled-cache keys must not split when a
+    resident engine turns telemetry on."""
+    if not cfg.obs.enabled:
+        return cfg
+    return dataclasses.replace(cfg, obs=ObsConfig())
 
 
 #: bound on each compiled-scan memo (engine window/batch + their sharded
@@ -451,10 +543,47 @@ def clear_compiled_caches() -> None:
 
 @functools.lru_cache(maxsize=COMPILED_CACHE_SIZE)
 def _compiled_window_cached(cfg: EngineConfig, n_steps: int):
+    if not cfg.obs.enabled:
+        # telemetry off: this branch is chosen by a static Python `if`,
+        # so the traced program is byte-for-byte the historical one —
+        # no ring carry, no callback, no extra outputs
+        def fn(state, mf):
+            def body(s, _):
+                return step(s, cfg, mf=mf)
+            return jax.lax.scan(body, state, None, length=n_steps)
+        return jax.jit(fn)
+
+    # telemetry on: thread a (drain_every, K) f32 ring through the scan
+    # carry; each step writes its ledger row into slot t % drain_every,
+    # and when the ring wraps one async unordered jax.debug.callback
+    # ships the block to the host (repro.obs.runtime routes it to the
+    # current session). The step itself is untouched — the ring write
+    # reads counters the step already computed, and the PRNG stream
+    # never sees the ring, so results stay bit-identical.
+    de = cfg.obs.drain_every
+    n_cols = len(obs_ledger.ledger_keys(cfg))
+
     def fn(state, mf):
-        def body(s, _):
-            return step(s, cfg, mf=mf)
-        return jax.lax.scan(body, state, None, length=n_steps)
+        def body(carry, _):
+            s, ring = carry
+            s2, m = step(s, cfg, mf=mf)
+            t = s["t"]  # the step that just executed
+            ring = ring.at[t % de].set(obs_ledger.ledger_row(cfg, s2, m, t))
+            jax.lax.cond(
+                (t + 1) % de == 0,
+                lambda r, tt: jax.debug.callback(obs_runtime.on_block,
+                                                 r, tt, ordered=False),
+                lambda r, tt: None,
+                ring, t)
+            return (s2, ring), m
+        # -1 init: slots a short window never writes (and slots left
+        # over from a previous window of this resident state) carry an
+        # impossible step stamp, which the host-side stamp-match filter
+        # drops — see Telemetry._ingest_stamped
+        ring0 = jnp.full((de, n_cols), -1.0, jnp.float32)
+        (s, ring), series = jax.lax.scan(body, (state, ring0), None,
+                                         length=n_steps)
+        return s, ring, series
     return jax.jit(fn)
 
 
@@ -483,7 +612,12 @@ def _run_window(state, cfg: EngineConfig, n_steps: int, mf=None):
         return lp_shard.run_window_sharded(state, cfg, n_steps, mf=mf)
 
     mf_val = jnp.float32(cfg.heuristic.mf if mf is None else mf)
-    state, series = _compiled_window(cfg, n_steps)(state, mf_val)
+    if cfg.obs.enabled:
+        t0 = int(state["t"])
+        state, ring, series = _compiled_window(cfg, n_steps)(state, mf_val)
+        obs_runtime.flush_tail(ring, t0, t0 + n_steps)
+    else:
+        state, series = _compiled_window(cfg, n_steps)(state, mf_val)
     return state, series_counters(series)
 
 
@@ -496,8 +630,13 @@ def _run(key, cfg: EngineConfig):
         from repro.parallel import lp_shard
         return lp_shard.run_sharded(key, cfg)
     st = _init_engine(key, cfg)
-    st, series = _compiled_window(cfg, cfg.timesteps)(
-        st, jnp.float32(cfg.heuristic.mf))
+    if cfg.obs.enabled:
+        st, ring, series = _compiled_window(cfg, cfg.timesteps)(
+            st, jnp.float32(cfg.heuristic.mf))
+        obs_runtime.flush_tail(ring, 0, cfg.timesteps)
+    else:
+        st, series = _compiled_window(cfg, cfg.timesteps)(
+            st, jnp.float32(cfg.heuristic.mf))
     counters = series_counters(series)
     counters["migration_ratio"] = _migration_ratio(counters, cfg)
     return st, series, counters
@@ -566,8 +705,10 @@ def _compiled_batch(cfg: EngineConfig, n_steps: int):
     """One jitted batched scan per config shape: `jax.vmap` of the
     single-replica step over the leading replica axis, MF dynamic and
     per-replica. jit re-specializes per replica count, so the cache key
-    stays (config shape, n_steps) like `_compiled_window`."""
-    return _compiled_batch_cached(window_key_cfg(cfg), n_steps)
+    stays (config shape, n_steps) like `_compiled_window`. Batched
+    scans are un-instrumented (strip_obs): the ledger covers the
+    single-replica resident paths."""
+    return _compiled_batch_cached(window_key_cfg(strip_obs(cfg)), n_steps)
 
 
 def _run_window_batch(states, cfg: EngineConfig, n_steps: int, mf=None):

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.core.costmodel import CostParams, SETUPS, wct, wct_env
 from repro.core.engine import (EngineConfig, _init_batch, _init_engine,
                                _run_window, _run_window_batch)
+from repro.obs import runtime as obs_runtime
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,8 +93,15 @@ def intra_run_tune(key, cfg: EngineConfig, tc: SelfTuneConfig,
             direction = -direction  # worse: back off
             step = max(step * 0.5, 0.02)
         prev = tec
-        mf = float(min(max(mf * (1.0 + direction * step), tc.min_mf),
-                       tc.max_mf))
+        new_mf = float(min(max(mf * (1.0 + direction * step), tc.min_mf),
+                           tc.max_mf))
+        if new_mf != mf:
+            # telemetry (no-op without a current session): the tuner's
+            # decision, stamped with the first step the new MF governs
+            obs_runtime.emit_event("tuner_move", (w + 1) * tc.window,
+                                   mf=new_mf, prev_mf=mf, window=w,
+                                   tec_per_step=tec)
+        mf = new_mf
     if cfg.sharding == "lp_device":
         # return the oracle's gid-order layout, like engine.run does
         from repro.parallel import lp_shard

@@ -45,6 +45,8 @@ from repro.core import neighbors
 from repro.core.abm import interaction_counts_overflow
 from repro.core.engine import EngineConfig
 from repro.core.stats import merge_counters
+from repro.obs import runtime as obs_runtime
+from repro.obs.ledger import Telemetry
 
 
 def _pad_pow2(b: int) -> int:
@@ -71,7 +73,7 @@ class Engine:
     (they address one resident world); a batched engine raises on them.
     """
 
-    def __init__(self, cfg: EngineConfig):
+    def __init__(self, cfg: EngineConfig, obs_sinks=None):
         self.cfg = cfg
         self.state = None
         self._batched = False
@@ -80,6 +82,15 @@ class Engine:
         self._steps = 0
         self._live = set()
         self._free = []
+        # telemetry session (cfg.obs.enabled): the ledger fills from the
+        # device ring drain during single-replica `step` windows (the
+        # batched scans stay un-instrumented — engine.strip_obs), the
+        # event log additionally hears churn batches and tuner moves
+        # host-side. Compiled executables are shared across Engine
+        # instances, so the session is re-asserted current around every
+        # windowed call (repro.obs.runtime routing).
+        self.telemetry = (Telemetry(cfg, sinks=obs_sinks)
+                          if cfg.obs.enabled else None)
 
     # -- lifecycle -------------------------------------------------------
 
@@ -104,7 +115,11 @@ class Engine:
         returns (final_state, per-step series, counters) — counters is a
         list with `seeds`. Does not touch this engine's resident
         state."""
+        if self.telemetry is not None:
+            obs_runtime.set_current(self.telemetry)
         if seeds is not None:
+            # batched scans are un-instrumented (engine.strip_obs): the
+            # ledger covers the single-replica paths
             return _eng._run_batch(self.cfg, list(seeds))
         return _eng._run(jax.random.key(int(seed)), self.cfg)
 
@@ -129,6 +144,8 @@ class Engine:
         (per-replica vector allowed when batched) — the §5.5 tuners'
         contract, unchanged."""
         self._require_state()
+        if self.telemetry is not None:
+            obs_runtime.set_current(self.telemetry)
         if self._batched:
             self.state, counters = _eng._run_window_batch(
                 self.state, self.cfg, n, mf=mf)
@@ -159,6 +176,45 @@ class Engine:
         c = merge_counters(self._parts, self._weights)
         c["migration_ratio"] = c["migrations"] / per_k
         return c
+
+    # -- telemetry views (cfg.obs.enabled) -------------------------------
+
+    def _require_obs(self, what: str):
+        if self.telemetry is None:
+            raise RuntimeError(
+                f"{what} needs EngineConfig(obs=ObsConfig(enabled=True))")
+
+    def ledger(self):
+        """The per-step :class:`~repro.obs.ledger.MetricsLedger` filled
+        by the device ring drain (rows()/column()/summary()/latest())."""
+        self._require_obs("ledger")
+        return self.telemetry.ledger
+
+    def events(self, kind=None) -> list:
+        """Telemetry events recorded so far, newest last, optionally
+        filtered by kind (see repro.obs.events.EVENT_KINDS)."""
+        self._require_obs("events")
+        return self.telemetry.events.records(kind)
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the session: latest per-step
+        gauges + whole-run means from the ledger, event counts, and the
+        facade's own occupancy."""
+        from repro.obs.prom import prometheus_text
+        self._require_obs("prometheus")
+        extra = {"steps_total": self._steps}
+        if self.cfg.open_world:
+            extra["population"] = self.population()
+        return prometheus_text(self.telemetry, extra=extra)
+
+    def close(self) -> None:
+        """Flush and close telemetry sinks (file sinks in particular);
+        the engine remains usable, events simply stop being written to
+        closed sinks."""
+        if self.telemetry is not None:
+            if obs_runtime.get_current() is self.telemetry:
+                obs_runtime.set_current(None)
+            self.telemetry.close()
 
     # -- open-world churn ------------------------------------------------
 
@@ -233,6 +289,9 @@ class Engine:
         else:
             self.state = _jit_oracle_arrive(self.state, pad_ids, prows)
         self._live.update(ids)
+        if self.telemetry is not None:
+            self.telemetry.emit("arrive", self._steps, count=b,
+                                population=len(self._live))
         return ids
 
     def depart(self, ids) -> None:
@@ -264,6 +323,9 @@ class Engine:
             self.state = _jit_oracle_depart(self.state, pad_ids)
         self._live.difference_update(ids)
         self._free.extend(reversed(ids))
+        if self.telemetry is not None:
+            self.telemetry.emit("depart", self._steps, count=b,
+                                population=len(self._live))
 
     # -- device-state queries -------------------------------------------
 
@@ -385,6 +447,29 @@ class ReplicaService:
         self._next_rid += 1
         self._queue.append((rid, int(seed), int(steps), mf))
         return rid
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the service: queue depth, slot
+        count, completed-request count, and the mean LCR / migrations
+        over completed requests. The replica scans are un-instrumented
+        (the per-step ledger covers single-replica Engines), so this
+        reports request-level aggregates only."""
+        lines = []
+
+        def gauge(name, value):
+            name = f"gaia_service_{name}"
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name} {value:g}")
+
+        gauge("slots", self.n_slots)
+        gauge("queue_depth", len(self._queue))
+        gauge("requests_completed", len(self.results))
+        done = list(self.results.values())
+        if done:
+            gauge("mean_lcr", sum(c["mean_lcr"] for c in done) / len(done))
+            gauge("mean_migrations",
+                  sum(c["migrations"] for c in done) / len(done))
+        return "\n".join(lines) + "\n"
 
     @staticmethod
     def _set_replica(states, r: int, sub):

@@ -81,6 +81,45 @@ def percentile(values: Sequence[float], q: float) -> float:
     return xs[lo] + (xs[hi] - xs[lo]) * (k - lo)
 
 
+class StreamingStats:
+    """Welford one-pass mean/variance accumulator in the replica schema.
+
+    The telemetry ledger (`repro.obs`) drains per-step metric rows from
+    a resident engine indefinitely; storing every row to call
+    `replica_stats` at the end would grow without bound, so summaries
+    accumulate incrementally instead: O(1) state per metric, numerically
+    stable (Welford's update), and `as_dict()` emits the same
+    mean/std/ci95/n schema as `replica_stats` so ledger summaries plug
+    straight into BENCH files and `benchmarks/compare.py`."""
+
+    __slots__ = ("n", "mean", "_m2", "min", "max")
+
+    def __init__(self):
+        self.n = 0
+        self.mean = 0.0
+        self._m2 = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def add(self, x: float) -> None:
+        x = float(x)
+        self.n += 1
+        d = x - self.mean
+        self.mean += d / self.n
+        self._m2 += d * (x - self.mean)
+        self.min = min(self.min, x)
+        self.max = max(self.max, x)
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self._m2 / (self.n - 1)) if self.n > 1 else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        ci = (t95(self.n - 1) * self.std / math.sqrt(self.n)
+              if self.n > 1 else 0.0)
+        return {"mean": self.mean, "std": self.std, "ci95": ci, "n": self.n}
+
+
 #: run-counter keys that aggregate as step-weighted means when windows
 #: merge (everything else numeric sums; nested lists add elementwise)
 _MEAN_KEYS = ("mean_lcr", "mean_halo_frac", "mean_pop")

@@ -1,0 +1,34 @@
+"""Runtime telemetry for the GAIA engine (DESIGN.md §Observability).
+
+Three pillars, all off by default (`ObsConfig.enabled = False` — a
+telemetry-off config shares compiled executables with a config that
+never heard of telemetry, and telemetry-on never perturbs PRNG streams
+or results):
+
+* **metrics ledger** (`ledger`): a fixed-shape on-device ring buffer of
+  per-step counters, drained asynchronously to the host every
+  `drain_every` steps via one unordered `jax.debug.callback` — the
+  memoized single-scan architecture is never broken per step;
+* **event log** (`events`): typed, step-stamped records (migration
+  bursts, repartitions, overflow alarms, churn batches, tuner moves)
+  through pluggable sinks (memory / JSONL / stdout);
+* **trace timelines** (`trace`): Chrome-trace/Perfetto JSON spans of the
+  step phases per device, from a phase-by-phase trace executor.
+
+`core.service.Engine.metrics()/events()/prometheus()` is the serving
+surface; `benchmarks/run.py --trace` the profiling one.
+"""
+from repro.obs.config import ObsConfig
+from repro.obs.events import (EVENT_KINDS, Event, EventLog, JsonlSink,
+                              MemorySink, StdoutSink)
+from repro.obs.ledger import MetricsLedger, Telemetry, ledger_keys
+from repro.obs.prom import prometheus_text
+from repro.obs import runtime
+from repro.obs.trace import TraceRecorder, trace_run, trace_steps
+
+__all__ = [
+    "ObsConfig", "EVENT_KINDS", "Event", "EventLog", "JsonlSink",
+    "MemorySink", "StdoutSink", "MetricsLedger", "Telemetry",
+    "ledger_keys", "prometheus_text", "runtime", "TraceRecorder",
+    "trace_run", "trace_steps",
+]

@@ -1,0 +1,227 @@
+"""Per-step metrics ledger: device ring buffer -> host accumulator.
+
+Device side (wired in `engine._compiled_window_cached` /
+`lp_shard._compiled_window_sharded` when ``cfg.obs.enabled``): every
+step writes one fixed-shape f32 row — the counters the step already
+computes (LCR, msgs, migrations, overflow, halo bytes, pop) plus the
+per-LP slot load — into slot ``t % drain_every`` of a
+``(drain_every, K)`` ring carried through the scan. When the ring wraps
+(``(t+1) % drain_every == 0``) a single async ``jax.debug.callback``
+ships the whole block to the host. The scan itself is never broken: one
+unordered callback per ``drain_every`` steps, no per-step host sync, no
+change to the memoized single-scan architecture. Windows whose length
+is not a multiple of ``drain_every`` leave a partial ring; the window
+runner flushes that tail host-side from the ring it carries out of the
+scan (`flush_tail`).
+
+Host side: :class:`Telemetry` owns the :class:`MetricsLedger` (bounded
+row history + O(1) streaming summaries) and the
+:class:`~repro.obs.events.EventLog`, and synthesizes threshold events
+(migration bursts, repartitions, overflow alarms) from each drained
+block — with exact step stamps, because the stamps travel in the rows.
+
+This module must stay import-free of `repro.core.engine` (the engine
+imports it); everything here takes the engine config duck-typed.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.stats import StreamingStats
+from repro.obs.events import EventLog
+
+#: scalar step metrics every execution layer reports, in ledger column
+#: order (after the leading "step" stamp column)
+_BASE_KEYS = ("lcr", "local_msgs", "remote_msgs", "migrations",
+              "heu_evals", "repartitions")
+
+
+def ledger_keys(cfg) -> tuple[str, ...]:
+    """Ordered column names of one ledger row for this engine config.
+
+    Layout: step stamp, the layer-shared scalar counters, the layer's
+    overflow/wire extras, the open-world population, then the per-LP
+    slot load (``lp_load_i`` — live SEs hosted by LP i). The tuple is
+    static per config, so the device row and every host consumer agree
+    by construction."""
+    keys = ["step", *_BASE_KEYS]
+    if cfg.sharding == "lp_device":
+        keys += ["halo_frac", "bytes_on_wire", "shard_overflow"]
+    else:
+        keys += ["grid_overflow"]
+    if cfg.open_world:
+        keys += ["pop"]
+    keys += [f"lp_load_{i}" for i in range(cfg.abm.n_lp)]
+    return tuple(keys)
+
+
+def ledger_row(cfg, state, metrics, t):
+    """Build the (K,) f32 device row for step ``t`` from the post-step
+    state and the step's metrics dict. Trace-time only — runs inside
+    the jitted scan body, so it must stay shape-static.
+
+    Per-LP load is derived on device (free slots — oracle ``lp < 0``,
+    sharded ``gid < 0`` — bucket into the dropped row L), everything
+    else reuses counters the step already computed."""
+    L = cfg.abm.n_lp
+    lp = state["lp"]
+    dead = (state["gid"] < 0) if "gid" in state else (lp < 0)
+    load = jnp.bincount(jnp.where(dead, L, lp), length=L + 1)[:L]
+    cols = [jnp.asarray(t, jnp.float32)]
+    for k in ledger_keys(cfg)[1:]:
+        if k.startswith("lp_load_"):
+            break
+        cols.append(jnp.asarray(metrics[k], jnp.float32))
+    return jnp.concatenate([jnp.stack(cols), load.astype(jnp.float32)])
+
+
+class MetricsLedger:
+    """Host accumulator for drained ledger rows.
+
+    Keeps a bounded row history (``capacity`` newest rows — a resident
+    engine can run forever) plus unbounded O(1) streaming summaries per
+    column (`repro.core.stats.StreamingStats`), so `summary()` reflects
+    the whole run even after old rows age out. Rows arrive from an
+    unordered `jax.debug.callback`; each row carries its own step stamp
+    in column 0, so consumers never depend on arrival order (in
+    practice blocks arrive monotonically from the sequential scan)."""
+
+    def __init__(self, keys: tuple[str, ...], capacity: int = 65536):
+        self.keys = tuple(keys)
+        self._idx = {k: i for i, k in enumerate(self.keys)}
+        self._rows: deque[np.ndarray] = deque(maxlen=capacity)
+        self._streams = {k: StreamingStats() for k in self.keys
+                         if k != "step"}
+        self.n_total = 0
+        self.last_drain_s: float | None = None
+
+    def append_block(self, block: np.ndarray) -> None:
+        """Ingest a (B, K) block of rows (B >= 1)."""
+        block = np.asarray(block, np.float64)
+        if block.ndim != 2 or block.shape[1] != len(self.keys):
+            raise ValueError(f"ledger block shape {block.shape} does not "
+                             f"match {len(self.keys)} columns")
+        for row in block:
+            self._rows.append(row)
+            for k, s in self._streams.items():
+                s.add(row[self._idx[k]])
+        self.n_total += len(block)
+        self.last_drain_s = time.time()
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def rows(self) -> np.ndarray:
+        """(T, K) array of the retained row history (oldest first)."""
+        if not self._rows:
+            return np.zeros((0, len(self.keys)), np.float64)
+        return np.stack(self._rows)
+
+    def column(self, key: str) -> np.ndarray:
+        return self.rows()[:, self._idx[key]]
+
+    def as_dict(self) -> dict[str, np.ndarray]:
+        rows = self.rows()
+        return {k: rows[:, i] for i, k in enumerate(self.keys)}
+
+    def latest(self) -> dict[str, float]:
+        """The newest row as {column: value} ({} while empty)."""
+        if not self._rows:
+            return {}
+        row = self._rows[-1]
+        return {k: float(row[i]) for i, k in enumerate(self.keys)}
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        """Whole-run mean/std/ci95/n per column (streaming: not limited
+        to the retained history)."""
+        return {k: s.as_dict() for k, s in self._streams.items()
+                if s.n > 0}
+
+
+class Telemetry:
+    """One engine's telemetry session: ledger + event log + thresholds.
+
+    Receives drained device blocks (via `repro.obs.runtime`, which
+    routes the shared compiled executables' callbacks to whichever
+    session is current), files the rows, and synthesizes threshold
+    events. Host-side actors (`Engine.arrive`/`depart`, the MF tuner)
+    emit directly through :meth:`emit`."""
+
+    def __init__(self, cfg, sinks=None):
+        self.cfg = cfg
+        self.keys = ledger_keys(cfg)
+        self._idx = {k: i for i, k in enumerate(self.keys)}
+        self.ledger = MetricsLedger(self.keys, capacity=cfg.obs.history)
+        self.events = EventLog(sinks, capacity=cfg.obs.history)
+        self.dropped_blocks = 0  # blocks that arrived with no session
+
+    # -- device-side feeds (called from jax.debug.callback) ----------------
+    def on_block(self, ring: np.ndarray, t_last: int) -> None:
+        """A full ring flushed at step ``t_last``: slot i holds step
+        ``t_last - drain_every + 1 + i`` (flushes happen exactly when
+        the ring wraps, so slots are already in step order)."""
+        de = self.cfg.obs.drain_every
+        self._ingest_stamped(np.asarray(ring),
+                             range(int(t_last) - de + 1, int(t_last) + 1))
+
+    def on_tail(self, ring: np.ndarray, t_start: int, t_end: int) -> None:
+        """Flush the partial ring a window carried out of its scan:
+        steps in ``[max(t_start, t_end - t_end % drain_every), t_end)``
+        never hit a wrap flush; their slots are ``t % drain_every``."""
+        de = self.cfg.obs.drain_every
+        lo = max(int(t_start), int(t_end) - int(t_end) % de)
+        steps = range(lo, int(t_end))
+        if not steps:
+            return
+        ring = np.asarray(ring)
+        self._ingest_stamped(np.stack([ring[t % de] for t in steps]), steps)
+
+    def _ingest_stamped(self, block: np.ndarray, steps) -> None:
+        """File only the rows whose on-device step stamp (column 0)
+        matches the step the slot is supposed to hold. The ring
+        initializes to -1 and windows need not align to drain_every, so
+        a flush can see never-written or previous-window slots — the
+        stamp check drops exactly those (a window's first wrap flush
+        after a short predecessor window, the tail after a wrap, etc.)
+        without any cross-window bookkeeping."""
+        keep = [i for i, t in enumerate(steps) if block[i, 0] == t]
+        if not keep:
+            return
+        self._ingest(block[keep] if len(keep) != len(block) else block)
+
+    def _ingest(self, block: np.ndarray) -> None:
+        self.ledger.append_block(block)
+        if self.cfg.obs.events:
+            self._synthesize(block)
+
+    # -- event synthesis ---------------------------------------------------
+    def _synthesize(self, block: np.ndarray) -> None:
+        ix = self._idx
+        burst = self.cfg.obs.mig_burst
+        for row in block:
+            step = int(row[ix["step"]])
+            migs = int(row[ix["migrations"]])
+            reparts = int(row[ix["repartitions"]])
+            if migs >= burst:
+                self.emit("migration_burst", step,
+                          migrations=migs, repartitions=reparts)
+            if reparts > 0:
+                self.emit("repartition", step, moved=reparts)
+            if "grid_overflow" in ix and row[ix["grid_overflow"]] > 0:
+                self.emit("grid_overflow", step)
+            if "shard_overflow" in ix and row[ix["shard_overflow"]] > 0:
+                self.emit("shard_overflow", step)
+
+    def emit(self, kind: str, step: int, **data) -> None:
+        self.events.emit(kind, step, **data)
+
+    # -- host-facing views -------------------------------------------------
+    def summary(self) -> dict[str, dict[str, float]]:
+        return self.ledger.summary()
+
+    def close(self) -> None:
+        self.events.close()

@@ -1,0 +1,81 @@
+"""Telemetry session routing for shared compiled executables.
+
+The engine memoizes compiled window scans per config
+(`engine._compiled_window_cached`), so one executable serves every
+`Engine` instance with that config — its embedded
+``jax.debug.callback`` closures therefore cannot capture a particular
+ledger. Instead the callbacks reference the module-level functions
+here, which route to whichever :class:`~repro.obs.ledger.Telemetry`
+session is *current*. `core.service.Engine` marks its session current
+before every windowed device call; plain one-shot runners (`engine.run`
+with an obs-enabled config) do the same around the run.
+
+Single-process, one-active-engine-at-a-time assumption (documented in
+DESIGN.md §Observability): "current" is a plain module global, last
+setter wins, and interleaving *steps* of two telemetry-enabled engines
+is supported because each re-asserts its session at every call —
+concurrent stepping from multiple threads is not. Blocks that arrive
+with no session are counted, not filed.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+_CURRENT = None
+dropped_blocks = 0
+
+
+def set_current(tele) -> None:
+    """Make `tele` (a Telemetry or None) the routing target."""
+    global _CURRENT
+    _CURRENT = tele
+
+
+def get_current():
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use(tele):
+    """Scope a Telemetry as current (tests and one-shot runners)."""
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = tele
+    try:
+        yield tele
+    finally:
+        _CURRENT = prev
+
+
+def on_block(ring, t_last) -> None:
+    """`jax.debug.callback` target: a full (drain_every, K) ring
+    flushed at step `t_last`. Must stay a module-level function — the
+    callback identity is part of the executable."""
+    global dropped_blocks
+    tele = _CURRENT
+    if tele is None:
+        dropped_blocks += 1
+        return
+    tele.on_block(np.asarray(ring), int(t_last))
+
+
+def flush_tail(ring, t_start, t_end) -> None:
+    """Host-side flush of the partial ring a window carried out of its
+    scan (window length not a multiple of drain_every). Waits for every
+    in-flight wrap callback first so ledger rows file in step order."""
+    tele = _CURRENT
+    if tele is None:
+        return
+    import jax
+    jax.effects_barrier()
+    tele.on_tail(np.asarray(ring), int(t_start), int(t_end))
+
+
+def emit_event(kind: str, step: int, **data) -> None:
+    """Host-side event emission into the current session, if any (the
+    MF self-tuner and other engine-agnostic call sites use this)."""
+    tele = _CURRENT
+    if tele is not None:
+        tele.emit(kind, step, **data)

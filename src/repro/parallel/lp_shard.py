@@ -83,6 +83,8 @@ from repro.core.abm import (init_abm, max_step_displacement,
                             mobility_row_apply, mobility_row_draws,
                             mobility_step, row_local_mobility)
 from repro.core.engine import COMPILED_CACHE_SIZE
+from repro.obs import ledger as obs_ledger
+from repro.obs import runtime as obs_runtime
 
 #: per-SE state rows that migrate with an SE between shards ("mob" is
 #: the per-SE mobility state: member offset / heading — full-row packed)
@@ -475,164 +477,216 @@ def _apply_arrivals(f, t, cfg, spec: ShardSpec, me):
     return f, overflow, mig_wire
 
 
-def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
-    """Per-device body of one timestep (runs under shard_map). `mf` is
-    the dynamic Migration Factor (see engine.run_window)."""
+def _gather_row_bytes(cfg) -> int:
+    """Static per-valid-row byte price of the id-order reconstruction
+    gathers a step performs (flock mobility and/or the periodic
+    repartition hook) — the exact accumulation the fused step used to
+    compute inline, now shared by the fused and traced paths."""
+    row_local = row_local_mobility(cfg.abm)
+    grb = 0 if row_local else 20  # flock: pos + mob + gid
+    if cfg.repartition_every > 0:
+        # post-mobility pos + gid per valid row; gid rides the flock
+        # gather when one already happened, leaving pos only
+        grb += 12 if row_local else 8
+        if part.uses_prev(part.from_engine(cfg)):
+            grb += 4  # hysteresis backends read the id-order map too
+    return grb
+
+
+def _sharded_phases(cfg, spec: ShardSpec):
+    """Ordered (name, fn, adds) phase decomposition of the per-device
+    step body. Each fn maps a phase-context dict `px` (per-SE fields
+    under "f", plus intermediates earlier phases added) to the grown
+    dict; `adds` names the keys the phase introduces (the trace wrapper
+    uses it to derive per-phase shard_map out_specs — see
+    `sharded_trace_phases`). `_shard_step` composes the phases fused, so
+    the compiled scan is the historical program."""
     abm = cfg.abm
-    n, L, C, S = spec.n_se, spec.n_lp, spec.cap, spec.n_slots
+    n, L, C = spec.n_se, spec.n_lp, spec.cap
     D = spec.n_dev
-    me = jax.lax.axis_index("lp")
-    k_move = jax.random.wrap_key_data(k_move)
-    k_send = jax.random.wrap_key_data(k_send)
 
-    # 1. complete in-flight migrations (the resharding op)
-    f, reshard_overflow, wire = _apply_arrivals(f, t, cfg, spec, me)
-    valid = f["gid"] >= 0
-    safe_gid = jnp.clip(f["gid"], 0, n - 1)
-    n_valid = valid.sum()
-    all_valid = jax.lax.psum(n_valid, "lp")
+    def ph_migrate(px):
+        # 1. complete in-flight migrations (the resharding op)
+        me = jax.lax.axis_index("lp")
+        f, reshard_overflow, wire = _apply_arrivals(
+            dict(px["f"]), px["t"], cfg, spec, me)
+        valid = f["gid"] >= 0
+        safe_gid = jnp.clip(f["gid"], 0, n - 1)
+        n_valid = valid.sum()
+        all_valid = jax.lax.psum(n_valid, "lp")
+        return dict(px, f=f, wire=wire, reshard_overflow=reshard_overflow,
+                    valid=valid, safe_gid=safe_gid, n_valid=n_valid,
+                    all_valid=all_valid)
 
-    # 2. model evolution. The row-local models (rwp/hotspot/group)
-    # factor into full-array id-order draws + an elementwise apply: each
-    # device computes the same draw arrays, gathers its rows by SE id,
-    # and moves them in place — every SE sees the same randomness
-    # wherever it is hosted (bit-identity), and no position leaves the
-    # device. Flock reads global cell aggregates (a float scatter-add
-    # whose reduction order must match the oracle), so each device
-    # reconstructs the id-order arrays from an all-gather, advances them
-    # with the *same* `mobility_step` the oracle runs, and takes its own
-    # rows back — bit-identity by construction (see DESIGN.md).
-    gid_all = None  # id-order gather, shared by flock + repartition
-    if row_local_mobility(abm):
-        draws, mob_g = mobility_row_draws(k_move, n, f["mob_g"], abm)
-        my_draws = {k: v[safe_gid] for k, v in draws.items()}
-        new_pos, new_wp = mobility_row_apply(f["pos"], f["waypoint"],
-                                             f["mob"], my_draws, abm)
-        f["pos"] = jnp.where(valid[:, None], new_pos, f["pos"])
-        f["waypoint"] = jnp.where(valid[:, None], new_wp, f["waypoint"])
-        f["mob_g"] = mob_g
-    else:
-        pos_all = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
-        mob_all = jax.lax.all_gather(f["mob"], "lp", axis=0, tiled=True)
-        gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
-        tgt = jnp.where(gid_all >= 0, gid_all, n)  # pads -> dropped
-        pos_n = jnp.zeros((n, 2), f["pos"].dtype).at[tgt].set(
-            pos_all, mode="drop")
-        mob_n = jnp.zeros((n, 2), f["mob"].dtype).at[tgt].set(
-            mob_all, mode="drop")
-        wp_n = jnp.zeros((n, 2), jnp.float32)  # unused by flock
-        # open world: the flock aggregates must exclude dead ids exactly
-        # like the oracle's valid mask (live rows scatter True; dead ids
-        # stay False because only live rows ride the gather)
-        valid_n = jnp.zeros((n,), bool).at[tgt].set(
-            True, mode="drop") if cfg.open_world else None
-        pos_n, _, mob_n, mob_g = mobility_step(k_move, pos_n, wp_n, mob_n,
-                                               f["mob_g"], abm,
-                                               valid=valid_n)
-        f["pos"] = jnp.where(valid[:, None], pos_n[safe_gid], f["pos"])
-        f["mob"] = jnp.where(valid[:, None], mob_n[safe_gid], f["mob"])
-        f["mob_g"] = mob_g
-    sender = valid & jax.random.bernoulli(k_send, abm.p_interact, (n,))[safe_gid]
-
-    # 3. halo exchange + per-shard proximity
-    halo_overflow = jnp.bool_(False)
-    grid_overflow = jnp.bool_(False)
-    halo_n = jnp.int32(0)
-    cellC = None
-    if spec.grid is not None:
-        gspec = spec.grid
-        nc = gspec.ncell
-        ncells = nc * nc
-        cellC = neighbors.cell_ids(f["pos"], gspec)
-        if D > 1:
-            hc = spec.halo_cap
-            # pack, per peer, exactly the rows its (one-step-stale,
-            # dilation-covered) need bitmap asks for
-            need = f["halo_need"]  # (D, ncells), negotiated at step t-1
-            want = need[:, jnp.where(valid, cellC, 0)]  # (D, C)
-            send = want & valid[None, :] & \
-                (jnp.arange(D, dtype=jnp.int32) != me)[:, None]
-            cnt = send.sum(axis=1)
-            order = jnp.argsort(~send, axis=1, stable=True)[:, :hc]
-            is_row = jnp.arange(hc)[None, :] < cnt[:, None]
-            send_pos = jnp.where(is_row[..., None], f["pos"][order], 0.0)
-            send_lp = jnp.where(is_row, f["lp"][order], -1)
-            halo_overflow = (cnt > hc).any()
-            # the one same-step collective of the proximity path
-            recv_pos = jax.lax.all_to_all(send_pos, "lp", split_axis=0,
-                                          concat_axis=0, tiled=True)
-            recv_lp = jax.lax.all_to_all(send_lp, "lp", split_axis=0,
-                                         concat_axis=0, tiled=True)
-            view_pos = jnp.concatenate([f["pos"],
-                                        recv_pos.reshape(D * hc, 2)])
-            view_lp = jnp.concatenate([f["lp"], recv_lp.reshape(D * hc)])
-            packed = jnp.minimum(cnt, hc)
-            wire = wire + jax.lax.psum(
-                jnp.zeros((D, D), jnp.int32).at[me].set(
-                    packed * HALO_ROW_BYTES), "lp")
-            # exact halo (the pre-existing halo_frac semantics): received
-            # rows inside this shard's true 3x3 need *now*. Exchange
-            # soundness guarantees every such row was received, so the
-            # sparse path measures the same quantity the full-gather
-            # transport did — trajectories stay baseline-comparable.
-            occ = jnp.zeros((ncells,), bool).at[
-                jnp.where(valid, cellC, ncells)].set(True, mode="drop")
-            exact = neighbors.dilate_mask(occ.reshape(nc, nc), 1).reshape(-1)
-            cellR = neighbors.cell_ids(recv_pos.reshape(D * hc, 2), gspec)
-            halo_n = ((recv_lp.reshape(-1) >= 0) & exact[cellR]).sum()
+    def ph_mobility(px):
+        # 2. model evolution. The row-local models (rwp/hotspot/group)
+        # factor into full-array id-order draws + an elementwise apply:
+        # each device computes the same draw arrays, gathers its rows by
+        # SE id, and moves them in place — every SE sees the same
+        # randomness wherever it is hosted (bit-identity), and no
+        # position leaves the device. Flock reads global cell aggregates
+        # (a float scatter-add whose reduction order must match the
+        # oracle), so each device reconstructs the id-order arrays from
+        # an all-gather, advances them with the *same* `mobility_step`
+        # the oracle runs, and takes its own rows back — bit-identity by
+        # construction (see DESIGN.md).
+        f = dict(px["f"])
+        valid, safe_gid = px["valid"], px["safe_gid"]
+        k_move = jax.random.wrap_key_data(px["k_move"])
+        k_send = jax.random.wrap_key_data(px["k_send"])
+        out = dict(px)
+        if row_local_mobility(abm):
+            draws, mob_g = mobility_row_draws(k_move, n, f["mob_g"], abm)
+            my_draws = {k: v[safe_gid] for k, v in draws.items()}
+            new_pos, new_wp = mobility_row_apply(f["pos"], f["waypoint"],
+                                                 f["mob"], my_draws, abm)
+            f["pos"] = jnp.where(valid[:, None], new_pos, f["pos"])
+            f["waypoint"] = jnp.where(valid[:, None], new_wp, f["waypoint"])
+            f["mob_g"] = mob_g
         else:
-            view_pos, view_lp = f["pos"], f["lp"]
-        grid = neighbors.build_grid(view_pos, gspec, valid=view_lp >= 0,
-                                    with_table=False)
-        # visit local rows in cell-sorted order (same trick as the
-        # engine path: the CSR segment gathers get spatial locality);
-        # integer counts scatter back to slot order exactly
-        row_order = jnp.argsort(jnp.where(valid, cellC, ncells),
-                                stable=True).astype(jnp.int32)
-        out = neighbors.rows_grid_counts(
-            view_pos, view_lp, L, abm.area, abm.interaction_range, gspec,
-            grid, f["pos"][row_order], row_order, sender[row_order],
-            neighbors.chunk_entries(abm.mem_budget_mb))
-        counts = jnp.zeros((C, L), jnp.int32).at[row_order].set(out)
-        grid_overflow = grid["overflow"]
-    else:
+            pos_all = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
+            mob_all = jax.lax.all_gather(f["mob"], "lp", axis=0, tiled=True)
+            gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
+            tgt = jnp.where(gid_all >= 0, gid_all, n)  # pads -> dropped
+            pos_n = jnp.zeros((n, 2), f["pos"].dtype).at[tgt].set(
+                pos_all, mode="drop")
+            mob_n = jnp.zeros((n, 2), f["mob"].dtype).at[tgt].set(
+                mob_all, mode="drop")
+            wp_n = jnp.zeros((n, 2), jnp.float32)  # unused by flock
+            # open world: the flock aggregates must exclude dead ids
+            # exactly like the oracle's valid mask (live rows scatter
+            # True; dead ids stay False — only live rows ride the gather)
+            valid_n = jnp.zeros((n,), bool).at[tgt].set(
+                True, mode="drop") if cfg.open_world else None
+            pos_n, _, mob_n, mob_g = mobility_step(k_move, pos_n, wp_n,
+                                                   mob_n, f["mob_g"], abm,
+                                                   valid=valid_n)
+            f["pos"] = jnp.where(valid[:, None], pos_n[safe_gid], f["pos"])
+            f["mob"] = jnp.where(valid[:, None], mob_n[safe_gid], f["mob"])
+            f["mob_g"] = mob_g
+            out["gid_all"] = gid_all  # shared by the repartition hook
+        sender = valid & jax.random.bernoulli(
+            k_send, abm.p_interact, (n,))[safe_gid]
+        out.update(f=f, sender=sender)
+        return out
+
+    def ph_halo(px):
+        # 3. halo exchange: assemble the local proximity view
+        me = jax.lax.axis_index("lp")
+        f, valid, wire = px["f"], px["valid"], px["wire"]
+        halo_overflow = jnp.bool_(False)
+        halo_n = jnp.int32(0)
+        if spec.grid is not None:
+            gspec = spec.grid
+            nc = gspec.ncell
+            ncells = nc * nc
+            cellC = neighbors.cell_ids(f["pos"], gspec)
+            if D > 1:
+                hc = spec.halo_cap
+                # pack, per peer, exactly the rows its (one-step-stale,
+                # dilation-covered) need bitmap asks for
+                need = f["halo_need"]  # (D, ncells), negotiated at t-1
+                want = need[:, jnp.where(valid, cellC, 0)]  # (D, C)
+                send = want & valid[None, :] & \
+                    (jnp.arange(D, dtype=jnp.int32) != me)[:, None]
+                cnt = send.sum(axis=1)
+                order = jnp.argsort(~send, axis=1, stable=True)[:, :hc]
+                is_row = jnp.arange(hc)[None, :] < cnt[:, None]
+                send_pos = jnp.where(is_row[..., None], f["pos"][order], 0.0)
+                send_lp = jnp.where(is_row, f["lp"][order], -1)
+                halo_overflow = (cnt > hc).any()
+                # the one same-step collective of the proximity path
+                recv_pos = jax.lax.all_to_all(send_pos, "lp", split_axis=0,
+                                              concat_axis=0, tiled=True)
+                recv_lp = jax.lax.all_to_all(send_lp, "lp", split_axis=0,
+                                             concat_axis=0, tiled=True)
+                view_pos = jnp.concatenate([f["pos"],
+                                            recv_pos.reshape(D * hc, 2)])
+                view_lp = jnp.concatenate([f["lp"], recv_lp.reshape(D * hc)])
+                packed = jnp.minimum(cnt, hc)
+                wire = wire + jax.lax.psum(
+                    jnp.zeros((D, D), jnp.int32).at[me].set(
+                        packed * HALO_ROW_BYTES), "lp")
+                # exact halo (the pre-existing halo_frac semantics):
+                # received rows inside this shard's true 3x3 need *now*.
+                # Exchange soundness guarantees every such row was
+                # received, so the sparse path measures the same quantity
+                # the full-gather transport did — trajectories stay
+                # baseline-comparable.
+                occ = jnp.zeros((ncells,), bool).at[
+                    jnp.where(valid, cellC, ncells)].set(True, mode="drop")
+                exact = neighbors.dilate_mask(occ.reshape(nc, nc),
+                                              1).reshape(-1)
+                cellR = neighbors.cell_ids(recv_pos.reshape(D * hc, 2),
+                                           gspec)
+                halo_n = ((recv_lp.reshape(-1) >= 0) & exact[cellR]).sum()
+            else:
+                view_pos, view_lp = f["pos"], f["lp"]
+            return dict(px, wire=wire, cellC=cellC, view_pos=view_pos,
+                        view_lp=view_lp, halo_overflow=halo_overflow,
+                        halo_n=halo_n)
         # dense fallback (world too small to tessellate): the original
         # full-gather transport — every position/LP to every device
         pos_g = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
         lp_g = jax.lax.all_gather(f["lp"], "lp", axis=0, tiled=True)
-        my_idx = me * C + jnp.arange(C, dtype=jnp.int32)
-        counts = neighbors.rows_dense_counts(
-            pos_g, lp_g, L, abm.area, abm.interaction_range,
-            f["pos"], my_idx, sender)
-        halo_n = all_valid - n_valid  # no grid: every remote agent needed
+        halo_n = px["all_valid"] - px["n_valid"]  # every remote needed
         if D > 1:
-            vcnt = jax.lax.all_gather(n_valid, "lp")  # (D,)
+            vcnt = jax.lax.all_gather(px["n_valid"], "lp")  # (D,)
             wire = wire + (vcnt[:, None] * HALO_ROW_BYTES
                            * (1 - jnp.eye(D, dtype=jnp.int32)))
+        return dict(px, wire=wire, pos_g=pos_g, lp_g=lp_g,
+                    halo_overflow=halo_overflow, halo_n=halo_n)
 
-    # 3b. communication accounting: the per-pair flow matrix is integer,
-    # so the cross-shard psum is exactly the oracle's id-order
-    # scatter-add, and the scalar LCR terms derive from it (single
-    # source of truth, same as engine.step). Rows of invalid slots are
-    # zero (non-senders), and their safe_lp=0 rows add nothing.
-    safe_lp = jnp.clip(f["lp"], 0, L - 1)
-    flows = jax.lax.psum(
-        jnp.zeros((L, L), jnp.int32).at[safe_lp].add(counts), "lp")
-    local = jnp.trace(flows)
-    total = flows.sum()
-    remote = total - local
+    def ph_proximity(px):
+        # 3a. per-shard proximity counts over the assembled view
+        f, valid, sender = px["f"], px["valid"], px["sender"]
+        if spec.grid is not None:
+            gspec = spec.grid
+            ncells = gspec.ncell * gspec.ncell
+            grid = neighbors.build_grid(px["view_pos"], gspec,
+                                        valid=px["view_lp"] >= 0,
+                                        with_table=False)
+            # visit local rows in cell-sorted order (same trick as the
+            # engine path: the CSR segment gathers get spatial locality);
+            # integer counts scatter back to slot order exactly
+            row_order = jnp.argsort(jnp.where(valid, px["cellC"], ncells),
+                                    stable=True).astype(jnp.int32)
+            out = neighbors.rows_grid_counts(
+                px["view_pos"], px["view_lp"], L, abm.area,
+                abm.interaction_range, gspec, grid, f["pos"][row_order],
+                row_order, sender[row_order],
+                neighbors.chunk_entries(abm.mem_budget_mb))
+            counts = jnp.zeros((C, L), jnp.int32).at[row_order].set(out)
+            grid_overflow = grid["overflow"]
+        else:
+            me = jax.lax.axis_index("lp")
+            my_idx = me * C + jnp.arange(C, dtype=jnp.int32)
+            counts = neighbors.rows_dense_counts(
+                px["pos_g"], px["lp_g"], L, abm.area, abm.interaction_range,
+                f["pos"], my_idx, sender)
+            grid_overflow = jnp.bool_(False)
+        return dict(px, counts=counts, grid_overflow=grid_overflow)
 
-    # 4/5. self-clustering + periodic global repartition: window update
-    # + evaluation are row-local; the balancer's inputs are psum'd so
-    # every device sees the same grants and the per-pair selection stays
-    # shard-local (a pair's candidates all live on the shard owning the
-    # source LP)
-    migs = jnp.int32(0)
-    n_evals = jnp.int32(0)
-    mig_flows = jnp.zeros((L, L), jnp.int32)
-    reparts = jnp.int32(0)
-    gather_row_bytes = 0 if row_local_mobility(abm) else 20  # pos+mob+gid
-    if cfg.repartition_every > 0:
+    def ph_account(px):
+        # 3b. communication accounting: the per-pair flow matrix is
+        # integer, so the cross-shard psum is exactly the oracle's
+        # id-order scatter-add, and the scalar LCR terms derive from it
+        # (single source of truth, same as engine.step). Rows of invalid
+        # slots are zero (non-senders); their safe_lp=0 rows add nothing.
+        f = px["f"]
+        safe_lp = jnp.clip(f["lp"], 0, L - 1)
+        flows = jax.lax.psum(
+            jnp.zeros((L, L), jnp.int32).at[safe_lp].add(px["counts"]),
+            "lp")
+        local = jnp.trace(flows)
+        total = flows.sum()
+        return dict(px, safe_lp=safe_lp, flows=flows, local=local,
+                    total=total, remote=total - local,
+                    migs=jnp.int32(0), n_evals=jnp.int32(0),
+                    mig_flows=jnp.zeros((L, L), jnp.int32),
+                    reparts=jnp.int32(0))
+
+    def ph_repartition(px):
         # mirror of engine.step's hook: reconstruct the id-order
         # positions (a gather the sparse halo no longer performs), run
         # the *same* partition function on every device, and take this
@@ -642,12 +696,14 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         # step; the reconstruction + partition math fires on
         # repartition steps.
         from repro.core.engine import REPART_SALT
+        f = dict(px["f"])
+        valid, safe_gid, safe_lp = px["valid"], px["safe_gid"], px["safe_lp"]
+        t = px["t"]
         pcfg = part.from_engine(cfg)
-        if gid_all is None:
-            gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
-            gather_row_bytes += 12  # post-mobility pos + gid per valid row
+        if "gid_all" in px:
+            gid_all = px["gid_all"]  # gid rode the flock gather
         else:
-            gather_row_bytes += 8  # gid rode the flock gather: pos only
+            gid_all = jax.lax.all_gather(f["gid"], "lp", axis=0, tiled=True)
         rep_pos = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
         rep_lp = None
         if part.uses_prev(pcfg):
@@ -655,8 +711,8 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
             # gather (a collective: outside the cond) is only paid — and
             # only priced — when the backend actually consumes it
             rep_lp = jax.lax.all_gather(f["lp"], "lp", axis=0, tiled=True)
-            gather_row_bytes += 4
-        k_rep = jax.random.fold_in(k_move, REPART_SALT)
+        k_rep = jax.random.fold_in(jax.random.wrap_key_data(px["k_move"]),
+                                   REPART_SALT)
         do = (t > 0) & (t % cfg.repartition_every == 0)
 
         def _recompute():
@@ -686,21 +742,26 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
                                      f["pending_eta"])
         f["last_mig"] = jnp.where(move, t, f["last_mig"])
         reparts = jax.lax.psum(move.sum(), "lp")
-        migs = migs + reparts
-        mig_flows = mig_flows + jax.lax.psum(
+        mig_flows = px["mig_flows"] + jax.lax.psum(
             jnp.zeros((L, L), jnp.int32).at[safe_lp, new_lp].add(
                 move.astype(jnp.int32)), "lp")
-    if gather_row_bytes and D > 1:
-        # id-order reconstruction gathers (flock / repartition): their
-        # valid rows are real row payload, priced like the halo rows
-        vcnt = jax.lax.all_gather(n_valid, "lp")  # (D,)
-        wire = wire + (vcnt[:, None] * gather_row_bytes
-                       * (1 - jnp.eye(D, dtype=jnp.int32)))
-    if cfg.gaia_on:
-        hstate = {k: f[k] for k in ("ring", "ptr", "since_eval", "last_mig")}
-        hstate = heu.update_window(cfg.heuristic, hstate, counts, sender, t)
+        return dict(px, f=f, reparts=reparts, migs=px["migs"] + reparts,
+                    mig_flows=mig_flows)
+
+    def ph_heuristic(px):
+        # 4/5. self-clustering: window update + evaluation are
+        # row-local; the balancer's inputs are psum'd so every device
+        # sees the same grants and the per-pair selection stays
+        # shard-local (a pair's candidates all live on the shard owning
+        # the source LP)
+        f = dict(px["f"])
+        valid, safe_lp, t = px["valid"], px["safe_lp"], px["t"]
+        hstate = {k: f[k] for k in ("ring", "ptr", "since_eval",
+                                    "last_mig")}
+        hstate = heu.update_window(cfg.heuristic, hstate, px["counts"],
+                                   px["sender"], t)
         cand, dest, alpha, hstate, n_eval_loc = heu.evaluate(
-            cfg.heuristic, hstate, f["lp"], t, valid=valid, mf=mf)
+            cfg.heuristic, hstate, f["lp"], t, valid=valid, mf=px["mf"])
         n_evals = jax.lax.psum(n_eval_loc, "lp")
         cand = cand & (f["pending_dst"] < 0)
         cmat = jax.lax.psum(bal.candidate_matrix(cand, safe_lp, dest, L),
@@ -708,8 +769,8 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         if cfg.balance == "asymmetric":
             cap_sh = jnp.asarray(cfg.effective_capacity(), jnp.float32)
             current = jax.lax.psum(
-                jnp.bincount(jnp.where(valid, f["lp"], L), length=L + 1)[:L],
-                "lp")
+                jnp.bincount(jnp.where(valid, f["lp"], L),
+                             length=L + 1)[:L], "lp")
             grants = bal.asymmetric_grants(cmat, current, cap_sh)
         else:
             grants = bal.symmetric_grants(cmat)
@@ -721,63 +782,117 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
         hstate = dict(hstate,
                       last_mig=jnp.where(admit, t, hstate["last_mig"]))
         f.update(hstate)
-        migs = migs + jax.lax.psum(admit.sum(), "lp")
-        mig_flows = mig_flows + jax.lax.psum(
+        migs = px["migs"] + jax.lax.psum(admit.sum(), "lp")
+        mig_flows = px["mig_flows"] + jax.lax.psum(
             jnp.zeros((L, L), jnp.int32).at[safe_lp, dest].add(
                 admit.astype(jnp.int32)), "lp")
+        return dict(px, f=f, n_evals=n_evals, migs=migs,
+                    mig_flows=mig_flows)
 
-    # 6. negotiate step t+1's halo on step t's tail (the double buffer):
-    # each device contributes its post-mobility occupancy plus the cells
-    # of rows pending toward each destination, psum ORs the bitmaps, and
-    # the dilation (3x3 + one step of motion) makes the stale footprint
-    # a sound superset of tomorrow's true need. This is the only global
-    # agreement the exchange requires, and it overlaps this step's
-    # compute instead of stalling the next step's head.
-    if _sparse_halo(spec):
-        pend = valid & (f["pending_dst"] >= 0)
-        pdev = dev_of_lp(jnp.maximum(f["pending_dst"], 0), spec)
-        safe_cell = jnp.where(valid, cellC, ncells)
-        contrib = jnp.zeros((D, ncells), bool)
-        contrib = contrib.at[jnp.full((C,), me), safe_cell].set(
-            True, mode="drop")
-        contrib = contrib.at[jnp.where(pend, pdev, D), safe_cell].set(
-            True, mode="drop")
-        occ_all = jax.lax.psum(contrib.astype(jnp.int32), "lp") > 0
-        f["halo_need"] = neighbors.dilate_mask(
-            occ_all.reshape(D, nc, nc),
-            _dilation_radius(spec, abm)).reshape(D, ncells)
+    def ph_finalize(px):
+        me = jax.lax.axis_index("lp")
+        f = dict(px["f"])
+        valid, wire = px["valid"], px["wire"]
+        grb = _gather_row_bytes(cfg)
+        if grb and D > 1:
+            # id-order reconstruction gathers (flock / repartition):
+            # their valid rows are real row payload, priced like the
+            # halo rows (integer add — placement after the heuristic
+            # phase leaves the sum exactly the historical value)
+            vcnt = jax.lax.all_gather(px["n_valid"], "lp")  # (D,)
+            wire = wire + (vcnt[:, None] * grb
+                           * (1 - jnp.eye(D, dtype=jnp.int32)))
 
-    halo_total = jax.lax.psum(halo_n, "lp").astype(jnp.float32)
-    remote_slots = ((D - 1) * all_valid).astype(jnp.float32)
-    overflow = jax.lax.psum(
-        (reshard_overflow | grid_overflow | halo_overflow).astype(jnp.int32),
-        "lp")
-    metrics = {
-        "local_msgs": local.astype(jnp.float32),
-        "remote_msgs": remote.astype(jnp.float32),
-        "migrations": migs.astype(jnp.float32),
-        "heu_evals": n_evals.astype(jnp.float32),
-        "lcr": local.astype(jnp.float32)
-               / jnp.maximum(total.astype(jnp.float32), 1.0),
-        "lp_flows": flows,
-        "mig_flows": mig_flows,
-        "repartitions": reparts.astype(jnp.float32),
-        # mean remote agents a shard actually needs (its halo), as a
-        # fraction of all remote agents — GAIA's clustering drives this
-        # down, and the sparse exchange realizes the saving on the wire
-        "halo_frac": halo_total / jnp.maximum(remote_slots, 1.0),
-        # exact per-step bytes of useful row payload exchanged (packed
-        # halo rows + admitted cross-device migrations + id-order
-        # reconstruction gathers); wire_flows is its per-device-pair
-        # breakdown, priced by costmodel.wct_env
-        "bytes_on_wire": wire.sum().astype(jnp.float32),
-        "wire_flows": wire,
-        "shard_overflow": (overflow > 0).astype(jnp.float32),
-    }
-    if cfg.open_world:
-        # live population (post-arrival), mirroring engine.step's "pop"
-        metrics["pop"] = all_valid.astype(jnp.float32)
-    return f, metrics
+        # 6. negotiate step t+1's halo on step t's tail (the double
+        # buffer): each device contributes its post-mobility occupancy
+        # plus the cells of rows pending toward each destination, psum
+        # ORs the bitmaps, and the dilation (3x3 + one step of motion)
+        # makes the stale footprint a sound superset of tomorrow's true
+        # need. This is the only global agreement the exchange requires,
+        # and it overlaps this step's compute instead of stalling the
+        # next step's head.
+        if _sparse_halo(spec):
+            nc = spec.grid.ncell
+            ncells = nc * nc
+            pend = valid & (f["pending_dst"] >= 0)
+            pdev = dev_of_lp(jnp.maximum(f["pending_dst"], 0), spec)
+            safe_cell = jnp.where(valid, px["cellC"], ncells)
+            contrib = jnp.zeros((D, ncells), bool)
+            contrib = contrib.at[jnp.full((C,), me), safe_cell].set(
+                True, mode="drop")
+            contrib = contrib.at[jnp.where(pend, pdev, D), safe_cell].set(
+                True, mode="drop")
+            occ_all = jax.lax.psum(contrib.astype(jnp.int32), "lp") > 0
+            f["halo_need"] = neighbors.dilate_mask(
+                occ_all.reshape(D, nc, nc),
+                _dilation_radius(spec, abm)).reshape(D, ncells)
+
+        local, total = px["local"], px["total"]
+        halo_total = jax.lax.psum(px["halo_n"], "lp").astype(jnp.float32)
+        remote_slots = ((D - 1) * px["all_valid"]).astype(jnp.float32)
+        overflow = jax.lax.psum(
+            (px["reshard_overflow"] | px["grid_overflow"]
+             | px["halo_overflow"]).astype(jnp.int32), "lp")
+        metrics = {
+            "local_msgs": local.astype(jnp.float32),
+            "remote_msgs": px["remote"].astype(jnp.float32),
+            "migrations": px["migs"].astype(jnp.float32),
+            "heu_evals": px["n_evals"].astype(jnp.float32),
+            "lcr": local.astype(jnp.float32)
+                   / jnp.maximum(total.astype(jnp.float32), 1.0),
+            "lp_flows": px["flows"],
+            "mig_flows": px["mig_flows"],
+            "repartitions": px["reparts"].astype(jnp.float32),
+            # mean remote agents a shard actually needs (its halo), as a
+            # fraction of all remote agents — GAIA's clustering drives
+            # this down, and the sparse exchange realizes the saving on
+            # the wire
+            "halo_frac": halo_total / jnp.maximum(remote_slots, 1.0),
+            # exact per-step bytes of useful row payload exchanged
+            # (packed halo rows + admitted cross-device migrations +
+            # id-order reconstruction gathers); wire_flows is its per
+            # device-pair breakdown, priced by costmodel.wct_env
+            "bytes_on_wire": wire.sum().astype(jnp.float32),
+            "wire_flows": wire,
+            "shard_overflow": (overflow > 0).astype(jnp.float32),
+        }
+        if cfg.open_world:
+            # live population (post-arrival), mirroring engine.step
+            metrics["pop"] = px["all_valid"].astype(jnp.float32)
+        return dict(px, f=f, metrics=metrics)
+
+    halo_adds = (("cellC", "view_pos", "view_lp") if spec.grid is not None
+                 else ("pos_g", "lp_g")) + ("halo_overflow", "halo_n")
+    phases = [
+        ("migrate", ph_migrate,
+         ("wire", "reshard_overflow", "valid", "safe_gid", "n_valid",
+          "all_valid")),
+        ("mobility", ph_mobility,
+         ("sender",) if row_local_mobility(abm) else ("sender", "gid_all")),
+        ("halo_exchange", ph_halo, halo_adds),
+        ("proximity", ph_proximity, ("counts", "grid_overflow")),
+        ("accounting", ph_account,
+         ("safe_lp", "flows", "local", "total", "remote", "migs",
+          "n_evals", "mig_flows", "reparts")),
+    ]
+    if cfg.repartition_every > 0:
+        phases.append(("repartition", ph_repartition, ()))
+    if cfg.gaia_on:
+        phases.append(("heuristic", ph_heuristic, ()))
+    phases.append(("finalize", ph_finalize, ("metrics",)))
+    return phases
+
+
+def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
+    """Per-device body of one timestep (runs under shard_map). `mf` is
+    the dynamic Migration Factor (see engine.run_window). The body is
+    the fused composition of `_sharded_phases`; named scopes annotate
+    profiler timelines without adding ops."""
+    px = {"f": f, "k_move": k_move, "k_send": k_send, "t": t, "mf": mf}
+    for name, fn, _ in _sharded_phases(cfg, spec):
+        with jax.named_scope(f"step.{name}"):
+            px = fn(px)
+    return px["f"], px["metrics"]
 
 
 _FIELD_SPECS = {
@@ -817,6 +932,72 @@ def _batch_field_specs(spec: ShardSpec):
     every per-SE field's spec — the "lp" mesh axis keeps sharding the
     slot dimension, replicas ride along inside each shard."""
     return {k: P(None, *v) for k, v in _field_specs(spec).items()}
+
+
+# ---------------------------------------------------------------------------
+# per-phase trace execution (repro.obs.trace drives this)
+# ---------------------------------------------------------------------------
+
+#: phase-context keys that are per-device *scalars* inside the shard_map
+#: body; at the jit boundary they travel as (D,) arrays sharded P("lp")
+#: (the trace wrapper reshapes () <-> (1,) per device)
+_PER_DEV = frozenset({"reshard_overflow", "halo_overflow", "grid_overflow",
+                      "halo_n", "n_valid"})
+
+#: phase-context keys whose leading axis is the per-device slot (or
+#: view/cell) dimension — sharded P("lp") at the jit boundary
+_SHARDED_PX = frozenset({"valid", "safe_gid", "sender", "counts",
+                         "safe_lp", "cellC", "view_pos", "view_lp"})
+
+
+def _px_spec(key, cfg, spec: ShardSpec):
+    """PartitionSpec of one phase-context entry at the jit boundary.
+    Everything not explicitly sharded is replicated (psum'd counters,
+    all-gathered id-order arrays, the raw key data, t, mf, wire)."""
+    if key == "f":
+        return _field_specs(spec)
+    if key == "metrics":
+        return _metric_specs(cfg)
+    if key in _PER_DEV or key in _SHARDED_PX:
+        return P("lp")
+    return P()
+
+
+def _wrap_phase(fn, in_keys, out_keys, cfg, spec: ShardSpec, mesh: Mesh):
+    """Jit one phase as its own shard_map program over the full phase
+    context, so the trace executor can time it in isolation. Per-device
+    scalars cross the boundary as (1,)-per-device arrays."""
+    in_specs = {k: _px_spec(k, cfg, spec) for k in in_keys}
+    out_specs = {k: _px_spec(k, cfg, spec) for k in out_keys}
+
+    def inner(px):
+        px = {k: (v.reshape(()) if k in _PER_DEV else v)
+              for k, v in px.items()}
+        out = fn(px)
+        return {k: (out[k].reshape((1,)) if k in _PER_DEV else out[k])
+                for k in out_keys}
+
+    return jax.jit(shard_map(inner, mesh=mesh, in_specs=(in_specs,),
+                             out_specs=out_specs, check_rep=False))
+
+
+def sharded_trace_phases(cfg, spec: ShardSpec, mesh: Mesh):
+    """Ordered (name, jitted_fn) per-phase programs for the trace
+    executor: each phase of `_sharded_phases` wrapped as its own
+    jit(shard_map) over the accumulated phase context. Phase-split
+    execution reproduces the step's semantics but is a profiling
+    surface, not a bit-identity one — XLA fuses differently across the
+    cut points, so traced runs are not asserted byte-equal to the fused
+    scan (DESIGN.md §Observability)."""
+    keys = frozenset({"f", "k_move", "k_send", "t", "mf"})
+    wrapped = []
+    for name, fn, adds in _sharded_phases(cfg, spec):
+        out_keys = keys | set(adds)
+        wrapped.append((name, _wrap_phase(fn, sorted(keys),
+                                          sorted(out_keys), cfg, spec,
+                                          mesh)))
+        keys = out_keys
+    return wrapped
 
 
 def step_sharded(state, cfg, spec: ShardSpec, mesh: Mesh, mf=None):
@@ -978,8 +1159,8 @@ def _compiled_arrive_sharded(key_cfg):
 def depart_sharded(state, cfg, ids):
     """Vacate the slots of global ids `ids` (-1 = padding). Returns
     (state, found): the (B,) per-id located mask."""
-    from repro.core.engine import window_key_cfg
-    fn, spec = _compiled_depart_sharded(window_key_cfg(cfg))
+    from repro.core.engine import strip_obs, window_key_cfg
+    fn, spec = _compiled_depart_sharded(window_key_cfg(strip_obs(cfg)))
     fields = {k: state[k] for k in _field_specs(spec)}
     new_fields, found = fn(fields, jnp.asarray(ids, jnp.int32))
     return dict(new_fields, key=state["key"], t=state["t"]), found
@@ -990,8 +1171,8 @@ def arrive_sharded(state, cfg, ids, rows):
     of the devices owning rows["lp"]. Returns (state, admitted): the
     (B,) per-arrival admission mask — refused arrivals wrote nothing
     (see Engine.arrive for the loud path)."""
-    from repro.core.engine import window_key_cfg
-    fn, spec = _compiled_arrive_sharded(window_key_cfg(cfg))
+    from repro.core.engine import strip_obs, window_key_cfg
+    fn, spec = _compiled_arrive_sharded(window_key_cfg(strip_obs(cfg)))
     fields = {k: state[k] for k in _field_specs(spec)}
     pos = jnp.asarray(rows["pos"], jnp.float32)
     new_fields, adm = fn(
@@ -1015,16 +1196,51 @@ def _compiled_window_sharded(key_cfg, n_steps: int):
     spec = make_shard_spec(key_cfg)
     mesh = make_mesh(spec)
 
+    if not key_cfg.obs.enabled:
+        def fn(state, mf):
+            def body(s, _):
+                return step_sharded(s, key_cfg, spec, mesh, mf=mf)
+            return jax.lax.scan(body, state, None, length=n_steps)
+        return jax.jit(fn)
+
+    # telemetry on: same ring-drain design as engine._compiled_window,
+    # living at the jit level *outside* shard_map — the metrics the row
+    # reads are psum-replicated and the slot-major state is globally
+    # addressable here, so the callback executes once per wrap (not per
+    # device) under single-process SPMD
+    de = key_cfg.obs.drain_every
+    n_cols = len(obs_ledger.ledger_keys(key_cfg))
+
     def fn(state, mf):
-        def body(s, _):
-            return step_sharded(s, key_cfg, spec, mesh, mf=mf)
-        return jax.lax.scan(body, state, None, length=n_steps)
+        def body(carry, _):
+            s, ring = carry
+            s2, m = step_sharded(s, key_cfg, spec, mesh, mf=mf)
+            t = s["t"]
+            ring = ring.at[t % de].set(
+                obs_ledger.ledger_row(key_cfg, s2, m, t))
+            jax.lax.cond(
+                (t + 1) % de == 0,
+                lambda r, tt: jax.debug.callback(obs_runtime.on_block,
+                                                 r, tt, ordered=False),
+                lambda r, tt: None,
+                ring, t)
+            return (s2, ring), m
+        ring0 = jnp.full((de, n_cols), -1.0, jnp.float32)
+        (s, ring), series = jax.lax.scan(body, (state, ring0), None,
+                                         length=n_steps)
+        return s, ring, series
     return jax.jit(fn)
 
 
 def _scan_sharded(state, cfg, n_steps: int, mf=None):
     from repro.core.engine import window_key_cfg
     mf_val = jnp.float32(cfg.heuristic.mf if mf is None else mf)
+    if cfg.obs.enabled:
+        t0 = int(state["t"])
+        state, ring, series = _compiled_window_sharded(
+            window_key_cfg(cfg), n_steps)(state, mf_val)
+        obs_runtime.flush_tail(ring, t0, t0 + n_steps)
+        return state, series
     return _compiled_window_sharded(window_key_cfg(cfg), n_steps)(
         state, mf_val)
 
@@ -1079,9 +1295,11 @@ def _compiled_batch_sharded(key_cfg, n_steps: int):
 
 
 def _scan_batch_sharded(states, cfg, n_steps: int, mf=None):
-    from repro.core.engine import _mf_vector, window_key_cfg
+    # batched scans are un-instrumented (strip_obs): the ledger covers
+    # the single-replica resident paths
+    from repro.core.engine import _mf_vector, strip_obs, window_key_cfg
     n_rep = states["t"].shape[0]
-    return _compiled_batch_sharded(window_key_cfg(cfg), n_steps)(
+    return _compiled_batch_sharded(window_key_cfg(strip_obs(cfg)), n_steps)(
         states, _mf_vector(cfg, mf, n_rep))
 
 
