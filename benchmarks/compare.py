@@ -78,11 +78,16 @@ TRACKED = {
     },
     # note: exp6's own >=2-of-3 win-count gate is asserted by the bench
     # itself; tracking the per-scenario gains here (rather than the win
-    # count) keeps one consistent threshold per scenario
+    # count) keeps one consistent threshold per scenario. trace and
+    # epidemic are the workload families beyond pure mobility (fleet
+    # cells since the scenario-fleet PR): their gains are tracked the
+    # same way but carry no sign gate of their own
     "BENCH_scenarios.json": {
         "gate.tec_gain_by_scenario.hotspot": ("higher", REL_TOL),
         "gate.tec_gain_by_scenario.group": ("higher", REL_TOL),
         "gate.tec_gain_by_scenario.flock": ("higher", REL_TOL),
+        "gate.tec_gain_by_scenario.trace": ("higher", REL_TOL),
+        "gate.tec_gain_by_scenario.epidemic": ("higher", REL_TOL),
     },
     # exp7: the informed-baseline gain over random/static must not decay,
     # and GAIA's TEC relative to the best *static* backend must not

@@ -107,7 +107,7 @@ def main() -> int:
 
     from benchmarks import (exp1_speed, exp2_lps, exp3_range, exp4_scaling,
                             exp5_sharded, exp6_scenarios, exp7_partition,
-                            exp8_replicas, exp9_service, exp10_obs,
+                            exp8_replicas, exp9_service, exp10_obs, fleet,
                             tables23, gaia_moe_bench, roofline,
                             selftune_bench)
     # exp4..exp8 expose quick|full: paper-scale maps to their full sweep
@@ -120,6 +120,12 @@ def main() -> int:
         "exp4": lambda: exp4_scaling.main(qf),
         "exp5": lambda: exp5_sharded.main(qf),
         "exp6": lambda: exp6_scenarios.main(qf, rep),
+        # the fleet runs exp6's matrix (plus the partitioner/device
+        # axes) as subprocess cells and writes the same
+        # BENCH_scenarios.json — so it replaces exp6 when selected and
+        # is excluded from the run-everything default to avoid running
+        # the sweep twice
+        "fleet": lambda: fleet.main(qf, rep),
         "exp7": lambda: exp7_partition.main(qf, rep),
         "exp8": lambda: exp8_replicas.main(qf, rep),
         "exp9": lambda: exp9_service.main(qf),
@@ -129,7 +135,8 @@ def main() -> int:
         "selftune": lambda: selftune_bench.main(args.scale),
         "roofline": lambda: roofline.main(),
     }
-    only = [s for s in args.only.split(",") if s] or list(benches)
+    only = [s for s in args.only.split(",") if s] or \
+        [k for k in benches if k != "fleet"]
     failures = []
     for name in only:
         t0 = time.time()

@@ -18,6 +18,24 @@ simulation model", so the workloads must go beyond uniform RWP):
              toward the centroid/mean-heading of its 3x3 cell-list
              neighborhood (reusing the proximity grid geometry), plus
              noise. Clusters *emerge* instead of being imposed.
+  "trace"    trace replay: positions come frame-by-frame from a
+             registered GPS/taxi-style trace (repro.data.pipeline —
+             `register_trace`, `synthetic_trace`, `resample_trace`).
+             Step t replays frame t+1 (frame 0 is the initial state);
+             when the trace is shorter than the horizon,
+             `trace_policy` picks loop / hold-last / exact-or-raise.
+             Consumes no PRNG and is row-local, so the sharded engine
+             replays it gather-free and bit-identically.
+
+Orthogonally to *where SEs move*, `ABMConfig.workload` adds a model of
+*what they compute*: "epidemic" spreads an SI/SIS infection flag (the
+`epi` state field) over the proximity graph each step — susceptible
+SEs catch with p = 1-(1-beta)^exposure from in-range infectious
+senders, infectious SEs interact `epi_boost`x more often — so event
+load follows the infection wave instead of the density map. That is
+the dynamic-load regime (Kurve et al., Boulmier et al.) pure mobility
+cannot produce, and the reason GAIA's self-clustering is stressed by
+it.
 
 Every model is a pure function of (key, state) in global-SE-id order, so
 the sharded engine reproduces it bit-exactly wherever an SE is hosted
@@ -55,7 +73,17 @@ from repro.core import neighbors
 from repro.core import partition as part
 
 PROXIMITY_BACKENDS = ("dense", "grid", "pallas", "pallas_grid")
-MOBILITY_MODELS = ("rwp", "hotspot", "group", "flock")
+MOBILITY_MODELS = ("rwp", "hotspot", "group", "flock", "trace")
+WORKLOADS = ("none", "epidemic")
+TRACE_POLICIES = ("loop", "hold", "exact")
+
+#: PRNG salts of the epidemic workload's independent streams (fold_in
+#: off the step key, like the repartition/init salts — the epidemic
+#: consumes no draw any existing stream sees, so workload="none" runs
+#: stay bit-identical to pre-epidemic seeds)
+EPI_SEED_SALT = 0x390a
+EPI_INFECT_SALT = 0x3911
+EPI_RECOVER_SALT = 0x3912
 
 #: attractor ("hotspot") / leader ("group") speed relative to SE speed —
 #: slower than the SEs chasing them, so clusters stay coherent in motion
@@ -82,6 +110,18 @@ class ABMConfig:
     mobility: str = "rwp"  # see MOBILITY_MODELS
     n_groups: int = 8  # K attractors ("hotspot") / groups ("group")
     group_radius: float = 250.0  # cluster spatial scale (spaceunits)
+    # --- trace replay (mobility == "trace") -----------------------------
+    # the trace itself is data, not config: `trace_name` keys into the
+    # repro.data.pipeline registry so this dataclass stays hashable for
+    # the compiled-scan memo; frames become jit constants at trace time
+    trace_name: str = ""
+    trace_policy: str = "loop"  # see TRACE_POLICIES
+    # --- interacting workload (see module docstring) --------------------
+    workload: str = "none"  # see WORKLOADS
+    epi_beta: float = 0.3  # per-contact per-step infection probability
+    epi_gamma: float = 0.0  # per-step recovery probability (0=SI, >0=SIS)
+    epi_seed_frac: float = 0.02  # initially infectious fraction (a patch)
+    epi_boost: float = 4.0  # send-probability multiplier while infectious
     # --- initial SE -> LP map (core/partition.py registry) --------------
     partitioner: str = "random"  # see partition.PARTITION_BACKENDS
     # REMOVED (was a PR 1 boolean, deprecated since PR 1/PR 5): passing
@@ -123,6 +163,34 @@ class ABMConfig:
         if self.grid_capacity < 0 or self.mem_budget_mb < 0:
             raise ValueError(
                 "grid_capacity and mem_budget_mb must be >= 0 (0 = auto)")
+        if self.mobility == "trace" and not self.trace_name:
+            raise ValueError(
+                "mobility='trace' needs trace_name — a key registered "
+                "via repro.data.pipeline.register_trace")
+        if self.trace_policy not in TRACE_POLICIES:
+            raise ValueError(
+                f"trace_policy={self.trace_policy!r} not in "
+                f"{TRACE_POLICIES}")
+        if self.workload not in WORKLOADS:
+            raise ValueError(
+                f"workload={self.workload!r} not in {WORKLOADS}")
+        if self.workload == "epidemic":
+            if self.proximity_backend not in ("dense", "grid"):
+                raise ValueError(
+                    "workload='epidemic' implements its exposure sweep "
+                    "on the dense/grid proximity backends only")
+            for nm, v in (("epi_beta", self.epi_beta),
+                          ("epi_gamma", self.epi_gamma)):
+                if not 0.0 <= v <= 1.0:
+                    raise ValueError(f"{nm}={v} must be a probability")
+            if not 0.0 < self.epi_seed_frac <= 1.0:
+                raise ValueError(
+                    f"epi_seed_frac={self.epi_seed_frac} must be in "
+                    "(0, 1]")
+            if self.epi_boost < 1.0:
+                raise ValueError(
+                    f"epi_boost={self.epi_boost} must be >= 1 (1 = no "
+                    "load shift)")
 
     def resolved_backend(self) -> str:
         """The proximity backend (kept for callers of the historical
@@ -148,7 +216,15 @@ class ABMConfig:
                                         capacity=self.grid_capacity)
         if spec is None or self.grid_capacity > 0:
             return spec
-        if self.mobility != "rwp":
+        if self.mobility == "trace":
+            # the frames are known in full, so the density bound is not
+            # a heuristic: the exact peak cell occupancy over every
+            # frame (positions each step ARE a frame, so nothing can
+            # exceed it)
+            cap = trace_frames(self).peak_cell_occupancy(spec.ncell)
+            spec = dataclasses.replace(spec,
+                                       capacity=max(spec.capacity, cap))
+        elif self.mobility != "rwp":
             radius = {"hotspot": 0.5 * self.group_radius,
                       "group": self.group_radius,
                       "flock": spec.cell}[self.mobility]
@@ -167,9 +243,45 @@ class ABMConfig:
 
 def mobility_globals(cfg: ABMConfig) -> int:
     """Rows of the replicated global mobility state `mob_g` (attractors
-    for "hotspot", leaders for "group"; 1 inert row otherwise so shapes
-    stay static)."""
+    for "hotspot", leaders for "group"; 1 row otherwise so shapes stay
+    static — "trace" rides its frame counter in that row's [0, 0])."""
     return cfg.n_groups if cfg.mobility in ("hotspot", "group") else 1
+
+
+def trace_frames(cfg: ABMConfig):
+    """Resolve cfg.trace_name to its registered Trace, validated against
+    the config (exact-or-loud: a trace of the wrong shape or world size
+    would replay garbage silently)."""
+    from repro.data import pipeline as dpipe
+    tr = dpipe.get_trace(cfg.trace_name)
+    if tr.n_se != cfg.n_se:
+        raise ValueError(
+            f"trace {cfg.trace_name!r} holds {tr.n_se} SEs but "
+            f"ABMConfig.n_se={cfg.n_se}")
+    if abs(tr.area - cfg.area) > 1e-6 * max(cfg.area, 1.0):
+        raise ValueError(
+            f"trace {cfg.trace_name!r} lives on an area={tr.area} torus "
+            f"but ABMConfig.area={cfg.area}")
+    return tr
+
+
+def check_trace_horizon(cfg: ABMConfig, t0: int, n_steps: int) -> None:
+    """Host-side guard for trace_policy='exact': every step of the
+    window [t0, t0 + n_steps) must read a real frame (step t replays
+    frame t+1). Called by the engine runners before tracing — raising
+    here beats silently holding the last frame, which is exactly what
+    'exact' exists to forbid."""
+    if n_steps <= 0 or cfg.mobility != "trace" \
+            or cfg.trace_policy != "exact":
+        return
+    T = trace_frames(cfg).timesteps
+    need = t0 + n_steps  # the last step of the window reads this frame
+    if need > T - 1:
+        raise ValueError(
+            f"trace {cfg.trace_name!r} has {T} frames but steps "
+            f"[{t0}, {t0 + n_steps}) need frame {need} under "
+            "trace_policy='exact'; shorten the horizon, extend the "
+            "trace, or pick trace_policy='loop'/'hold'")
 
 
 def init_abm(key, cfg: ABMConfig):
@@ -213,10 +325,16 @@ def init_abm(key, cfg: ABMConfig):
         kh = jax.random.fold_in(key, 0x6b0c)
         theta = jax.random.uniform(kh, (n,), maxval=2.0 * jnp.pi)
         mob = jnp.stack([jnp.cos(theta), jnp.sin(theta)], axis=1)
+    elif cfg.mobility == "trace":
+        # k1/k2 are drawn (and discarded) above so the split pattern
+        # stays uniform across models; frame 0 is the initial layout
+        pos = jnp.asarray(trace_frames(cfg).frames[0])
     lp = part.partition(k3, pos, jnp.ones((n,), jnp.float32),
                         part.from_abm(cfg))
+    epi = epidemic_init(key, pos, cfg) if cfg.workload == "epidemic" \
+        else jnp.zeros((n,), jnp.int32)
     return {"pos": pos, "waypoint": wp, "lp": lp,
-            "mob": mob.astype(jnp.float32), "mob_g": mob_g}
+            "mob": mob.astype(jnp.float32), "mob_g": mob_g, "epi": epi}
 
 
 def toroidal_delta(a, b, area):
@@ -310,7 +428,7 @@ def row_local_mobility(cfg: ABMConfig) -> bool:
     then moves each shard's rows without any position gather; "flock"
     reads global cell aggregates (a float scatter-add whose reduction
     order must match the oracle), so it stays gather-reconstruct."""
-    return cfg.mobility in ("rwp", "hotspot", "group")
+    return cfg.mobility in ("rwp", "hotspot", "group", "trace")
 
 
 def mobility_row_draws(key, n: int, mob_g, cfg: ABMConfig):
@@ -322,9 +440,20 @@ def mobility_row_draws(key, n: int, mob_g, cfg: ABMConfig):
 
     Returns (draws, mob_g): draws is {"wp"} for rwp, {"anchor",
     "noise"} for hotspot/group (anchor = the SE's attractor position /
-    its group leader's position, noise = the per-step jitter)."""
+    its group leader's position, noise = the per-step jitter), {"tp"}
+    for trace (the next frame, PRNG-free — the frame counter rides
+    mob_g[0, 0], a float32 exact for any practical horizon)."""
     if cfg.mobility == "rwp":
         return {"wp": rwp_draws(key, n, cfg)}, mob_g
+    if cfg.mobility == "trace":
+        frames = jnp.asarray(trace_frames(cfg).frames)
+        T = frames.shape[0]
+        nxt = mob_g[0, 0].astype(jnp.int32) + 1
+        if cfg.trace_policy == "loop":
+            idx = nxt % T
+        else:  # "hold"; "exact" windows are pre-checked host-side
+            idx = jnp.minimum(nxt, T - 1)
+        return {"tp": frames[idx]}, mob_g.at[0, 0].add(1.0)
     k_glob = jax.random.fold_in(key, 1)
     k_noise = jax.random.fold_in(key, 2)
     mob_g = _globals_step(k_glob, mob_g, cfg)
@@ -341,6 +470,8 @@ def mobility_row_apply(pos, waypoint, mob, draws, cfg: ABMConfig):
     offset)."""
     if cfg.mobility == "rwp":
         return rwp_apply(pos, waypoint, draws["wp"], cfg)
+    if cfg.mobility == "trace":
+        return draws["tp"], waypoint  # replay is the whole move
     if cfg.mobility == "hotspot":
         return _hotspot_apply(pos, draws["anchor"], draws["noise"],
                               cfg), waypoint
@@ -354,7 +485,11 @@ def max_step_displacement(cfg: ABMConfig) -> float:
     parallel/lp_shard.py). rwp/flock move exactly `speed` along a unit
     direction; hotspot adds up to 0.5*speed of per-axis noise on top of
     a speed-capped pull, group up to 0.25*speed on a speed-capped
-    chase."""
+    chase; trace measures its exact frame-to-frame bound (the `loop`
+    policy additionally pays for the trace's wrap-seam jump)."""
+    if cfg.mobility == "trace":
+        return trace_frames(cfg).max_step_displacement(
+            include_seam=cfg.trace_policy == "loop")
     return {"rwp": cfg.speed, "hotspot": 1.5 * cfg.speed,
             "group": 1.25 * cfg.speed, "flock": cfg.speed}[cfg.mobility]
 
@@ -487,3 +622,103 @@ def interaction_counts_overflow(pos, lp, sender_mask, cfg: ABMConfig,
 def interaction_counts(pos, lp, sender_mask, cfg: ABMConfig):
     """`interaction_counts_overflow` without the alarm (same contract)."""
     return interaction_counts_overflow(pos, lp, sender_mask, cfg)[0]
+
+
+# ---------------------------------------------------------------------------
+# Epidemic/gossip diffusion workload (ABMConfig.workload == "epidemic")
+# ---------------------------------------------------------------------------
+# State is one int32 flag per SE (`epi`: 0 susceptible, 1 infectious)
+# that travels with the row through migrations and resharding. The
+# update factors exactly like the row-local mobility models do —
+# full-size id-order draw arrays x an elementwise per-row transition —
+# so the sharded engine gathers each shard's draw rows by SE id and
+# stays bit-identical to the oracle wherever a row is hosted.
+
+
+def epidemic_init(key, pos, cfg: ABMConfig):
+    """Initial infection flags: the k = max(1, round(epi_seed_frac*n))
+    SEs nearest (torus metric) to one key-drawn origin start
+    infectious — a spatial patch, not a uniform sprinkle, so the wave
+    has somewhere to travel *from* and load genuinely shifts across
+    LPs as it spreads. Deterministic in (key, pos): every device
+    computes the identical flags."""
+    n = pos.shape[0]
+    k = max(1, int(round(cfg.epi_seed_frac * n)))
+    origin = jax.random.uniform(jax.random.fold_in(key, EPI_SEED_SALT),
+                                (2,), maxval=cfg.area)
+    d = toroidal_delta(pos, origin[None, :], cfg.area)
+    d2 = d[:, 0] ** 2 + d[:, 1] ** 2
+    thresh = jnp.sort(d2)[k - 1]
+    return (d2 <= thresh).astype(jnp.int32)
+
+
+def epidemic_send_prob(epi, cfg: ABMConfig):
+    """Per-SE interaction probability: infectious SEs send
+    `epi_boost`x more often (capped at 1). This is the load-shift
+    mechanism — event weight follows the infection wave, not the
+    density map, which is what stresses self-clustering beyond any
+    pure-mobility scenario."""
+    p = jnp.float32(cfg.p_interact)
+    hot = jnp.minimum(p * jnp.float32(cfg.epi_boost), jnp.float32(1.0))
+    return jnp.where(epi > 0, hot, p)
+
+
+def epidemic_draws(key, n: int, cfg: ABMConfig):
+    """Full-size (n,) id-order uniforms for the infection (and, when
+    epi_gamma > 0, recovery) trials — same device-independence
+    contract as `mobility_row_draws`. Streams are salted off the step
+    key, so no existing draw moves."""
+    d = {"u_inf": jax.random.uniform(
+        jax.random.fold_in(key, EPI_INFECT_SALT), (n,))}
+    if cfg.epi_gamma > 0.0:
+        d["u_rec"] = jax.random.uniform(
+            jax.random.fold_in(key, EPI_RECOVER_SALT), (n,))
+    return d
+
+
+def epidemic_row_update(epi, exposure, draws, cfg: ABMConfig):
+    """Elementwise SI/SIS transition for any row subset: a susceptible
+    row with `exposure` in-range infectious senders catches with
+    p = 1 - (1-beta)^exposure (independent per-contact trials); with
+    SIS (epi_gamma > 0) an infectious row recovers to susceptible with
+    gamma. Zero exposure gives p = 0, so dead/padded rows (exposure 0
+    by construction) never transition."""
+    p_inf = 1.0 - jnp.power(jnp.float32(1.0 - cfg.epi_beta),
+                            exposure.astype(jnp.float32))
+    catch = (epi == 0) & (draws["u_inf"] < p_inf)
+    out = jnp.where(catch, 1, epi)
+    if cfg.epi_gamma > 0.0:
+        rec = (epi > 0) & (draws["u_rec"] < jnp.float32(cfg.epi_gamma))
+        out = jnp.where(rec, 0, out)
+    return out
+
+
+def epidemic_exposure_overflow(pos, labels, query_mask, cfg: ABMConfig,
+                               valid=None):
+    """exposure[i] = #{j != i in interaction_range with labels[j] == 1}
+    for rows with `query_mask` (zeros elsewhere), plus the grid
+    overflow alarm. `labels` carries 1 on the infectious rows that
+    actually sent this step, 0 on other live rows, and -1 on dead rows
+    (one_hot drops them from the dense path; `valid` keeps them out of
+    the grid build).
+
+    This is the proximity phase's candidate walk with a 2-class label
+    array instead of the LP map — grid and dense stay bit-identical by
+    the same argument, and the one extra sweep is the entire cost of
+    the workload."""
+    backend = cfg.resolved_backend()
+    spec = cfg.grid_spec() if backend == "grid" else None
+    n = pos.shape[0]
+    if spec is not None:
+        grid = neighbors.build_grid(pos, spec, valid=valid,
+                                    with_table=False)
+        order = grid["order"]
+        out = neighbors.rows_grid_counts(
+            pos, labels, 2, cfg.area, cfg.interaction_range, spec, grid,
+            pos[order], order.astype(jnp.int32), query_mask[order],
+            neighbors.chunk_entries(cfg.mem_budget_mb))
+        counts = jnp.zeros((n, 2), jnp.int32).at[order].set(out)
+        return counts[:, 1], grid["overflow"]
+    counts = neighbors.dense_lp_counts(pos, labels, query_mask, 2,
+                                       cfg.area, cfg.interaction_range)
+    return counts[:, 1], jnp.bool_(False)

@@ -41,8 +41,11 @@ import numpy as np
 
 from repro.core import balance as bal
 from repro.core import partition as part
-from repro.core.abm import (ABMConfig, init_abm,
-                            interaction_counts_overflow, mobility_step)
+from repro.core.abm import (ABMConfig, check_trace_horizon,
+                            epidemic_draws, epidemic_exposure_overflow,
+                            epidemic_row_update, epidemic_send_prob,
+                            init_abm, interaction_counts_overflow,
+                            mobility_step)
 from repro.core.costmodel import ExecutionEnvironment
 from repro.core.heuristics import HeuristicConfig
 from repro.core import heuristics as heu
@@ -256,7 +259,17 @@ def step_phases(cfg: EngineConfig):
             pos = jnp.where(valid[:, None], pos, st["pos"])
             wp = jnp.where(valid[:, None], wp, st["waypoint"])
             mob = jnp.where(valid[:, None], mob, st["mob"])
-        sender = jax.random.bernoulli(px["k_send"], cfg.abm.p_interact, (n,))
+        if cfg.abm.workload == "epidemic":
+            # infectious SEs (last step's flags — this step's infections
+            # are decided by ph_workload *from* these senders) interact
+            # epi_boost x more often: the draw becomes an explicit
+            # uniform against a per-SE probability. Static branch: the
+            # non-epidemic path keeps the exact historical bernoulli.
+            sender = jax.random.uniform(px["k_send"], (n,)) \
+                < epidemic_send_prob(st["epi"], cfg.abm)
+        else:
+            sender = jax.random.bernoulli(px["k_send"],
+                                          cfg.abm.p_interact, (n,))
         if ow:
             sender = valid & sender
         return dict(px, pos=pos, wp=wp, mob=mob, mob_g=mob_g, sender=sender)
@@ -266,6 +279,28 @@ def step_phases(cfg: EngineConfig):
             px["pos"], px["lp"], px["sender"], cfg.abm,
             valid=px["valid"])  # (N, L), () bool
         return dict(px, counts=counts, grid_ovf=grid_ovf)
+
+    def ph_workload(px):
+        # epidemic diffusion over the proximity graph: susceptible SEs
+        # count the in-range infectious rows that sent this step (one
+        # more candidate walk with a 2-class label array) and run the
+        # SI/SIS transition on full-size id-order draws — the same
+        # draws x elementwise-apply factoring as row-local mobility,
+        # so the sharded mirror is bit-identical by construction
+        st, valid = px["st"], px["valid"]
+        epi = st["epi"]
+        eis = (epi > 0) & px["sender"]
+        labels = eis.astype(jnp.int32)
+        if ow:  # dead rows drop out of the label sweep entirely
+            labels = jnp.where(valid, labels, -1)
+        qmask = (epi == 0) & valid if ow else (epi == 0)
+        exposure, ovf = epidemic_exposure_overflow(
+            px["pos"], labels, qmask, cfg.abm, valid=valid)
+        draws = epidemic_draws(px["k_move"], n, cfg.abm)
+        epi = epidemic_row_update(epi, exposure, draws, cfg.abm)
+        infected = ((epi > 0) & valid if ow else (epi > 0)).sum()
+        return dict(px, epi=epi, infected=infected,
+                    grid_ovf=px["grid_ovf"] | ovf)
 
     def ph_account(px):
         # 3. communication accounting: the per-pair flow matrix (src LP
@@ -385,10 +420,15 @@ def step_phases(cfg: EngineConfig):
             # live population after this step's migration completions —
             # the churn service's occupancy signal (-> mean_pop)
             metrics["pop"] = px["valid"].sum().astype(jnp.float32)
+        if cfg.abm.workload == "epidemic":
+            new_state["epi"] = px["epi"]
+            metrics["infected"] = px["infected"].astype(jnp.float32)
         return dict(px, new_state=new_state, metrics=metrics)
 
     phases = [("migrate", ph_migrate), ("mobility", ph_mobility),
               ("proximity", ph_proximity), ("accounting", ph_account)]
+    if cfg.abm.workload == "epidemic":
+        phases.insert(3, ("workload", ph_workload))
     if cfg.repartition_every > 0:
         phases.append(("repartition", ph_repartition))
     if cfg.gaia_on:
@@ -455,6 +495,9 @@ def oracle_arrive(state, ids, rows):
         mode="drop")
     st["lp"] = st["lp"].at[tgt].set(
         jnp.asarray(rows["lp"], jnp.int32), mode="drop")
+    st["epi"] = st["epi"].at[tgt].set(
+        jnp.asarray(rows.get("epi", jnp.zeros(pos.shape[:1], jnp.int32)),
+                    jnp.int32), mode="drop")
     return _clear_slot_history(st, tgt)
 
 
@@ -466,6 +509,7 @@ def oracle_depart(state, ids):
     tgt = jnp.where(ids >= 0, ids, n)
     st = dict(state)
     st["lp"] = st["lp"].at[tgt].set(-1, mode="drop")
+    st["epi"] = st["epi"].at[tgt].set(0, mode="drop")
     return _clear_slot_history(st, tgt)
 
 
@@ -480,6 +524,9 @@ def series_counters(series) -> dict:
     counters["mean_lcr"] = float(series["lcr"].mean())
     if "pop" in series:
         counters["mean_pop"] = float(series["pop"].mean())
+    if "infected" in series:
+        counters["mean_infected"] = float(series["infected"].mean())
+        counters["final_infected"] = float(series["infected"][-1])
     for k in ("grid_overflow", "repartitions"):
         if k in series:
             counters[k] = float(series[k].sum())
@@ -488,6 +535,17 @@ def series_counters(series) -> dict:
             counters[k] = np.asarray(series[k]).sum(
                 axis=0, dtype=np.int64).tolist()
     return counters
+
+
+def _trace_guard(state, cfg: EngineConfig, n_steps: int) -> None:
+    """Window-runner front door of `abm.check_trace_horizon`: reads the
+    resident state's step counter (lockstep across replicas and
+    replicated across shards, so any element is THE clock) and
+    validates the window before anything is traced."""
+    if cfg.abm.mobility != "trace" or cfg.abm.trace_policy != "exact":
+        return
+    t0 = int(np.asarray(jax.device_get(state["t"])).reshape(-1)[0])
+    check_trace_horizon(cfg.abm, t0, n_steps)
 
 
 def window_key_cfg(cfg: EngineConfig) -> EngineConfig:
@@ -607,6 +665,7 @@ def _run_window(state, cfg: EngineConfig, n_steps: int, mf=None):
     dynamic argument: no recompilation between windows). Sharded states
     (from a sharded init_engine) advance through the sharded step and
     stay slot-major."""
+    _trace_guard(state, cfg, n_steps)
     if cfg.sharding == "lp_device":
         from repro.parallel import lp_shard
         return lp_shard.run_window_sharded(state, cfg, n_steps, mf=mf)
@@ -626,6 +685,7 @@ def _run(key, cfg: EngineConfig):
     aggregate counters). With cfg.sharding="lp_device" the run executes
     LP-per-device on the JAX mesh (bit-identical result; extra
     halo_frac/shard_overflow metrics)."""
+    check_trace_horizon(cfg.abm, 0, cfg.timesteps)
     if cfg.sharding == "lp_device":
         from repro.parallel import lp_shard
         return lp_shard.run_sharded(key, cfg)
@@ -718,6 +778,7 @@ def _run_window_batch(states, cfg: EngineConfig, n_steps: int, mf=None):
     §5.5 tuner descends each replica's MF independently, so MF rides as
     a per-replica dynamic argument of the one compiled scan. Returns
     (states, [per-replica counters])."""
+    _trace_guard(states, cfg, n_steps)
     if cfg.sharding == "lp_device":
         from repro.parallel import lp_shard
         return lp_shard.run_window_batch_sharded(states, cfg, n_steps,
@@ -744,6 +805,7 @@ def _run_batch(cfg: EngineConfig, seeds):
     cfg.sharding="lp_device" the batch axis is vmapped *inside* each
     shard (parallel/lp_shard.py), so sharded replicas stay bit-identical
     to oracle replicas per seed."""
+    check_trace_horizon(cfg.abm, 0, cfg.timesteps)
     if cfg.sharding == "lp_device":
         from repro.parallel import lp_shard
         return lp_shard.run_batch_sharded(cfg, seeds)

@@ -280,15 +280,39 @@ def _fuzzy_memberships(pos, seeds, cfg: PartitionConfig):
 def _voronoi(key, pos, weights, cfg: PartitionConfig, prev=None):
     # Toroidal Voronoi seeds relaxed by fuzzy c-means (Alrabeei et al.):
     # soft memberships instead of Lloyd's hard assignment, circular-mean
-    # seed update weighted by u^m * weight. Seeds init uniformly from
-    # the key (permutation-equivariance, like _kmeans). The final map is
-    # the capacity-constrained admission by descending membership; with
-    # `prev`, the previous LP's membership gets the hysteresis bonus, so
-    # only clear wins migrate (see the module docstring).
+    # seed update weighted by u^m * weight. Cold seeds init uniformly
+    # from the key (permutation-equivariance, like _kmeans). The final
+    # map is the capacity-constrained admission by descending
+    # membership; with `prev`, the previous LP's membership gets the
+    # hysteresis bonus, so only clear wins migrate (see the module
+    # docstring).
+    #
+    # Seed carry-over: with `prev`, the tessellation warm-starts from
+    # the previous map's per-LP circular-mean centroids instead of
+    # fresh key draws — consecutive repartitions then relax the *same*
+    # tessellation rather than re-deriving an unrelated one, so seeds
+    # (and with them the cell boundaries) drift with the model instead
+    # of jumping, and repartition churn drops beyond what the
+    # membership bonus alone suppresses (tests/test_partition.py::
+    # test_voronoi_seed_carry_reduces_churn). An LP with no weight in
+    # `prev` falls back to its key-drawn seed. Both execution layers
+    # pass byte-identical `prev`, so the warm start preserves the
+    # oracle <-> sharded bit-identity contract.
     L = cfg.n_lp
     caps = capacity_bounds(cfg, weights.sum())
     seeds = jax.random.uniform(key, (L, 2), maxval=cfg.area)
     two_pi = 2.0 * jnp.pi
+    if prev is not None:
+        prev = jnp.asarray(prev)
+        hold = (prev >= 0) & (prev < L)  # unassigned rows carry nothing
+        onehot = jax.nn.one_hot(jnp.clip(prev, 0, L - 1), L,
+                                dtype=jnp.float32) \
+            * jnp.where(hold, weights, 0.0)[:, None]  # (N, L)
+        ang = pos * (two_pi / cfg.area)
+        s = onehot.T @ jnp.sin(ang)  # (L, 2)
+        c = onehot.T @ jnp.cos(ang)
+        warm = (jnp.arctan2(s, c) % two_pi) * (cfg.area / two_pi)
+        seeds = jnp.where(onehot.sum(0)[:, None] > 0, warm, seeds)
 
     def relax(_, seeds):
         um = (_fuzzy_memberships(pos, seeds, cfg) ** cfg.fuzzy_m) \

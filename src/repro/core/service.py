@@ -235,7 +235,8 @@ class Engine:
     def arrive(self, rows) -> list:
         """Admit a batch of SEs. `rows["pos"]` (B, 2) is required;
         optional "lp" (default: the x-stripe LP of the position),
-        "waypoint", "mob". Returns the B assigned SE ids. Raises
+        "waypoint", "mob", "epi" (infection flag, default susceptible).
+        Returns the B assigned SE ids. Raises
         RuntimeError, state untouched, if the universe has fewer than B
         free slots; on the sharded layer a destination device without a
         free slot raises too (naming shard_capacity), with the admitted
@@ -271,6 +272,10 @@ class Engine:
                 buf = np.zeros((bp, 2), np.float32)
                 buf[:b] = np.asarray(rows[k], np.float32).reshape(-1, 2)
                 prows[k] = buf
+        if "epi" in rows:
+            buf = np.zeros((bp,), np.int32)
+            buf[:b] = np.asarray(rows["epi"], np.int32).reshape(-1)
+            prows["epi"] = buf
         if self.cfg.sharding == "lp_device":
             from repro.parallel import lp_shard
             self.state, adm = lp_shard.arrive_sharded(

@@ -79,28 +79,40 @@ from repro.core import balance as bal
 from repro.core import heuristics as heu
 from repro.core import neighbors
 from repro.core import partition as part
-from repro.core.abm import (init_abm, max_step_displacement,
-                            mobility_row_apply, mobility_row_draws,
-                            mobility_step, row_local_mobility)
+from repro.core.abm import (epidemic_draws, epidemic_row_update,
+                            epidemic_send_prob, init_abm,
+                            max_step_displacement, mobility_row_apply,
+                            mobility_row_draws, mobility_step,
+                            row_local_mobility)
 from repro.core.engine import COMPILED_CACHE_SIZE
 from repro.obs import ledger as obs_ledger
 from repro.obs import runtime as obs_runtime
 
 #: per-SE state rows that migrate with an SE between shards ("mob" is
-#: the per-SE mobility state: member offset / heading — full-row packed)
+#: the per-SE mobility state: member offset / heading; "epi" the
+#: workload infection flag — full-row packed)
 _ROW_FIELDS = ("pos", "waypoint", "mob", "last_mig", "ptr", "since_eval",
-               "gid")
+               "epi", "gid")
 
 #: bytes per halo row on the wire: pos (2 x f32) + lp (i32) — all a
 #: receiver needs to resolve proximity + LP histograms against the row
 HALO_ROW_BYTES = 12
 
 
-def _mig_row_bytes(window: int, n_lp: int) -> int:
-    """Bytes per migrated SE row: the 7 _ROW_FIELDS (pos/waypoint/mob
-    2 x f32 each, last_mig/ptr/since_eval/gid i32) + dst i32 + the
-    (window, n_lp) i32 heuristic ring rows that travel with the SE."""
-    return 44 + 4 * window * n_lp
+def _halo_row_bytes(cfg) -> int:
+    """Bytes per halo row for this config: the epidemic workload ships
+    one extra i32 per row (the infectious-sender label the receiver's
+    exposure sweep reads)."""
+    return HALO_ROW_BYTES + (4 if cfg.abm.workload == "epidemic" else 0)
+
+
+def _mig_row_bytes(window: int, n_lp: int, epidemic: bool = False) -> int:
+    """Bytes per migrated SE row: the 8 _ROW_FIELDS (pos/waypoint/mob
+    2 x f32 each, last_mig/ptr/since_eval/epi/gid i32) + dst i32 + the
+    (window, n_lp) i32 heuristic ring rows that travel with the SE. The
+    `epi` flag only counts for epidemic runs — it is carried (zero)
+    either way, but a ragged transport would elide a constant column."""
+    return 44 + (4 if epidemic else 0) + 4 * window * n_lp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,7 +191,8 @@ def make_shard_spec(cfg) -> ShardSpec:
             # raises shard_overflow, never drops SEs.
             w = cfg.heuristic.kappa if cfg.heuristic.kind == 1 \
                 else cfg.heuristic.omega
-            rows = (budget_mb << 18) // (d * _mig_row_bytes(w, L))
+            rows = (budget_mb << 18) // (d * _mig_row_bytes(
+                w, L, abm.workload == "epidemic"))
             mig_cap = min(mig_cap, max(16, rows))
     grid = None
     if backend == "grid":
@@ -200,7 +213,7 @@ def make_shard_spec(cfg) -> ShardSpec:
         # peer needing more rows than this from one device trips
         # shard_overflow (exact-or-loud), and GAIA's clustering is what
         # keeps real needs far below the worst case.
-        rows = (budget_mb << 18) // (2 * d * HALO_ROW_BYTES)
+        rows = (budget_mb << 18) // (2 * d * _halo_row_bytes(cfg))
         halo_cap = min(cap, max(32, rows))
     else:
         # a peer can need every row a device owns (e.g. the random
@@ -304,6 +317,7 @@ def init_sharded(key, cfg, spec: ShardSpec):
         "mob": jnp.zeros((S, 2), jnp.float32).at[slot_of_se].set(st["mob"]),
         "mob_g": st["mob_g"],  # global mobility rows: replicated
         "lp": scat(st["lp"], -1),
+        "epi": scat(st["epi"], 0),
         "gid": scat(jnp.arange(n, dtype=jnp.int32), -1),
         "pending_dst": jnp.full((S,), -1, jnp.int32),
         "pending_eta": jnp.full((S,), -1, jnp.int32),
@@ -352,6 +366,7 @@ def unshard_state(state, spec: ShardSpec):
         "mob": scat(state["mob"]),
         "mob_g": state["mob_g"],
         "lp": scat(state["lp"]),
+        "epi": scat(state["epi"]),
         "pending_dst": scat(state["pending_dst"]),
         "pending_eta": scat(state["pending_eta"]),
         "ring": ring,
@@ -439,7 +454,9 @@ def _apply_arrivals(f, t, cfg, spec: ShardSpec, me):
     crossed = admitted & (g_dev != src_dev)
     mig_wire = jnp.zeros((spec.n_dev, spec.n_dev), jnp.int32).at[
         src_dev, g_dev].add(crossed.astype(jnp.int32)
-                            * _mig_row_bytes(f["ring"].shape[0], spec.n_lp))
+                            * _mig_row_bytes(
+                                f["ring"].shape[0], spec.n_lp,
+                                cfg.abm.workload == "epidemic"))
 
     # vacate exactly the admitted leavers (deferred rows keep slot +
     # pending state); their ring rows go stale rather than zeroed —
@@ -565,15 +582,32 @@ def _sharded_phases(cfg, spec: ShardSpec):
             f["mob"] = jnp.where(valid[:, None], mob_n[safe_gid], f["mob"])
             f["mob_g"] = mob_g
             out["gid_all"] = gid_all  # shared by the repartition hook
-        sender = valid & jax.random.bernoulli(
-            k_send, abm.p_interact, (n,))[safe_gid]
+        if abm.workload == "epidemic":
+            # mirror of engine.ph_mobility's boosted sender draw: the
+            # full-size id-order uniforms are gathered by SE id, the
+            # per-row threshold reads the slot's own infection flag —
+            # same randomness, same comparison, wherever the row lives
+            u = jax.random.uniform(k_send, (n,))[safe_gid]
+            sender = valid & (u < epidemic_send_prob(f["epi"], abm))
+        else:
+            sender = valid & jax.random.bernoulli(
+                k_send, abm.p_interact, (n,))[safe_gid]
         out.update(f=f, sender=sender)
         return out
 
     def ph_halo(px):
-        # 3. halo exchange: assemble the local proximity view
+        # 3. halo exchange: assemble the local proximity view. Epidemic
+        # runs ship one extra label per row — 1 on infectious rows that
+        # sent this step, 0 on other live rows, -1 on padding — so the
+        # receiver's exposure sweep (ph_workload) reads the same labels
+        # the oracle builds in id order.
         me = jax.lax.axis_index("lp")
         f, valid, wire = px["f"], px["valid"], px["wire"]
+        epidemic = abm.workload == "epidemic"
+        if epidemic:
+            own_labels = jnp.where(
+                valid, ((f["epi"] > 0) & px["sender"]).astype(jnp.int32),
+                -1)
         halo_overflow = jnp.bool_(False)
         halo_n = jnp.int32(0)
         if spec.grid is not None:
@@ -603,10 +637,17 @@ def _sharded_phases(cfg, spec: ShardSpec):
                 view_pos = jnp.concatenate([f["pos"],
                                             recv_pos.reshape(D * hc, 2)])
                 view_lp = jnp.concatenate([f["lp"], recv_lp.reshape(D * hc)])
+                if epidemic:
+                    send_eis = jnp.where(is_row, own_labels[order], -1)
+                    recv_eis = jax.lax.all_to_all(
+                        send_eis, "lp", split_axis=0, concat_axis=0,
+                        tiled=True)
+                    view_eis = jnp.concatenate(
+                        [own_labels, recv_eis.reshape(D * hc)])
                 packed = jnp.minimum(cnt, hc)
                 wire = wire + jax.lax.psum(
                     jnp.zeros((D, D), jnp.int32).at[me].set(
-                        packed * HALO_ROW_BYTES), "lp")
+                        packed * _halo_row_bytes(cfg)), "lp")
                 # exact halo (the pre-existing halo_frac semantics):
                 # received rows inside this shard's true 3x3 need *now*.
                 # Exchange soundness guarantees every such row was
@@ -622,9 +663,14 @@ def _sharded_phases(cfg, spec: ShardSpec):
                 halo_n = ((recv_lp.reshape(-1) >= 0) & exact[cellR]).sum()
             else:
                 view_pos, view_lp = f["pos"], f["lp"]
-            return dict(px, wire=wire, cellC=cellC, view_pos=view_pos,
-                        view_lp=view_lp, halo_overflow=halo_overflow,
-                        halo_n=halo_n)
+                if epidemic:
+                    view_eis = own_labels
+            out = dict(px, wire=wire, cellC=cellC, view_pos=view_pos,
+                       view_lp=view_lp, halo_overflow=halo_overflow,
+                       halo_n=halo_n)
+            if epidemic:
+                out["view_eis"] = view_eis
+            return out
         # dense fallback (world too small to tessellate): the original
         # full-gather transport — every position/LP to every device
         pos_g = jax.lax.all_gather(f["pos"], "lp", axis=0, tiled=True)
@@ -632,10 +678,14 @@ def _sharded_phases(cfg, spec: ShardSpec):
         halo_n = px["all_valid"] - px["n_valid"]  # every remote needed
         if D > 1:
             vcnt = jax.lax.all_gather(px["n_valid"], "lp")  # (D,)
-            wire = wire + (vcnt[:, None] * HALO_ROW_BYTES
+            wire = wire + (vcnt[:, None] * _halo_row_bytes(cfg)
                            * (1 - jnp.eye(D, dtype=jnp.int32)))
-        return dict(px, wire=wire, pos_g=pos_g, lp_g=lp_g,
-                    halo_overflow=halo_overflow, halo_n=halo_n)
+        out = dict(px, wire=wire, pos_g=pos_g, lp_g=lp_g,
+                   halo_overflow=halo_overflow, halo_n=halo_n)
+        if epidemic:
+            out["eis_g"] = jax.lax.all_gather(own_labels, "lp", axis=0,
+                                              tiled=True)
+        return out
 
     def ph_proximity(px):
         # 3a. per-shard proximity counts over the assembled view
@@ -666,6 +716,49 @@ def _sharded_phases(cfg, spec: ShardSpec):
                 f["pos"], my_idx, sender)
             grid_overflow = jnp.bool_(False)
         return dict(px, counts=counts, grid_overflow=grid_overflow)
+
+    def ph_workload(px):
+        # 3c. epidemic diffusion: mirror of engine.ph_workload over the
+        # halo view — exposure is one more 2-class candidate walk (the
+        # shipped `view_eis` labels stand in for the oracle's id-order
+        # label array), and the SI/SIS transition rides full-size
+        # id-order draws gathered by SE id, so a row transitions on the
+        # same randomness wherever it is hosted (bit-identity)
+        f = dict(px["f"])
+        valid, safe_gid = px["valid"], px["safe_gid"]
+        epi = f["epi"]
+        qmask = valid & (epi == 0)
+        if spec.grid is not None:
+            gspec = spec.grid
+            ncells = gspec.ncell * gspec.ncell
+            grid = neighbors.build_grid(px["view_pos"], gspec,
+                                        valid=px["view_lp"] >= 0,
+                                        with_table=False)
+            row_order = jnp.argsort(jnp.where(valid, px["cellC"], ncells),
+                                    stable=True).astype(jnp.int32)
+            out = neighbors.rows_grid_counts(
+                px["view_pos"], px["view_eis"], 2, abm.area,
+                abm.interaction_range, gspec, grid, f["pos"][row_order],
+                row_order, qmask[row_order],
+                neighbors.chunk_entries(abm.mem_budget_mb))
+            exposure = jnp.zeros((C, 2), jnp.int32).at[row_order].set(
+                out)[:, 1]
+            ovf = grid["overflow"]
+        else:
+            me = jax.lax.axis_index("lp")
+            my_idx = me * C + jnp.arange(C, dtype=jnp.int32)
+            exposure = neighbors.rows_dense_counts(
+                px["pos_g"], px["eis_g"], 2, abm.area,
+                abm.interaction_range, f["pos"], my_idx, qmask)[:, 1]
+            ovf = jnp.bool_(False)
+        draws = epidemic_draws(jax.random.wrap_key_data(px["k_move"]),
+                               n, abm)
+        my_draws = {k: v[safe_gid] for k, v in draws.items()}
+        new_epi = epidemic_row_update(epi, exposure, my_draws, abm)
+        f["epi"] = jnp.where(valid, new_epi, f["epi"])
+        infected = jax.lax.psum(((f["epi"] > 0) & valid).sum(), "lp")
+        return dict(px, f=f, infected=infected,
+                    grid_overflow=px["grid_overflow"] | ovf)
 
     def ph_account(px):
         # 3b. communication accounting: the per-pair flow matrix is
@@ -859,10 +952,15 @@ def _sharded_phases(cfg, spec: ShardSpec):
         if cfg.open_world:
             # live population (post-arrival), mirroring engine.step
             metrics["pop"] = px["all_valid"].astype(jnp.float32)
+        if abm.workload == "epidemic":
+            metrics["infected"] = px["infected"].astype(jnp.float32)
         return dict(px, f=f, metrics=metrics)
 
     halo_adds = (("cellC", "view_pos", "view_lp") if spec.grid is not None
                  else ("pos_g", "lp_g")) + ("halo_overflow", "halo_n")
+    if abm.workload == "epidemic":
+        halo_adds += (("view_eis",) if spec.grid is not None
+                      else ("eis_g",))
     phases = [
         ("migrate", ph_migrate,
          ("wire", "reshard_overflow", "valid", "safe_gid", "n_valid",
@@ -875,6 +973,8 @@ def _sharded_phases(cfg, spec: ShardSpec):
          ("safe_lp", "flows", "local", "total", "remote", "migs",
           "n_evals", "mig_flows", "reparts")),
     ]
+    if abm.workload == "epidemic":
+        phases.insert(4, ("workload", ph_workload, ("infected",)))
     if cfg.repartition_every > 0:
         phases.append(("repartition", ph_repartition, ()))
     if cfg.gaia_on:
@@ -898,7 +998,7 @@ def _shard_step(f, k_move, k_send, t, mf, cfg, spec: ShardSpec):
 _FIELD_SPECS = {
     "pos": P("lp"), "waypoint": P("lp"), "mob": P("lp"),
     "mob_g": P(),  # global mobility rows: replicated on every device
-    "lp": P("lp"), "gid": P("lp"),
+    "lp": P("lp"), "gid": P("lp"), "epi": P("lp"),
     "pending_dst": P("lp"), "pending_eta": P("lp"), "ring": P(None, "lp"),
     "ptr": P("lp"), "since_eval": P("lp"), "last_mig": P("lp"),
 }
@@ -920,10 +1020,13 @@ def _field_specs(spec: ShardSpec):
 
 
 def _metric_specs(cfg):
-    """Metric output specs: open-world runs add the `pop` series."""
+    """Metric output specs: open-world runs add the `pop` series,
+    epidemic runs the `infected` series."""
     specs = dict(_METRIC_SPECS)
     if cfg.open_world:
         specs["pop"] = P()
+    if cfg.abm.workload == "epidemic":
+        specs["infected"] = P()
     return specs
 
 
@@ -947,7 +1050,8 @@ _PER_DEV = frozenset({"reshard_overflow", "halo_overflow", "grid_overflow",
 #: phase-context keys whose leading axis is the per-device slot (or
 #: view/cell) dimension — sharded P("lp") at the jit boundary
 _SHARDED_PX = frozenset({"valid", "safe_gid", "sender", "counts",
-                         "safe_lp", "cellC", "view_pos", "view_lp"})
+                         "safe_lp", "cellC", "view_pos", "view_lp",
+                         "view_eis"})
 
 
 def _px_spec(key, cfg, spec: ShardSpec):
@@ -1064,6 +1168,7 @@ def _vacate_slots(f, hit):
     f["last_mig"] = jnp.where(hit, -10**6, f["last_mig"])
     f["ptr"] = jnp.where(hit, 0, f["ptr"])
     f["since_eval"] = jnp.where(hit, 0, f["since_eval"])
+    f["epi"] = jnp.where(hit, 0, f["epi"])
     f["ring"] = jnp.where(hit[None, :, None], 0, f["ring"])
     return f
 
@@ -1079,7 +1184,7 @@ def _shard_depart(f, ids, spec: ShardSpec):
     return _vacate_slots(f, hit), found
 
 
-def _shard_arrive(f, ids, pos, wp, mob, lps, cfg, spec: ShardSpec):
+def _shard_arrive(f, ids, pos, wp, mob, epi, lps, cfg, spec: ShardSpec):
     """Per-device body: insert B SEs (all args replicated; ids = -1 is
     padding). Each device claims the arrivals whose destination LP it
     owns and packs them into its free slots in ascending-slot order.
@@ -1104,6 +1209,7 @@ def _shard_arrive(f, ids, pos, wp, mob, lps, cfg, spec: ShardSpec):
     f["pos"] = f["pos"].at[target].set(pos, mode="drop")
     f["waypoint"] = f["waypoint"].at[target].set(wp, mode="drop")
     f["mob"] = f["mob"].at[target].set(mob, mode="drop")
+    f["epi"] = f["epi"].at[target].set(epi, mode="drop")
     f["gid"] = f["gid"].at[target].set(ids, mode="drop")
     f["lp"] = f["lp"].at[target].set(lps, mode="drop")
     f["pending_dst"] = f["pending_dst"].at[target].set(-1, mode="drop")
@@ -1151,7 +1257,7 @@ def _compiled_arrive_sharded(key_cfg):
     fspecs = _field_specs(spec)
     fn = shard_map(partial(_shard_arrive, cfg=key_cfg, spec=spec),
                    mesh=mesh,
-                   in_specs=(fspecs, P(), P(), P(), P(), P()),
+                   in_specs=(fspecs, P(), P(), P(), P(), P(), P()),
                    out_specs=(fspecs, P()), check_rep=False)
     return jax.jit(fn), spec
 
@@ -1179,6 +1285,8 @@ def arrive_sharded(state, cfg, ids, rows):
         fields, jnp.asarray(ids, jnp.int32), pos,
         jnp.asarray(rows.get("waypoint", pos), jnp.float32),
         jnp.asarray(rows.get("mob", jnp.zeros_like(pos)), jnp.float32),
+        jnp.asarray(rows.get("epi", jnp.zeros(pos.shape[:1], jnp.int32)),
+                    jnp.int32),
         jnp.asarray(rows["lp"], jnp.int32))
     return dict(new_fields, key=state["key"], t=state["t"]), adm
 

@@ -23,14 +23,25 @@ from repro.core.abm import (ABMConfig, MOBILITY_MODELS, init_abm,
                             mobility_step)
 from repro.core.engine import EngineConfig, run
 from repro.core.heuristics import HeuristicConfig
+from repro.data import pipeline as dpipe
 
 NEW_MODELS = [m for m in MOBILITY_MODELS if m != "rwp"]
+
+# the trace model replays data, so the generic per-model contracts need
+# a registered trace: same universe as _abm, speed-matched, long enough
+# that a 40-step run never crosses the loop seam
+TRACE_NAME = "test-scenarios"
+dpipe.register_trace(TRACE_NAME, dpipe.synthetic_trace(
+    dpipe.TraceSpec(n_se=120, area=1000.0, timesteps=48, speed=5.0,
+                    n_hubs=4, seed=5)))
 
 
 def _abm(mobility, **kw):
     base = dict(n_se=120, n_lp=4, area=1000.0, speed=5.0,
                 interaction_range=80.0, p_interact=0.3,
                 mobility=mobility, n_groups=4, group_radius=120.0)
+    if mobility == "trace":
+        base["trace_name"] = TRACE_NAME
     return ABMConfig(**{**base, **kw})
 
 

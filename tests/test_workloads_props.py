@@ -1,0 +1,112 @@
+"""Property-based tests for the epidemic workload kernel.
+
+Hypothesis-drawn layouts and flag vectors pin the row-update algebra
+the fixed-seed tests (tests/test_workloads.py) spot-check:
+
+  * flags are closed over {0, 1} for any exposure/draw combination;
+  * the SI update is monotone in *both* arguments — exposure and the
+    susceptible set: infecting more rows or raising exposure never
+    un-infects anyone (with gamma = 0);
+  * recovery acts only on infectious rows, infection only on
+    susceptible ones, so the per-row transition matrix is exactly the
+    SIS chain's;
+  * the 2-class exposure sweep is bit-identical between the grid and
+    dense proximity backends on arbitrary layouts with dead rows.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional dev dependency "
+    "`hypothesis` (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.abm import (ABMConfig, epidemic_draws,  # noqa: E402
+                            epidemic_exposure_overflow,
+                            epidemic_row_update)
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+CFG = ABMConfig(n_se=96, n_lp=4, area=1000.0, speed=5.0,
+                interaction_range=80.0, p_interact=0.3,
+                workload="epidemic", epi_beta=0.4, epi_boost=4.0,
+                epi_seed_frac=0.05)
+
+
+def _layout(draw, n_max=24):
+    n = draw(st.integers(1, n_max))
+    epi = draw(st.lists(st.integers(0, 1), min_size=n, max_size=n))
+    exposure = draw(st.lists(st.integers(0, 6), min_size=n, max_size=n))
+    seed = draw(st.integers(0, 2 ** 16))
+    return (jnp.asarray(epi, jnp.int32), jnp.asarray(exposure, jnp.int32),
+            epidemic_draws(jax.random.key(seed), n, CFG), seed)
+
+
+@given(st.data(), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_flags_stay_binary(data, beta, gamma):
+    epi, exposure, _, seed = _layout(data.draw)
+    cfg = dataclasses.replace(CFG, epi_beta=beta, epi_gamma=gamma)
+    draws = epidemic_draws(jax.random.key(seed), epi.shape[0], cfg)
+    out = np.asarray(epidemic_row_update(epi, exposure, draws, cfg))
+    assert set(np.unique(out)) <= {0, 1}
+
+
+@given(st.data())
+def test_si_never_uninfects_and_is_monotone(data):
+    """gamma = 0: out >= epi pointwise, and raising any row's exposure
+    can only add infections under the same draws."""
+    epi, exposure, draws, _ = _layout(data.draw)
+    out1 = np.asarray(epidemic_row_update(epi, exposure, draws, CFG))
+    assert (out1 >= np.asarray(epi)).all()
+    bumped = exposure + data.draw(st.integers(0, 5))
+    out2 = np.asarray(epidemic_row_update(epi, bumped, draws, CFG))
+    assert ((out1 == 1) <= (out2 == 1)).all()
+
+
+@given(st.data())
+def test_monotone_in_the_infected_set(data):
+    """Seeding extra infectious rows (same exposure, same draws) never
+    removes anyone from the final infected set with gamma = 0."""
+    epi, exposure, draws, _ = _layout(data.draw)
+    extra = data.draw(st.lists(st.integers(0, 1),
+                               min_size=epi.shape[0],
+                               max_size=epi.shape[0]))
+    epi_more = jnp.maximum(epi, jnp.asarray(extra, jnp.int32))
+    o1 = np.asarray(epidemic_row_update(epi, exposure, draws, CFG))
+    o2 = np.asarray(epidemic_row_update(epi_more, exposure, draws, CFG))
+    assert ((o1 == 1) <= (o2 == 1)).all()
+
+
+@given(st.data(), st.floats(0.01, 1.0))
+def test_sis_transitions_respect_compartments(data, gamma):
+    """Only S -> I (needs exposure) and I -> S (needs gamma draw) edges
+    exist: a row that changed state moved along exactly one of them."""
+    epi, exposure, _, seed = _layout(data.draw)
+    cfg = dataclasses.replace(CFG, epi_gamma=gamma)
+    draws = epidemic_draws(jax.random.key(seed), epi.shape[0], cfg)
+    out = np.asarray(epidemic_row_update(epi, exposure, draws, cfg))
+    e, x = np.asarray(epi), np.asarray(exposure)
+    newly_inf = (e == 0) & (out == 1)
+    assert (x[newly_inf] > 0).all()  # infection needs contact
+    recovered = (e == 1) & (out == 0)
+    assert (np.asarray(draws["u_rec"])[recovered] < gamma).all()
+
+
+@given(st.integers(0, 2 ** 16), st.integers(8, 64))
+def test_exposure_backends_agree_on_random_layouts(seed, n):
+    k = jax.random.key(seed)
+    pos = jax.random.uniform(k, (n, 2), maxval=CFG.area)
+    valid = jax.random.uniform(jax.random.fold_in(k, 1), (n,)) < 0.85
+    inf = jax.random.uniform(jax.random.fold_in(k, 2), (n,)) < 0.3
+    labels = jnp.where(valid, inf.astype(jnp.int32), -1)
+    qmask = valid & (labels == 0)
+    dense = dataclasses.replace(CFG, proximity_backend="dense")
+    eg, _ = epidemic_exposure_overflow(pos, labels, qmask, CFG, valid=valid)
+    ed, _ = epidemic_exposure_overflow(pos, labels, qmask, dense,
+                                       valid=valid)
+    np.testing.assert_array_equal(np.asarray(eg), np.asarray(ed))
